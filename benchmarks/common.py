@@ -1,0 +1,118 @@
+"""Shared helpers for the paper-figure benchmarks (CSV output contract:
+``name,us_per_call,derived``)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.simulated import init_network, make_round_fn, run_rounds
+from repro.data.pipeline import AgentDataset, make_round_batches
+from repro.optim import adam
+from repro.optim.schedules import exponential_decay
+from repro.vi.bayes_by_backprop import mc_predict
+
+
+def mlp_init(dim, hidden, n_classes):
+    """The paper's 2-hidden-layer ReLU MLP (200 units on MNIST; scaled via
+    ``hidden`` for the synthetic stand-in)."""
+
+    def init(key):
+        ks = jax.random.split(key, 3)
+        return {
+            "w1": jax.random.normal(ks[0], (dim, hidden)) / np.sqrt(dim),
+            "b1": jnp.zeros((hidden,)),
+            "w2": jax.random.normal(ks[1], (hidden, hidden)) / np.sqrt(hidden),
+            "b2": jnp.zeros((hidden,)),
+            "w3": jax.random.normal(ks[2], (hidden, n_classes)) / np.sqrt(hidden),
+            "b3": jnp.zeros((n_classes,)),
+        }
+
+    return init
+
+
+def mlp_logits(theta, x):
+    h = jax.nn.relu(x @ theta["w1"] + theta["b1"])
+    h = jax.nn.relu(h @ theta["w2"] + theta["b2"])
+    return h @ theta["w3"] + theta["b3"]
+
+
+def mlp_nll(theta, batch):
+    logits = mlp_logits(theta, batch["x"])
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["y"][..., None], axis=-1)[..., 0]
+    return jnp.sum(logz - gold)
+
+
+def train_network(
+    shards,
+    W_schedule,
+    rounds,
+    *,
+    hidden=48,
+    n_classes=10,
+    dim=64,
+    batch_size=16,
+    local_updates=4,
+    lr=5e-3,
+    kl_scale=1e-3,
+    consensus="gaussian",
+    seed=0,
+    eval_fn=None,
+    eval_every=0,
+):
+    data = AgentDataset.from_shards(
+        [(x.astype(np.float32), y.astype(np.int32)) for x, y in shards]
+    )
+    n_agents = data.n_agents
+    sampler = make_round_batches(data, batch_size, local_updates)
+    opt = adam()
+    round_fn = make_round_fn(
+        mlp_nll, opt, exponential_decay(lr, 0.99), kl_scale=kl_scale,
+        consensus=consensus,
+    )
+    state = init_network(
+        jax.random.key(seed), n_agents, mlp_init(dim, hidden, n_classes), opt,
+        init_sigma=0.05,
+    )
+    return run_rounds(
+        round_fn, state, sampler, W_schedule, rounds, jax.random.key(seed + 1),
+        eval_fn=eval_fn, eval_every=eval_every,
+    )
+
+
+def network_accuracy(state, x_test, y_test, n_mc=4, per_agent=False, key=None):
+    xt = jnp.asarray(x_test)
+    yt = np.asarray(y_test)
+    n_agents = jax.tree.leaves(state.posterior.mean)[0].shape[0]
+    key = key if key is not None else jax.random.key(99)
+    accs = []
+    for i in range(n_agents):
+        post_i = jax.tree.map(lambda l: l[i], state.posterior)
+        probs = mc_predict(post_i, mlp_logits, xt, key, n_mc=n_mc)
+        pred = np.asarray(jnp.argmax(probs, -1))
+        accs.append(float((pred == yt).mean()))
+    return accs if per_agent else float(np.mean(accs))
+
+
+def agent_confidence(state, agent, x, label, n_mc=8, key=None):
+    """Paper's confidence metric: mean posterior-predictive probability of
+    ``label`` on inputs x (Figs 3/5)."""
+    post = jax.tree.map(lambda l: l[agent], state.posterior)
+    key = key if key is not None else jax.random.key(7)
+    probs = mc_predict(post, mlp_logits, jnp.asarray(x), key, n_mc=n_mc)
+    return float(np.mean(np.asarray(probs[:, label])))
+
+
+class Timer:
+    def __init__(self):
+        self.t0 = time.perf_counter()
+
+    def us(self, n_calls=1):
+        return (time.perf_counter() - self.t0) * 1e6 / n_calls
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

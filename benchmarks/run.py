@@ -1,0 +1,65 @@
+"""Benchmark harness: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  fig1   decentralized Bayesian linear regression (central/isolated/coop)
+  fig2   star topology: accuracy vs center centrality a
+  fig3   ID/OOD confidence vs a
+  fig4   grid: informative-agent placement (center vs corner)
+  fig5   data-partition ambiguity (Assumption 2 violation)
+  table3 asynchronous time-varying star networks
+  thm1   predicted rate K(Theta) vs empirical decay slope
+  calib  (beyond-paper) ECE calibration of the Bayesian MC predictive
+  roofline  dry-run roofline terms per (arch x shape x mesh) + kernel bench
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (
+    calibration,
+    fig1_linreg,
+    fig2_star_centrality,
+    fig3_confidence,
+    fig4_grid_placement,
+    fig5_partition,
+    roofline,
+    table3_timevarying,
+    thm1_rate,
+)
+
+ALL = {
+    "fig1": fig1_linreg.run,
+    "fig2": fig2_star_centrality.run,
+    "fig3": fig3_confidence.run,
+    "fig4": fig4_grid_placement.run,
+    "fig5": fig5_partition.run,
+    "table3": table3_timevarying.run,
+    "thm1": thm1_rate.run,
+    "calib": calibration.run,
+    "roofline": roofline.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", choices=list(ALL), default=None)
+    args = ap.parse_args()
+    names = args.only or list(ALL)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in names:
+        try:
+            ALL[name]()
+        except Exception:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc(file=sys.stderr)
+            print(f"{name},0.0,FAILED")
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""End-to-end driver: decentralized Bayesian training of a ~100M-parameter
+decoder-only LM (repro-100m: 12L x 768d) for a few hundred rounds across 2
+agents, using the SAME production step functions that the multi-pod dry-run
+lowers for TPU.
+
+On this CPU container the default invocation trains a width/depth-reduced
+variant for speed; pass --full --rounds 300 on real hardware for the full
+100M run (the step function is identical — only the config changes).
+
+    PYTHONPATH=src python examples/train_decentralized_lm.py --rounds 30
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_models import REPRO_100M
+from repro.core.graphs import bidirectional_ring_w, complete_w
+from repro.data.pipeline import make_lm_batch_sampler
+from repro.launch.steps import init_train_state, make_train_round_step
+from repro.optim import adam
+from repro.optim.schedules import warmup_cosine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--agents", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=4, help="per-agent")
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full", action="store_true",
+                    help="full 100M config (use on real hardware)")
+    ap.add_argument("--topology", choices=["complete", "ring"], default="complete")
+    args = ap.parse_args()
+
+    cfg = REPRO_100M if args.full else dataclasses.replace(
+        REPRO_100M, n_layers=4, d_model=256, n_heads=4, n_kv_heads=4,
+        d_ff=1024, vocab_size=4096, name="repro-100m-cpu",
+    )
+    a = args.agents
+    W = jnp.asarray(
+        complete_w(a) if args.topology == "complete" else bidirectional_ring_w(a)
+    )
+    opt = adam()
+    sched = warmup_cosine(3e-4, 20, args.rounds * 2)
+    step = jax.jit(make_train_round_step(cfg, W, opt=opt, lr_schedule=sched,
+                                         kl_scale=1e-5, remat=not args.full))
+    key = jax.random.key(0)
+    state = init_train_state(key, cfg, a, opt)
+    n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(state.posterior.mean)) // a
+    print(f"model {cfg.name}: {n:,} params/agent, {a} agents, W={args.topology}")
+
+    sampler = make_lm_batch_sampler(cfg.vocab_size, args.batch, args.seq, n_agents=a)
+    t0 = time.time()
+    for r in range(args.rounds):
+        key, k1, k2 = jax.random.split(key, 3)
+        state, m = step(state, sampler(k1, r), k2)
+        if (r + 1) % 5 == 0 or r == 0:
+            nll = float(jnp.mean(m["nll"]))
+            kl = float(jnp.mean(m["kl"]))
+            print(f"round {r + 1:4d}  nll/token {nll:7.4f}  KL {kl:10.1f}  "
+                  f"({time.time() - t0:5.1f}s)", flush=True)
+    nll_final = float(jnp.mean(m["nll"]))
+    print(f"\nuniform-prediction nll = {np.log(cfg.vocab_size):.3f}; the token "
+          f"stream is Zipfian (entropy below that); reached {nll_final:.3f} "
+          "with fully decentralized Bayesian training.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""repro: production-grade JAX framework implementing
+"Decentralized Bayesian Learning over Graphs" (Lalitha et al., 2019).
+
+Layers:
+  core/       the paper's contribution: posteriors, consensus, graphs, theory
+  vi/         Bayes-by-Backprop variational inference
+  models/     architecture zoo (dense / MoE / SSM / hybrid / enc-dec / VLM)
+  optim/      optimizers + schedules
+  data/       synthetic datasets + non-IID partitioners + pipeline
+  checkpoint/ msgpack pytree checkpointing
+  kernels/    Pallas TPU kernels (consensus, gauss_vi, flash_attention)
+  launch/     production mesh, multi-pod dry-run, train/serve drivers
+  configs/    assigned architecture configs
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,13 @@
+"""Assigned-architecture registry.  ``get_config(name)`` returns the full
+production config; ``get_config(name).reduced()`` the CPU smoke variant."""
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.configs.registry import ARCHS, get_config, list_archs
+
+__all__ = [
+    "INPUT_SHAPES",
+    "InputShape",
+    "ModelConfig",
+    "ARCHS",
+    "get_config",
+    "list_archs",
+]

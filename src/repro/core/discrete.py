@@ -1,0 +1,83 @@
+"""Finite-Theta decentralized learning rule (the exact setting of Theorem 1).
+
+With Theta finite and Q = P(Theta) the projection step (eq. 3) is the
+identity, so one round at agent i is exactly:
+
+  local Bayesian update (eq. 2):
+      log b_i(theta) = log q_i(theta) + sum_{m in batch} log l_i(y_m | theta, x_m)
+      (then normalize)
+  consensus (eq. 4):
+      log q_i(theta) = sum_j W_ij log b_j(theta)   (then normalize)
+
+Everything is carried in log-space; beliefs have shape [N, |Theta|].
+This module is the testbed that validates Theorem 1's exponential decay rate
+K(Theta) empirically (tests/test_theory.py, benchmarks/thm1_rate.py).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def normalize_log(logb: jax.Array) -> jax.Array:
+    """Normalize log-beliefs along the last (Theta) axis."""
+    return logb - jax.nn.logsumexp(logb, axis=-1, keepdims=True)
+
+
+def local_bayes_update(logq: jax.Array, loglik: jax.Array) -> jax.Array:
+    """Eq. (2) in log space.
+
+    logq:   [N, T] current private posteriors
+    loglik: [N, T] sum over the agent's batch of log l_i(y|theta, x)
+    returns [N, T] public posteriors b_i^{(n)}
+    """
+    return normalize_log(logq + loglik)
+
+
+def consensus_update(logb: jax.Array, W: jax.Array) -> jax.Array:
+    """Eq. (4) in log space: log q_i = sum_j W_ij log b_j (then normalize)."""
+    return normalize_log(W @ logb)
+
+
+def social_learning_round(
+    logq: jax.Array, loglik: jax.Array, W: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """One full round; returns (new_logq, logb)."""
+    logb = local_bayes_update(logq, loglik)
+    logq_new = consensus_update(logb, W)
+    return logq_new, logb
+
+
+def run_social_learning(
+    key: jax.Array,
+    W: jax.Array,
+    loglik_sampler: Callable[[jax.Array], jax.Array],
+    n_rounds: int,
+    n_theta: int,
+) -> jax.Array:
+    """Run ``n_rounds`` rounds from the uniform prior.
+
+    loglik_sampler(key) -> [N, T] batch log-likelihoods for one round.
+    Returns the trajectory of public posteriors logb: [n_rounds, N, T].
+    """
+    n_agents = W.shape[0]
+    logq0 = jnp.full((n_agents, n_theta), -jnp.log(n_theta))
+
+    def step(carry, k):
+        logq = carry
+        loglik = loglik_sampler(k)
+        logq_new, logb = social_learning_round(logq, loglik, W)
+        return logq_new, logb
+
+    keys = jax.random.split(key, n_rounds)
+    _, traj = jax.lax.scan(step, logq0, keys)
+    return traj
+
+
+def wrong_belief_trajectory(traj_logb: jax.Array, wrong_idx: jax.Array) -> jax.Array:
+    """max_i max_{theta in wrong set} b_i^{(n)}(theta) per round — the LHS of
+    Theorem 1's bound.  traj_logb: [R, N, T]; wrong_idx: [k] indices."""
+    wrong = traj_logb[..., wrong_idx]  # [R, N, k]
+    return jnp.exp(jnp.max(wrong, axis=(1, 2)))

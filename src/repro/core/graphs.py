@@ -1,0 +1,177 @@
+"""Communication-network topologies and social-interaction matrices W.
+
+The paper (Sec 2) models the network as a directed graph with a
+row-stochastic weight matrix W: W_ij > 0 iff j in N(i) (i receives from j),
+sum_j W_ij = 1, and i in N(i).  Assumption 1 requires W irreducible and
+aperiodic.  Every builder here returns a row-stochastic numpy/jnp array and
+is validated by ``check_w``.
+
+Topologies used in the paper's experiments:
+  * star (Sec 4.2.1): central agent 0 uniform over all; edge agent i puts
+    confidence ``a`` on the center and 1-a on itself.
+  * grid 3x3 (Sec 4.2.2): W_ij = 1/|N(i)| (degree-uniform).
+  * time-varying star (Sec 1.4.3): at round t only N0 edge agents are
+    connected to agent 0; union over the schedule is strongly connected.
+Plus general builders (ring, torus, complete, erdos) for the framework.
+"""
+from __future__ import annotations
+
+import numpy as np
+import networkx as nx
+
+
+def check_w(W: np.ndarray, *, require_connected: bool = True) -> None:
+    """Validate the paper's Assumption 1 prerequisites."""
+    W = np.asarray(W)
+    n = W.shape[0]
+    if W.shape != (n, n):
+        raise ValueError(f"W must be square, got {W.shape}")
+    if np.any(W < 0):
+        raise ValueError("W must be nonnegative")
+    if not np.allclose(W.sum(axis=1), 1.0, atol=1e-6):
+        raise ValueError("W must be row-stochastic")
+    if np.any(np.diag(W) <= 0):
+        raise ValueError("self-loops required: i in N(i) (W_ii > 0)")
+    if require_connected:
+        g = nx.from_numpy_array((W > 0).astype(float), create_using=nx.DiGraph)
+        if not nx.is_strongly_connected(g):
+            raise ValueError("W's support graph must be strongly connected")
+
+
+def star_w(n_edge: int, a: float) -> np.ndarray:
+    """Paper Sec 4.2.1: star with agent 0 at the center and ``n_edge`` edge
+    agents.  Center row uniform 1/(n_edge+1); edge agent i puts ``a`` on the
+    center and 1-a on itself."""
+    n = n_edge + 1
+    W = np.zeros((n, n))
+    W[0, :] = 1.0 / n
+    for i in range(1, n):
+        W[i, 0] = a
+        W[i, i] = 1.0 - a
+    check_w(W)
+    return W
+
+
+def grid_w(rows: int, cols: int) -> np.ndarray:
+    """Paper Sec 4.2.2: grid with degree-uniform weights W_ij = 1/|N(i)|
+    (self-loop included in N(i))."""
+    n = rows * cols
+    W = np.zeros((n, n))
+    for r in range(rows):
+        for c in range(cols):
+            i = r * cols + c
+            nbrs = [i]
+            if r > 0:
+                nbrs.append((r - 1) * cols + c)
+            if r < rows - 1:
+                nbrs.append((r + 1) * cols + c)
+            if c > 0:
+                nbrs.append(r * cols + c - 1)
+            if c < cols - 1:
+                nbrs.append(r * cols + c + 1)
+            for j in nbrs:
+                W[i, j] = 1.0 / len(nbrs)
+    check_w(W)
+    return W
+
+
+def ring_w(n: int, self_weight: float = 0.5) -> np.ndarray:
+    """Directed ring with self-loops: i listens to i-1 and itself."""
+    W = np.zeros((n, n))
+    for i in range(n):
+        W[i, i] = self_weight
+        W[i, (i - 1) % n] = 1.0 - self_weight
+    check_w(W)
+    return W
+
+
+def bidirectional_ring_w(n: int, self_weight: float = 1.0 / 3.0) -> np.ndarray:
+    W = np.zeros((n, n))
+    side = (1.0 - self_weight) / 2.0
+    for i in range(n):
+        W[i, i] = self_weight
+        W[i, (i - 1) % n] = side
+        W[i, (i + 1) % n] = side
+    check_w(W)
+    return W
+
+
+def torus_w(rows: int, cols: int) -> np.ndarray:
+    """2-D torus, degree-uniform (the natural TPU-ICI-shaped topology)."""
+    n = rows * cols
+    W = np.zeros((n, n))
+    for r in range(rows):
+        for c in range(cols):
+            i = r * cols + c
+            nbrs = [
+                i,
+                ((r - 1) % rows) * cols + c,
+                ((r + 1) % rows) * cols + c,
+                r * cols + (c - 1) % cols,
+                r * cols + (c + 1) % cols,
+            ]
+            nbrs = list(dict.fromkeys(nbrs))
+            for j in nbrs:
+                W[i, j] = 1.0 / len(nbrs)
+    check_w(W)
+    return W
+
+
+def complete_w(n: int) -> np.ndarray:
+    """Fully connected, uniform weights (centralized-equivalent baseline)."""
+    W = np.full((n, n), 1.0 / n)
+    check_w(W)
+    return W
+
+
+def erdos_w(n: int, p: float, seed: int = 0) -> np.ndarray:
+    """Erdos-Renyi digraph (resampled until strongly connected), degree-uniform
+    weights with self-loops."""
+    rng = np.random.default_rng(seed)
+    for _ in range(1000):
+        adj = (rng.random((n, n)) < p).astype(float)
+        np.fill_diagonal(adj, 1.0)
+        g = nx.from_numpy_array(adj, create_using=nx.DiGraph)
+        if nx.is_strongly_connected(g):
+            W = adj / adj.sum(axis=1, keepdims=True)
+            check_w(W)
+            return W
+    raise RuntimeError("could not sample a strongly connected graph")
+
+
+def time_varying_star_schedule(
+    n_agents: int, n_active: int, a: float = 0.5
+) -> list[np.ndarray]:
+    """Paper Sec 1.4.3: N+1 agents {0..N}; at slot k only agents
+    {N0(k-1)+1, ..., N0 k} are connected to the center 0 in a star.
+    Inactive agents keep W_ii = 1 (train locally / idle).  The union over the
+    schedule is strongly connected.  Returns the list of per-slot W's."""
+    if n_agents % n_active != 0:
+        raise ValueError("n_agents must be divisible by n_active")
+    n = n_agents + 1
+    mats = []
+    for k in range(n_agents // n_active):
+        W = np.eye(n)
+        active = list(range(n_active * k + 1, n_active * (k + 1) + 1))
+        W[0, 0] = 1.0 / (n_active + 1)
+        for j in active:
+            W[0, j] = 1.0 / (n_active + 1)
+            W[j, 0] = a
+            W[j, j] = 1.0 - a
+        check_w(W, require_connected=False)
+        mats.append(W)
+    # union must be strongly connected
+    union = (sum((m > 0).astype(float) for m in mats) > 0).astype(float)
+    g = nx.from_numpy_array(union, create_using=nx.DiGraph)
+    if not nx.is_strongly_connected(g):
+        raise RuntimeError("union of time-varying graphs not strongly connected")
+    return mats
+
+
+def neighbor_lists(W: np.ndarray) -> list[list[int]]:
+    """In-neighbors per agent (j such that W_ij > 0), including self."""
+    return [list(np.nonzero(W[i] > 0)[0]) for i in range(W.shape[0])]
+
+
+def max_in_degree(W: np.ndarray) -> int:
+    return max(len(nb) for nb in neighbor_lists(W))

@@ -1,0 +1,209 @@
+"""Gaussian posteriors over model-parameter pytrees.
+
+The paper restricts the per-agent posterior q_i to a tractable family Q
+(Sec 2.1, step 3).  Two families are implemented:
+
+* ``GaussianPosterior`` — mean-field (diagonal) Gaussian over an arbitrary
+  parameter pytree.  This is the family used for all neural-network
+  experiments in the paper (Bayes-by-Backprop, [10]).  sigma is
+  parameterized as ``softplus(rho)`` for unconstrained optimization.
+
+* ``FullCovGaussian`` — full-covariance Gaussian over a flat R^d parameter
+  vector.  Used for the paper's Example 1 / Fig 1 (Bayesian linear
+  regression, d=5), where the exact conjugate posterior is full-covariance.
+
+Both support the closed-form consensus of eq. (6):
+    prec_tilde_i = sum_j W_ij prec_j
+    mu_tilde_i   = prec_tilde_i^{-1} sum_j W_ij prec_j mu_j
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+# numerically-stable softplus inverse: rho = sigma + log1p(-exp(-sigma))
+def softplus(x: jax.Array) -> jax.Array:
+    return jax.nn.softplus(x)
+
+
+def softplus_inv(y: jax.Array) -> jax.Array:
+    # inverse of softplus for y > 0
+    return y + jnp.log1p(-jnp.exp(-y))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class GaussianPosterior:
+    """Mean-field Gaussian over a parameter pytree.
+
+    ``mean`` and ``rho`` are pytrees with identical structure; the stddev of
+    each scalar parameter is ``softplus(rho)``.
+    """
+
+    mean: PyTree
+    rho: PyTree
+
+    def sigma(self) -> PyTree:
+        return jax.tree.map(softplus, self.rho)
+
+    def precision(self) -> PyTree:
+        return jax.tree.map(lambda r: 1.0 / jnp.square(softplus(r)), self.rho)
+
+    def sample(self, key: jax.Array) -> PyTree:
+        """Reparameterized sample theta = mu + sigma * eps."""
+        leaves, treedef = jax.tree.flatten(self.mean)
+        keys = jax.random.split(key, len(leaves))
+        rho_leaves = treedef.flatten_up_to(self.rho)
+        out = [
+            m + softplus(r) * jax.random.normal(k, m.shape, m.dtype)
+            for m, r, k in zip(leaves, rho_leaves, keys)
+        ]
+        return jax.tree.unflatten(treedef, out)
+
+    def n_params(self) -> int:
+        return sum(int(l.size) for l in jax.tree.leaves(self.mean))
+
+
+def init_posterior(
+    params: PyTree, init_sigma: float = 0.05, mean_init: PyTree | None = None
+) -> GaussianPosterior:
+    """Build a mean-field posterior matching the structure of ``params``."""
+    mean = params if mean_init is None else mean_init
+    # pure-Python softplus^-1 so this works under jax.eval_shape (dry-run)
+    import math
+
+    rho0 = init_sigma + math.log1p(-math.exp(-init_sigma))
+    rho = jax.tree.map(lambda p: jnp.full_like(p, rho0), params)
+    return GaussianPosterior(mean=mean, rho=rho)
+
+
+def kl_gaussian(q: GaussianPosterior, p: GaussianPosterior) -> jax.Array:
+    """KL(q || p) between two mean-field Gaussians over the same pytree.
+
+    Closed form, summed over every scalar parameter:
+      KL = sum [ log(sp/sq) + (sq^2 + (mq-mp)^2) / (2 sp^2) - 1/2 ]
+    """
+
+    def leaf_kl(mq, rq, mp, rp):
+        sq = softplus(rq)
+        sp = softplus(rp)
+        return jnp.sum(
+            jnp.log(sp / sq) + (jnp.square(sq) + jnp.square(mq - mp)) / (2.0 * jnp.square(sp)) - 0.5
+        )
+
+    terms = jax.tree.map(leaf_kl, q.mean, q.rho, p.mean, p.rho)
+    return jax.tree.reduce(jnp.add, terms, jnp.asarray(0.0))
+
+
+def consensus_mean_field(
+    posts: GaussianPosterior, w_row: jax.Array
+) -> GaussianPosterior:
+    """Consensus step (eq. 6) for ONE agent from stacked neighbor posteriors.
+
+    ``posts`` has a leading axis of size N on every leaf (the neighbors,
+    including self); ``w_row`` is the agent's row of W (shape [N], sums to 1).
+    Zero-weight entries contribute nothing (sparse topologies).
+    """
+
+    def combine(mean_stack, rho_stack):
+        prec = 1.0 / jnp.square(softplus(rho_stack))
+        w = w_row.reshape((-1,) + (1,) * (mean_stack.ndim - 1))
+        new_prec = jnp.sum(w * prec, axis=0)
+        new_mean = jnp.sum(w * prec * mean_stack, axis=0) / new_prec
+        new_rho = softplus_inv(jnp.sqrt(1.0 / new_prec))
+        return new_mean, new_rho
+
+    flat_mean, treedef = jax.tree.flatten(posts.mean)
+    flat_rho = treedef.flatten_up_to(posts.rho)
+    out = [combine(m, r) for m, r in zip(flat_mean, flat_rho)]
+    mean = jax.tree.unflatten(treedef, [m for m, _ in out])
+    rho = jax.tree.unflatten(treedef, [r for _, r in out])
+    return GaussianPosterior(mean=mean, rho=rho)
+
+
+def consensus_all_agents(
+    posts: GaussianPosterior, W: jax.Array
+) -> GaussianPosterior:
+    """Consensus step (eq. 6) for ALL agents simultaneously.
+
+    Every leaf of ``posts`` carries a leading agent axis of size N.  W is the
+    [N, N] row-stochastic social-interaction matrix.  Returns posteriors with
+    the same leading axis.  This is the simulated-runtime (vmap) path; the
+    production path uses collectives (core.collectives).
+    """
+
+    def combine(mean_stack, rho_stack):
+        prec = 1.0 / jnp.square(softplus(rho_stack))
+        # new_prec[i] = sum_j W[i,j] prec[j]
+        new_prec = jnp.einsum("ij,j...->i...", W, prec)
+        new_mean = jnp.einsum("ij,j...->i...", W, prec * mean_stack) / new_prec
+        new_rho = softplus_inv(jnp.sqrt(1.0 / new_prec))
+        return new_mean, new_rho
+
+    flat_mean, treedef = jax.tree.flatten(posts.mean)
+    flat_rho = treedef.flatten_up_to(posts.rho)
+    out = [combine(m, r) for m, r in zip(flat_mean, flat_rho)]
+    mean = jax.tree.unflatten(treedef, [m for m, _ in out])
+    rho = jax.tree.unflatten(treedef, [r for _, r in out])
+    return GaussianPosterior(mean=mean, rho=rho)
+
+
+def consensus_mean_only(params: PyTree, W: jax.Array) -> PyTree:
+    """Degenerate (delta-posterior) consensus: plain W-weighted parameter
+    averaging.  This is the non-Bayesian baseline (decentralized FedAvg /
+    local-SGD aggregation) the framework exposes for comparison."""
+    return jax.tree.map(lambda p: jnp.einsum("ij,j...->i...", W, p), params)
+
+
+# ---------------------------------------------------------------------------
+# Full-covariance Gaussian over a flat parameter vector (paper Example 1)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class FullCovGaussian:
+    """Full-covariance Gaussian over theta in R^d, stored as (mean, precision).
+
+    Storing the precision (Lambda = Sigma^{-1}) makes both the conjugate
+    Bayesian linear-regression update and the consensus step (eq. 6) linear.
+    """
+
+    mean: jax.Array  # [d] (or [N, d] with leading agent axis)
+    prec: jax.Array  # [d, d] (or [N, d, d])
+
+    def cov(self) -> jax.Array:
+        return jnp.linalg.inv(self.prec)
+
+    def sample(self, key: jax.Array) -> jax.Array:
+        cov = self.cov()
+        chol = jnp.linalg.cholesky(cov)
+        eps = jax.random.normal(key, self.mean.shape, self.mean.dtype)
+        return self.mean + jnp.einsum("...ij,...j->...i", chol, eps)
+
+
+def linreg_bayes_update(
+    post: FullCovGaussian, phi: jax.Array, y: jax.Array, noise_var: float
+) -> FullCovGaussian:
+    """Exact conjugate local Bayesian update (paper eq. 2) for the linear
+    model y = theta^T phi(x) + eta, eta ~ N(0, noise_var).
+
+    phi: [B, d] feature matrix, y: [B] labels.
+    """
+    prec_new = post.prec + jnp.einsum("bi,bj->ij", phi, phi) / noise_var
+    rhs = post.prec @ post.mean + phi.T @ y / noise_var
+    mean_new = jnp.linalg.solve(prec_new, rhs)
+    return FullCovGaussian(mean=mean_new, prec=prec_new)
+
+
+def consensus_full_cov(posts: FullCovGaussian, W: jax.Array) -> FullCovGaussian:
+    """Eq. (6) over stacked full-covariance posteriors (leading agent axis)."""
+    prec_new = jnp.einsum("ij,jkl->ikl", W, posts.prec)
+    rhs = jnp.einsum("ij,jkl,jl->ik", W, posts.prec, posts.mean)
+    mean_new = jnp.linalg.solve(prec_new, rhs[..., None])[..., 0]
+    return FullCovGaussian(mean=mean_new, prec=prec_new)

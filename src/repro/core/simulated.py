@@ -1,0 +1,167 @@
+"""Simulated multi-agent runtime: the whole network lives on one host and
+agents are a leading pytree axis stepped under ``vmap``.  This is the exact
+execution model for the paper's CPU-scale experiments (4-agent linear
+regression, 9-agent star/grid Bayesian NNs, 26/101-agent time-varying
+networks) and the reference semantics against which the production
+collective runtime (launch/) is tested.
+
+One communication round at every agent i (Sec 2.1):
+  1. draw a local batch (the data pipeline pre-slices u minibatches),
+  2+3. u local Bayes-by-Backprop steps against the prior q_i^{(n-1)}
+       (Remark 1 merges the Bayesian update and the projection),
+  4+5. consensus: precision-weighted averaging with row W_i (eq. 6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.posterior import (
+    GaussianPosterior,
+    consensus_all_agents,
+    consensus_mean_only,
+)
+from repro.optim import Optimizer
+from repro.optim.schedules import Schedule
+from repro.vi.bayes_by_backprop import NllFn, local_vi_steps
+
+PyTree = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class NetworkState:
+    """State of the whole N-agent network (leading axis N on every leaf)."""
+
+    posterior: GaussianPosterior  # stacked over agents
+    opt_state: Any
+    step: jax.Array  # per-agent local step counter [N]
+    round: jax.Array  # scalar communication-round counter
+
+
+def init_network(
+    key: jax.Array,
+    n_agents: int,
+    init_params_fn: Callable[[jax.Array], PyTree],
+    opt: Optimizer,
+    init_sigma: float = 0.05,
+    shared_init: bool = True,
+) -> NetworkState:
+    """Paper Remark 7: agents use a SHARED initialization the first time the
+    local models are trained (but never re-synchronize afterwards).  Set
+    ``shared_init=False`` to study the divergent-initialization failure mode.
+    """
+    from repro.core.posterior import init_posterior
+
+    if shared_init:
+        params = init_params_fn(key)
+        stack = jax.tree.map(
+            lambda p: jnp.broadcast_to(p, (n_agents,) + p.shape), params
+        )
+    else:
+        keys = jax.random.split(key, n_agents)
+        stack = jax.vmap(init_params_fn)(keys)
+    post = init_posterior(stack, init_sigma=init_sigma)
+    opt_state = opt.init(post)
+    return NetworkState(
+        posterior=post,
+        opt_state=opt_state,
+        step=jnp.zeros((n_agents,), jnp.int32),
+        round=jnp.asarray(0, jnp.int32),
+    )
+
+
+def make_round_fn(
+    nll_fn: NllFn,
+    opt: Optimizer,
+    lr_schedule: Schedule,
+    n_mc_samples: int = 1,
+    kl_scale: float = 1.0,
+    consensus: str = "gaussian",
+):
+    """Build the jittable per-round transition.
+
+    round_fn(state, batches, W, key) -> (state', mean_loss_per_agent)
+      batches: pytree, leaves [N, u, ...] — u local minibatches per agent
+      W: [N, N] row-stochastic (may differ per round: time-varying networks)
+    """
+    if consensus not in ("gaussian", "mean_only", "none"):
+        raise ValueError(f"unknown consensus mode {consensus!r}")
+
+    def round_fn(state: NetworkState, batches: Any, W: jax.Array, key: jax.Array):
+        n_agents = state.step.shape[0]
+        keys = jax.random.split(key, n_agents)
+        lr = lr_schedule(state.round)
+        prior = state.posterior  # q_i^{(n-1)}: consensus result of last round
+
+        def local(post_i, prior_i, opt_i, batches_i, key_i, step_i):
+            return local_vi_steps(
+                post_i,
+                prior_i,
+                opt,
+                opt_i,
+                nll_fn,
+                batches_i,
+                key_i,
+                lr,
+                step_i,
+                n_samples=n_mc_samples,
+                kl_scale=kl_scale,
+            )
+
+        post, opt_state, losses = jax.vmap(local)(
+            state.posterior, prior, state.opt_state, batches, keys, state.step
+        )
+        u = jax.tree.leaves(batches)[0].shape[1]
+        if consensus == "gaussian":
+            post = consensus_all_agents(post, W)
+        elif consensus == "mean_only":
+            post = GaussianPosterior(
+                mean=consensus_mean_only(post.mean, W),
+                rho=consensus_mean_only(post.rho, W),
+            )
+        # consensus == "none": isolated learning (paper Fig 1b baseline)
+        new_state = NetworkState(
+            posterior=post,
+            opt_state=opt_state,
+            step=state.step + u,
+            round=state.round + 1,
+        )
+        return new_state, losses
+
+    return round_fn
+
+
+def run_rounds(
+    round_fn,
+    state: NetworkState,
+    batch_sampler: Callable[[jax.Array, int], Any],
+    w_schedule: Sequence[jax.Array] | jax.Array,
+    n_rounds: int,
+    key: jax.Array,
+    eval_fn: Callable[[NetworkState], dict] | None = None,
+    eval_every: int = 0,
+    jit: bool = True,
+) -> tuple[NetworkState, list[dict]]:
+    """Python-level driver (rounds may have data-dependent W / eval hooks).
+
+    batch_sampler(key, round_idx) -> batches pytree [N, u, ...]
+    w_schedule: a single W or a list cycled over rounds (time-varying nets).
+    """
+    fn = jax.jit(round_fn) if jit else round_fn
+    history: list[dict] = []
+    ws = w_schedule if isinstance(w_schedule, (list, tuple)) else [w_schedule]
+    for r in range(n_rounds):
+        key, k_batch, k_round = jax.random.split(key, 3)
+        batches = batch_sampler(k_batch, r)
+        W = ws[r % len(ws)]
+        state, losses = fn(state, batches, jnp.asarray(W), k_round)
+        if eval_every and ((r + 1) % eval_every == 0 or r == n_rounds - 1):
+            rec = {"round": r + 1, "loss": float(jnp.mean(losses))}
+            if eval_fn is not None:
+                rec.update(eval_fn(state))
+            history.append(rec)
+    return state, history

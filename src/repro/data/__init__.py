@@ -1,0 +1,23 @@
+from repro.data.linreg import LinRegTask, make_linreg_task
+from repro.data.synthetic import SyntheticClassification, make_synthetic_classification
+from repro.data.partition import (
+    partition_by_label,
+    partition_iid,
+    star_partition,
+    grid_partition,
+)
+from repro.data.pipeline import AgentDataset, make_round_batches, make_lm_batch_sampler
+
+__all__ = [
+    "LinRegTask",
+    "make_linreg_task",
+    "SyntheticClassification",
+    "make_synthetic_classification",
+    "partition_by_label",
+    "partition_iid",
+    "star_partition",
+    "grid_partition",
+    "AgentDataset",
+    "make_round_batches",
+    "make_lm_batch_sampler",
+]

@@ -1,0 +1,18 @@
+# Pallas TPU kernels for the paper's compute hot-spots:
+#   consensus        fused precision-weighted posterior consensus (eq. 6)
+#   gauss_vi         fused Bayes-by-Backprop sample + KL (eq. 5)
+#   flash_attention  blocked causal/SWA attention (prefill/train hot path)
+# Each has a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py;
+# validated in interpret=True mode on CPU, compiled via Mosaic on TPU.
+from repro.kernels import ops, ref
+from repro.kernels.consensus import consensus_fused
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gauss_vi import sample_and_kl_fused
+
+__all__ = [
+    "ops",
+    "ref",
+    "consensus_fused",
+    "flash_attention",
+    "sample_and_kl_fused",
+]

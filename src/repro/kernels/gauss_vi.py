@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: fused Bayes-by-Backprop parameter sampling + KL.
+
+One pass over the posterior (mu, rho), the prior (mu_p, rho_p), and the
+standard-normal noise eps produces BOTH
+
+    theta = mu + softplus(rho) * eps                (reparameterized sample)
+    kl    = sum [ log(sp/sq) + (sq^2+(mq-mp)^2)/(2 sp^2) - 1/2 ]
+
+Every VI step reads 5 model-sized tensors and writes 1 + a scalar; unfused
+XLA materializes sigma twice (sample and KL) and walks the arrays twice.
+The fusion halves the VI step's posterior-side HBM traffic — this is the
+hot elementwise path of the paper's local-update step (eq. 5).
+
+Tiles: [1, BLOCK] fp32 lanes; per-block KL partials land in a [grid] vector
+reduced by the caller (keeps the kernel free of cross-block communication).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 2048
+
+
+def _gauss_vi_kernel(mu_ref, rho_ref, eps_ref, mu_p_ref, rho_p_ref,
+                     theta_ref, kl_ref):
+    mu = mu_ref[...]
+    rho = rho_ref[...]
+    eps = eps_ref[...]
+    mu_p = mu_p_ref[...]
+    rho_p = rho_p_ref[...]
+    sq = jax.nn.softplus(rho)
+    sp = jax.nn.softplus(rho_p)
+    theta_ref[...] = mu + sq * eps
+    d = mu - mu_p
+    kl = jnp.log(sp / sq) + (sq * sq + d * d) / (2.0 * sp * sp) - 0.5
+    kl_ref[0, 0] = jnp.sum(kl)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def sample_and_kl_fused(
+    mu: jax.Array,  # [P]
+    rho: jax.Array,  # [P]
+    eps: jax.Array,  # [P]
+    mu_p: jax.Array,  # [P]
+    rho_p: jax.Array,  # [P]
+    *,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (theta [P], kl scalar)."""
+    p = mu.shape[0]
+    pad = (-p) % block
+    if pad:
+        mu = jnp.pad(mu, (0, pad))
+        eps = jnp.pad(eps, (0, pad))
+        mu_p = jnp.pad(mu_p, (0, pad))
+        # pad rho with the PRIOR rho so padded lanes contribute KL == 0
+        rho = jnp.pad(rho, (0, pad), constant_values=1.0)
+        rho_p = jnp.pad(rho_p, (0, pad), constant_values=1.0)
+    pp = p + pad
+    grid = (pp // block,)
+    spec = pl.BlockSpec((1, block), lambda i: (0, i))
+    theta, kl_parts = pl.pallas_call(
+        _gauss_vi_kernel,
+        grid=grid,
+        in_specs=[spec] * 5,
+        out_specs=[spec, pl.BlockSpec((1, 1), lambda i: (i, 0))],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, pp), mu.dtype),
+            jax.ShapeDtypeStruct((grid[0], 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        mu[None, :], rho[None, :], eps[None, :], mu_p[None, :], rho_p[None, :]
+    )
+    return theta[0, :p], jnp.sum(kl_parts)

@@ -1,0 +1,93 @@
+"""jit'd public wrappers around the Pallas kernels, with pytree plumbing and
+interpret/TPU dispatch.
+
+``on_tpu()`` decides the default execution mode: Pallas-compiled on TPU,
+interpret (CPU-correctness) elsewhere.  All wrappers take ``interpret=None``
+to mean "auto".
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.consensus import consensus_fused
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gauss_vi import sample_and_kl_fused
+
+PyTree = Any
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _auto(interpret):
+    return (not on_tpu()) if interpret is None else interpret
+
+
+def _flatten(tree: PyTree) -> tuple[jax.Array, Any, list]:
+    leaves, treedef = jax.tree.flatten(tree)
+    flat = jnp.concatenate([l.reshape(-1) for l in leaves])
+    shapes = [l.shape for l in leaves]
+    return flat, treedef, shapes
+
+
+def _unflatten(flat: jax.Array, treedef, shapes) -> PyTree:
+    out, off = [], 0
+    for shp in shapes:
+        n = 1
+        for d in shp:
+            n *= d
+        out.append(flat[off : off + n].reshape(shp))
+        off += n
+    return jax.tree.unflatten(treedef, out)
+
+
+def consensus_posterior(posts, w_row: jax.Array, *, interpret: bool | None = None):
+    """Fused eq. (6) over a whole posterior pytree with stacked neighbor axis.
+
+    ``posts``: GaussianPosterior whose leaves are [N, ...].  Returns a
+    GaussianPosterior without the leading axis (one agent's consensus).
+    """
+    from repro.core.posterior import GaussianPosterior
+
+    n = w_row.shape[0]
+    mean_leaves, treedef = jax.tree.flatten(posts.mean)
+    rho_leaves = treedef.flatten_up_to(posts.rho)
+    mean_flat = jnp.concatenate([l.reshape(n, -1) for l in mean_leaves], axis=1)
+    rho_flat = jnp.concatenate([l.reshape(n, -1) for l in rho_leaves], axis=1)
+    mean_o, rho_o = consensus_fused(
+        w_row, mean_flat, rho_flat, interpret=_auto(interpret)
+    )
+    shapes = [l.shape[1:] for l in mean_leaves]
+    mean = _unflatten(mean_o, treedef, shapes)
+    rho = _unflatten(rho_o, treedef, shapes)
+    return GaussianPosterior(mean=mean, rho=rho)
+
+
+def sample_and_kl(post, prior, key: jax.Array, *, interpret: bool | None = None):
+    """Fused reparameterized sample + KL over a whole posterior pytree.
+
+    Returns (theta pytree, kl scalar)."""
+    mu_flat, treedef, shapes = _flatten(post.mean)
+    rho_flat, _, _ = _flatten(post.rho)
+    mu_p_flat, _, _ = _flatten(prior.mean)
+    rho_p_flat, _, _ = _flatten(prior.rho)
+    eps = jax.random.normal(key, mu_flat.shape, mu_flat.dtype)
+    theta_flat, kl = sample_and_kl_fused(
+        mu_flat, rho_flat, eps, mu_p_flat, rho_p_flat, interpret=_auto(interpret)
+    )
+    return _unflatten(theta_flat, treedef, shapes), kl
+
+
+def attention(
+    q, k, v, *, causal=True, window=0, block_q=512, block_k=512,
+    interpret: bool | None = None,
+):
+    """[B,H,S,hd] flash attention (Pallas on TPU, interpret elsewhere)."""
+    return flash_attention(
+        q, k, v, causal=causal, window=window, block_q=block_q, block_k=block_k,
+        interpret=_auto(interpret),
+    )

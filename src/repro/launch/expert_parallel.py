@@ -1,0 +1,123 @@
+"""Hand-scheduled expert-parallel MoE via shard_map + all_to_all
+(EXPERIMENTS.md §Perf beyond-paper optimization).
+
+The baseline MoE (models/moe.py) is pure jnp: capacity dispatch by
+gather/scatter with the expert dim sharded over ``model`` — GSPMD inserts
+whatever collectives it infers (usually all-gathers of the dispatch
+buffers).  This module is the explicit schedule production MoE systems use:
+
+  tokens sharded over (data x model)  ->  route locally  ->  build per-
+  destination-shard capacity buffers  ->  ALL_TO_ALL over ``model``  ->
+  local expert FFN (E/m experts per shard)  ->  ALL_TO_ALL back  ->
+  weighted combine.
+
+Wire bytes per device: 2 x (m-1)/m x k x T_dev x d — independent of E, and
+strictly the routed payload (the GSPMD path can gather full activations).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.moe import _capacity, load_balance_loss, route_topk
+
+
+def _dispatch_to_buffers(x, expert_of, w_of, keep, n_dst, cap, experts_per_dst):
+    """Build [n_dst, cap, ...] send buffers from flat assignments.
+
+    Returns (x_buf [n_dst, cap, d], meta_buf [n_dst, cap, 3]) where meta =
+    (source flat-assignment index + 1, local expert id, weight)."""
+    t_k = expert_of.shape[0]
+    dst = expert_of // experts_per_dst
+    local_e = expert_of % experts_per_dst
+    # slot within (dst): running count of prior assignments to the same dst
+    onehot = jax.nn.one_hot(dst, n_dst, dtype=jnp.int32)  # [T*k, n_dst]
+    slot = (jnp.cumsum(onehot, axis=0) * onehot - 1).max(axis=-1)
+    ok = keep & (slot >= 0) & (slot < cap)
+    dst_s = jnp.where(ok, dst, 0)
+    slot_s = jnp.where(ok, slot, 0)
+    x_buf = jnp.zeros((n_dst, cap, x.shape[-1]), x.dtype)
+    x_buf = x_buf.at[dst_s, slot_s].add(
+        jnp.where(ok[:, None], x, 0.0)
+    )
+    meta = jnp.zeros((n_dst, cap, 3), jnp.float32)
+    src_idx = jnp.arange(t_k, dtype=jnp.float32) + 1.0
+    meta = meta.at[dst_s, slot_s, 0].add(jnp.where(ok, src_idx, 0.0))
+    meta = meta.at[dst_s, slot_s, 1].add(jnp.where(ok, local_e.astype(jnp.float32), 0.0))
+    meta = meta.at[dst_s, slot_s, 2].add(jnp.where(ok, w_of, 0.0))
+    return x_buf, meta
+
+
+def moe_ffn_expert_parallel(
+    params, x: jax.Array, cfg, mesh, *, axis: str = "model", dtype=None
+):
+    """Expert-parallel MoE FFN.  x: [B, S, D] sharded over ("data", axis) on
+    the flattened token dim; expert weights sharded over ``axis`` on the E
+    dim.  Returns (y [B, S, D], aux)."""
+    dtype = dtype or x.dtype
+    m = mesh.shape[axis]
+    e = cfg.n_experts
+    assert e % m == 0, "experts must divide the expert-parallel axis"
+    e_loc = e // m
+    b, s, d = x.shape
+
+    tok_spec = P(("data", axis), None)
+    w_router_spec = P(None, None)
+    w_e_spec = P(axis, None, None)
+
+    def shard_fn(xt, w_router, w_gate, w_up, w_down):
+        # xt: [T_dev, d]; w_*: [e_loc, ...] local experts
+        t_dev = xt.shape[0]
+        cap = _capacity(t_dev, m, cfg.top_k, cfg.capacity_factor)
+        logits = xt @ w_router.astype(xt.dtype)
+        weights, idx, probs = route_topk(logits, cfg.top_k)
+        aux = load_balance_loss(probs, idx, e)
+        expert_of = idx.reshape(-1)
+        token_of = jnp.repeat(jnp.arange(t_dev), cfg.top_k)
+        w_of = weights.reshape(-1)
+        x_src = xt[token_of]
+        keep = jnp.ones_like(expert_of, bool)
+        x_buf, meta = _dispatch_to_buffers(
+            x_src, expert_of, w_of, keep, m, cap, e_loc
+        )
+        # ---- all_to_all: send each destination shard its buffer ----
+        x_recv = jax.lax.all_to_all(x_buf, axis, 0, 0, tiled=False)  # [m, cap, d]
+        meta_recv = jax.lax.all_to_all(meta, axis, 0, 0, tiled=False)
+        xr = x_recv.reshape(m * cap, d)
+        local_e = meta_recv[..., 1].reshape(m * cap).astype(jnp.int32)
+        valid = meta_recv[..., 0].reshape(m * cap) > 0
+        # local expert FFN via one-hot batched einsum over e_loc experts
+        sel = jax.nn.one_hot(jnp.where(valid, local_e, 0), e_loc, dtype=xr.dtype)
+        sel = sel * valid[:, None]
+        xe = jnp.einsum("te,td->etd", sel, xr)  # [e_loc, m*cap, d] (zeros elsewhere)
+        g = jnp.einsum("etd,edf->etf", xe, w_gate.astype(xr.dtype))
+        u = jnp.einsum("etd,edf->etf", xe, w_up.astype(xr.dtype))
+        y_e = jnp.einsum("etf,efd->etd", jax.nn.silu(g) * u, w_down.astype(xr.dtype))
+        y_flat = jnp.einsum("etd,te->td", y_e, sel)  # back to [m*cap, d]
+        # ---- all_to_all back to the source shards ----
+        y_send = y_flat.reshape(m, cap, d)
+        y_back = jax.lax.all_to_all(y_send, axis, 0, 0, tiled=False)  # [m, cap, d]
+        meta_back = jax.lax.all_to_all(meta_recv, axis, 0, 0, tiled=False)
+        # combine: scatter-add into tokens with router weights
+        src = meta_back[..., 0].reshape(m * cap)
+        wgt = meta_back[..., 2].reshape(m * cap)
+        tok = jnp.where(src > 0, token_of[jnp.maximum(src.astype(jnp.int32) - 1, 0)], t_dev)
+        out = jnp.zeros((t_dev + 1, d), jnp.float32)
+        out = out.at[tok].add(
+            y_back.reshape(m * cap, d).astype(jnp.float32) * wgt[:, None]
+        )
+        return out[:t_dev].astype(dtype), aux[None]
+
+    fn = jax.shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=(tok_spec, w_router_spec, w_e_spec, w_e_spec, w_e_spec),
+        out_specs=(tok_spec, P(("data", axis))),
+    )
+    xt = x.reshape(b * s, d)
+    y, aux = fn(xt, params["router"], params["w_gate"], params["w_up"],
+                params["w_down"])
+    return y.reshape(b, s, d), jnp.mean(aux)

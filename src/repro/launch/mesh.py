@@ -1,0 +1,42 @@
+"""Production mesh builders.
+
+Target hardware: TPU v5e pods — 256 chips per pod (16x16), 197 TFLOP/s bf16,
+16 GiB / 819 GB/s HBM per chip, ~50 GB/s/link ICI.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state; the dry-run entry point sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import to get 512 placeholder host devices.
+
+Axis semantics:
+  pod    the paper's AGENT axis — each pod is one decentralized-learning
+         agent holding its own posterior; consensus (eq. 6) is the only
+         cross-pod communication (DCN-friendly: once per round).
+  data   batch / FSDP sharding within an agent.
+  model  tensor parallelism (heads / d_ff / experts / vocab).
+"""
+from __future__ import annotations
+
+import jax
+
+# v5e hardware constants (per chip) used by the roofline analysis
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_n_agents(mesh: jax.sharding.Mesh) -> int:
+    return mesh.shape.get("pod", 1)
+
+
+def mesh_n_chips(mesh: jax.sharding.Mesh) -> int:
+    n = 1
+    for v in mesh.shape.values():
+        n *= v
+    return n

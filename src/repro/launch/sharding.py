@@ -1,0 +1,173 @@
+"""Sharding rules: parameter / posterior / batch / cache PartitionSpecs.
+
+Policy (baseline; §Perf iterates on it):
+  * every >=2D weight shards its last two dims over ("data", "model") —
+    FSDP on the penultimate dim, tensor parallelism on the last;
+  * MoE expert stacks [.., E, D, F] shard E over "model" (expert
+    parallelism) and D over "data";
+  * dims that do not divide the axis size are replicated (logged);
+  * the leading agent axis (size n_pods) shards over "pod";
+  * batch shards over ("pod" agent dim) x ("data");
+  * 1D leaves (norm scales, biases, Lambda) replicate.
+
+The posterior (mu, rho), Adam states, and gradients inherit the parameter
+specs leaf-wise.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+def _divisible(dim: int, mesh: Mesh, axis: str) -> bool:
+    return axis in mesh.shape and dim % mesh.shape[axis] == 0 and dim > 0
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def leaf_pspec(path, leaf, mesh: Mesh, *, agent_leading: bool = False) -> P:
+    """PartitionSpec for one parameter leaf (without the agent axis)."""
+    name = _path_str(path)
+    shape = leaf.shape
+    if len(shape) == 0:
+        return P()  # scalars (step counters) replicate
+    offset = 1 if agent_leading else 0  # leading agent dim handled by caller
+    body = list(shape[offset:])
+    spec: list = [None] * len(body)
+
+    is_expert = ("w_gate" in name or "w_up" in name or "w_down" in name) and (
+        "moe" in name and len(body) >= 3
+    )
+    if is_expert:
+        # [..., E, D, F] (or [..., E, F, D]) — expert parallelism on E
+        e_dim = len(body) - 3
+        if _divisible(body[e_dim], mesh, "model"):
+            spec[e_dim] = "model"
+        if _divisible(body[e_dim + 1], mesh, "data"):
+            spec[e_dim + 1] = "data"
+    elif len(body) >= 2:
+        d2, d1 = body[-2], body[-1]
+        if _divisible(d2, mesh, "data"):
+            spec[-2] = "data"
+        if _divisible(d1, mesh, "model"):
+            spec[-1] = "model"
+        elif spec[-2] is None and _divisible(d1, mesh, "data"):
+            # at least FSDP the big dim if TP doesn't divide
+            spec[-1] = "data"
+    # 1D leaves replicate
+    full = ([("pod" if "pod" in mesh.shape else None)] if agent_leading else []) + spec
+    return P(*full)
+
+
+def param_shardings(
+    params_shape: PyTree, mesh: Mesh, *, agent_leading: bool = False
+) -> PyTree:
+    """NamedSharding tree matching ``params_shape`` (a ShapeDtypeStruct tree)."""
+
+    def one(path, leaf):
+        return NamedSharding(mesh, leaf_pspec(path, leaf, mesh, agent_leading=agent_leading))
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def batch_pspec(mesh: Mesh, shape: tuple, *, agent_leading: bool = True) -> P:
+    """Token batches [A, B, S, ...]: A over pod, B over data — each only
+    when the dimension size divides the axis."""
+    spec: list = [None] * len(shape)
+    i = 0
+    if agent_leading:
+        if _divisible(shape[0], mesh, "pod"):
+            spec[0] = "pod"
+        i = 1
+    if len(shape) > i and _divisible(shape[i], mesh, "data"):
+        spec[i] = "data"
+    return P(*spec)
+
+
+# (scheme, leaf-name) -> [(dim-from-end, mesh-axis), ...]
+_CACHE_DIMS = {
+    ("kv", "k"): [(-4, "data"), (-2, "model")],
+    ("kv", "v"): [(-4, "data"), (-2, "model")],
+    ("kv", "pos"): [(-2, "data")],
+    ("kv", "k_scale"): [(-3, "data"), (-1, "model")],
+    ("kv", "v_scale"): [(-3, "data"), (-1, "model")],
+    ("mlstm", "C"): [(-4, "data"), (-1, "model")],
+    ("mlstm", "n"): [(-3, "data"), (-1, "model")],
+    ("mlstm", "m"): [(-2, "data")],
+    ("slstm", "c"): [(-2, "data"), (-1, "model")],
+    ("slstm", "n"): [(-2, "data"), (-1, "model")],
+    ("slstm", "h"): [(-2, "data"), (-1, "model")],
+    ("slstm", "m"): [(-2, "data")],
+    ("rglru", "h"): [(-2, "data"), (-1, "model")],
+    ("rglru", "conv"): [(-3, "data"), (-1, "model")],
+}
+
+
+def cache_pspec(path, leaf, mesh: Mesh, *, agent_leading: bool = True) -> P:
+    """Decode caches: batch dim over data, kv-heads / feature dims over
+    model, everything guarded by divisibility (B=1 long-context decode
+    replicates)."""
+    name = _path_str(path)
+    parts = name.split("/")
+    leaf_name = parts[-1]
+    if "mlstm" in parts:
+        scheme = "mlstm"
+    elif "slstm" in parts:
+        scheme = "slstm"
+    elif leaf_name in ("k", "v", "pos", "k_scale", "v_scale"):
+        scheme = "kv"
+    elif leaf_name in ("h", "conv"):
+        scheme = "rglru"
+    else:
+        scheme = None
+    shape = leaf.shape
+    spec: list = [None] * len(shape)
+    for dim, axis in _CACHE_DIMS.get((scheme, leaf_name), []):
+        idx = len(shape) + dim
+        if 0 <= idx < len(shape) and _divisible(shape[idx], mesh, axis):
+            if spec[idx] is None:
+                spec[idx] = axis
+    if agent_leading and len(shape) >= 1 and spec[0] is None:
+        if _divisible(shape[0], mesh, "pod"):
+            spec[0] = "pod"
+    return P(*spec)
+
+
+def cache_shardings(cache_shape: PyTree, mesh: Mesh, *, agent_leading: bool = True):
+    def one(path, leaf):
+        return NamedSharding(mesh, cache_pspec(path, leaf, mesh, agent_leading=agent_leading))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def sharding_report(params_shape: PyTree, mesh: Mesh, agent_leading: bool = False):
+    """(n_params, bytes_total, bytes_max_per_device, n_replicated_leaves)."""
+    n_params = 0
+    total = 0
+    per_dev = 0
+    n_repl = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_shape)[0]:
+        spec = leaf_pspec(path, leaf, mesh, agent_leading=agent_leading)
+        size = int(np.prod(leaf.shape)) if leaf.shape else 1
+        bts = size * leaf.dtype.itemsize
+        shard_factor = 1
+        for dim_spec in spec:
+            if dim_spec is not None:
+                shard_factor *= mesh.shape[dim_spec]
+        if shard_factor == 1 and len(leaf.shape) >= 2:
+            n_repl += 1
+        n_params += size
+        total += bts
+        per_dev += bts // shard_factor
+    return n_params, total, per_dev, n_repl

@@ -1,0 +1,21 @@
+from repro.models.transformer import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    nll_loss,
+)
+from repro.models import attention, modules, moe, rglru, xlstm
+
+__all__ = [
+    "decode_step",
+    "forward",
+    "init_cache",
+    "init_params",
+    "nll_loss",
+    "attention",
+    "modules",
+    "moe",
+    "rglru",
+    "xlstm",
+]

@@ -1,0 +1,91 @@
+"""Basic neural modules (functional, dict-of-arrays params).
+
+All weights are stored in ``param_dtype`` (fp32 — the Bayesian posterior
+needs fp32 means/rhos) and cast to the compute dtype inside ``apply``.
+Initializers return UNSTACKED per-layer params; the transformer assembly
+stacks them over periods for scan.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def truncated_normal_init(key, shape, scale, dtype=jnp.float32):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale / jnp.sqrt(fan_in)
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def linear_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+    return {"w": truncated_normal_init(key, (d_in, d_out), 1.0, dtype)}
+
+
+def linear(params, x, dtype):
+    return x @ params["w"].astype(dtype)
+
+
+def embed_init(key, vocab: int, d_model: int, dtype=jnp.float32):
+    return {"emb": jax.random.normal(key, (vocab, d_model), dtype) * 0.02}
+
+
+def embed(params, tokens, dtype):
+    return params["emb"].astype(dtype)[tokens]
+
+
+def unembed(params, x, dtype):
+    # logits in fp32 for a stable softmax-xent
+    return (x @ params["emb"].astype(dtype).T).astype(jnp.float32)
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary position embedding.  x: [..., S, H, hd]; positions: [..., S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(angles)[..., None, :]  # [..., S, 1, half]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def swiglu_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": truncated_normal_init(k1, (d_model, d_ff), 1.0, dtype),
+        "w_up": truncated_normal_init(k2, (d_model, d_ff), 1.0, dtype),
+        "w_down": truncated_normal_init(k3, (d_ff, d_model), 1.0, dtype),
+    }
+
+
+def swiglu(params, x, dtype):
+    g = x @ params["w_gate"].astype(dtype)
+    u = x @ params["w_up"].astype(dtype)
+    return (jax.nn.silu(g) * u) @ params["w_down"].astype(dtype)
+
+
+def softmax_xent(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Total (summed) cross-entropy; logits [..., V], targets [...] int."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.sum(logz - gold)

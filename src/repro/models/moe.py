@@ -1,0 +1,104 @@
+"""Top-k mixture-of-experts FFN with capacity-based dispatch.
+
+Routing: softmax router -> top-k experts per token -> capacity-limited
+dispatch (tokens over capacity are dropped, standard Switch/GShard
+semantics) -> batched expert SwiGLU via einsum over the expert dim ->
+weighted combine.  The expert dim shards over the ``model`` mesh axis
+(expert parallelism); under GSPMD the gather/scatter around the expert
+einsum lowers to cross-shard collectives.  The hand-scheduled shard_map
+all-to-all variant lives in launch/expert_parallel.py (the beyond-paper
+optimization in EXPERIMENTS.md §Perf).
+
+Also emits the load-balancing auxiliary loss (Switch-style
+E * sum_e f_e * p_e) — the paper-external but production-required router
+regularizer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.modules import truncated_normal_init
+
+
+def moe_init(key, cfg):
+    ks = jax.random.split(key, 4)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    return {
+        "router": truncated_normal_init(ks[0], (d, e), 1.0),
+        "w_gate": truncated_normal_init(ks[1], (e, d, f), 1.0),
+        "w_up": truncated_normal_init(ks[2], (e, d, f), 1.0),
+        "w_down": truncated_normal_init(ks[3], (e, f, d), 1.0),
+    }
+
+
+def route_topk(router_logits: jax.Array, top_k: int):
+    """[T, E] -> (weights [T, k], expert_idx [T, k], probs [T, E]).
+    Top-k softmax weights renormalized over the selected experts."""
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    weights, idx = jax.lax.top_k(probs, top_k)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    return weights, idx, probs
+
+
+def load_balance_loss(probs: jax.Array, idx: jax.Array, n_experts: int) -> jax.Array:
+    """Switch-transformer aux loss: E * sum_e (fraction routed to e) * (mean prob e)."""
+    t = probs.shape[0]
+    counts = jnp.zeros((n_experts,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    frac = counts / (t * idx.shape[-1])
+    mean_prob = jnp.mean(probs, axis=0)
+    return n_experts * jnp.sum(frac * mean_prob)
+
+
+def _capacity(n_tokens: int, n_experts: int, top_k: int, factor: float) -> int:
+    c = int(n_tokens * top_k * factor / n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8, floor 8
+
+
+def moe_ffn(params, x: jax.Array, cfg, dtype=None):
+    """x: [B, S, D] -> (y [B, S, D], aux_loss scalar).
+
+    Dispatch is fully static-shaped: for each (expert, capacity-slot) we
+    compute the source token index, gather, run the expert batched matmuls,
+    and scatter-add back with the router weights.
+    """
+    dtype = dtype or x.dtype
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(t, e, k, cfg.capacity_factor)
+    xt = x.reshape(t, d)
+
+    logits = xt @ params["router"].astype(dtype)  # [T, E]
+    weights, idx, probs = route_topk(logits, k)  # [T,k], [T,k], [T,E]
+    aux = load_balance_loss(probs, idx, e)
+
+    # position of each (token, k) assignment within its expert's capacity
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)  # [T, k, E]
+    flat = onehot.reshape(t * k, e)
+    pos_in_expert = jnp.cumsum(flat, axis=0) * flat - 1  # [T*k, E], -1 elsewhere
+    slot = jnp.max(pos_in_expert, axis=-1)  # [T*k] slot id (within expert)
+    keep = (slot >= 0) & (slot < cap)
+    expert_of = idx.reshape(t * k)
+    token_of = jnp.repeat(jnp.arange(t), k)
+    w_of = weights.reshape(t * k)
+
+    # scatter (expert, slot) -> token index (+1; 0 = empty, token row T is zeros)
+    dispatch = jnp.zeros((e, cap), jnp.int32)
+    dispatch = dispatch.at[
+        jnp.where(keep, expert_of, 0), jnp.where(keep, slot, 0)
+    ].max(jnp.where(keep, token_of + 1, 0))
+    xt_pad = jnp.concatenate([jnp.zeros((1, d), xt.dtype), xt], axis=0)
+    x_disp = xt_pad[dispatch]  # [E, C, D]
+
+    # batched expert SwiGLU: expert dim shards over "model"
+    g = jnp.einsum("ecd,edf->ecf", x_disp, params["w_gate"].astype(dtype))
+    u = jnp.einsum("ecd,edf->ecf", x_disp, params["w_up"].astype(dtype))
+    yd = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, params["w_down"].astype(dtype))
+
+    # combine: scatter-add back to tokens with router weights
+    out = jnp.zeros((t + 1, d), jnp.float32)
+    gathered = yd[jnp.where(keep, expert_of, 0), jnp.where(keep, slot, 0)]  # [T*k, D]
+    contrib = jnp.where(keep[:, None], gathered.astype(jnp.float32) * w_of[:, None], 0.0)
+    out = out.at[jnp.where(keep, token_of + 1, 0)].add(contrib)
+    return out[1:].astype(dtype).reshape(b, s, d), aux

@@ -1,0 +1,103 @@
+"""RecurrentGemma / Griffin recurrent block (De et al., arXiv:2402.19427).
+
+RG-LRU recurrence (diagonal, real-valued):
+    r_t = sigmoid(W_r x_t)                    (recurrence gate)
+    i_t = sigmoid(W_i x_t)                    (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)    (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The diagonal linear recurrence is evaluated with ``lax.associative_scan``
+(log-depth, TPU-parallel) for training/prefill and as a single fused step
+for decode.  The block wraps the RG-LRU with the Griffin recurrent-block
+structure: linear in, short temporal conv1d (width 4), RG-LRU, gated by a
+GeLU branch, linear out.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.modules import rmsnorm, rmsnorm_init, truncated_normal_init
+
+_C = 8.0
+CONV_WIDTH = 4
+
+
+def rglru_init(key, cfg):
+    d = cfg.d_model
+    ks = jax.random.split(key, 7)
+    # Lambda init so that a ~ Unif[0.9, 0.999]^(1/(c*0.5)) territory (paper App.)
+    lam = jax.random.uniform(ks[0], (d,), minval=0.9, maxval=0.999)
+    lam_raw = jnp.log(jnp.expm1(-jnp.log(lam) / (_C * 0.5)))  # softplus^-1
+    return {
+        "norm": rmsnorm_init(d),
+        "w_in": truncated_normal_init(ks[1], (d, d), 1.0),
+        "w_gate": truncated_normal_init(ks[2], (d, d), 1.0),
+        "conv_w": truncated_normal_init(ks[3], (CONV_WIDTH, d), 1.0),
+        "conv_b": jnp.zeros((d,), jnp.float32),
+        "w_r": truncated_normal_init(ks[4], (d, d), 1.0),
+        "w_i": truncated_normal_init(ks[5], (d, d), 1.0),
+        "lam_raw": lam_raw.astype(jnp.float32),
+        "w_out": truncated_normal_init(ks[6], (d, d), 1.0),
+    }
+
+
+def rglru_state_init(cfg, batch: int, dtype=jnp.float32):
+    d = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, d), dtype),
+        "conv": jnp.zeros((batch, CONV_WIDTH - 1, d), dtype),  # last w-1 inputs
+    }
+
+
+def causal_conv1d(x, w, b, history=None):
+    """Depthwise causal conv, width W.  x: [B,S,D]; w: [W,D].
+
+    ``history``: [B, W-1, D] inputs preceding x (decode), else zeros."""
+    bsz, s, d = x.shape
+    if history is None:
+        history = jnp.zeros((bsz, CONV_WIDTH - 1, d), x.dtype)
+    xx = jnp.concatenate([history.astype(x.dtype), x], axis=1)  # [B, S+W-1, D]
+    out = jnp.zeros((bsz, s, d), x.dtype)
+    for i in range(CONV_WIDTH):
+        out = out + xx[:, i : i + s, :] * w[i].astype(x.dtype)
+    new_history = xx[:, -(CONV_WIDTH - 1) :, :]
+    return out + b.astype(x.dtype), new_history
+
+
+def rglru_scan(x, r, i, lam_raw, h0):
+    """Associative-scan RG-LRU.  x, r, i: [B,S,D]; h0: [B,D]."""
+    a = jnp.exp(-_C * jax.nn.softplus(lam_raw)[None, None, :] * r.astype(jnp.float32))
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * (
+        i.astype(jnp.float32) * x.astype(jnp.float32)
+    )
+    # prepend h0 as a pseudo-step: h_0 carried via (a=0 offset) trick
+    # associative op over pairs (a, b): (a2*a1, a2*b1 + b2)
+    def op(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    a_all = jnp.concatenate([jnp.zeros_like(a[:, :1]), a], axis=1)
+    b_all = jnp.concatenate([h0[:, None, :].astype(jnp.float32), gated], axis=1)
+    _, hs = jax.lax.associative_scan(op, (a_all, b_all), axis=1)
+    return hs[:, 1:], hs[:, -1]  # [B,S,D], final state
+
+
+def rglru_block(params, x, cfg, state=None):
+    """Griffin recurrent block.  x: [B,S,D] -> (y, new_state)."""
+    b, s, d = x.shape
+    dt = x.dtype
+    xin = rmsnorm(params["norm"], x, cfg.norm_eps)
+    branch = xin @ params["w_in"].astype(dt)
+    gate = jax.nn.gelu(xin @ params["w_gate"].astype(dt))
+    if state is None:
+        state = rglru_state_init(cfg, b)
+    conv_out, new_hist = causal_conv1d(
+        branch, params["conv_w"], params["conv_b"], state["conv"]
+    )
+    r = jax.nn.sigmoid(conv_out @ params["w_r"].astype(dt))
+    ig = jax.nn.sigmoid(conv_out @ params["w_i"].astype(dt))
+    hs, h_last = rglru_scan(conv_out, r, ig, params["lam_raw"], state["h"])
+    y = (hs.astype(dt) * gate) @ params["w_out"].astype(dt)
+    return x + y, {"h": h_last, "conv": new_hist}

@@ -1,0 +1,251 @@
+"""xLSTM blocks (Beck et al., arXiv:2405.04517): mLSTM (matrix memory,
+chunkwise-parallel) and sLSTM (scalar memory, sequential scan).
+
+mLSTM recurrence (per head, stabilized):
+    m_t = max(logsig(f_t) + m_{t-1}, i_t)
+    C_t = exp(logsig(f_t)+m_{t-1}-m_t) C_{t-1} + exp(i_t - m_t) k_t v_t^T
+    n_t = exp(logsig(f_t)+m_{t-1}-m_t) n_{t-1} + exp(i_t - m_t) k_t
+    h_t = C_t^T q_t / max(|n_t^T q_t|, exp(-m_t))
+The stored state (C, n) is the stabilized one: C_stored = C_true * exp(-m).
+
+TPU adaptation: the mLSTM is evaluated CHUNKWISE — a lax.scan over chunks of
+``chunk_size`` carrying (C, n, m); within a chunk the intra-chunk term is a
+masked matmul (MXU-friendly) and the inter-chunk term a single [c,dk]@[dk,dv]
+matmul.  This is the TPU-native rethinking of the paper's per-step GPU
+recurrence: arithmetic intensity scales with the chunk size instead of being
+bandwidth-bound at 1 step per HBM round-trip.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.modules import rmsnorm, rmsnorm_init, truncated_normal_init
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg):
+    d = cfg.d_model
+    p = 2 * d  # projection factor 2 (xLSTM paper)
+    h = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": rmsnorm_init(d),
+        "w_up": truncated_normal_init(ks[0], (d, p), 1.0),
+        "w_gate": truncated_normal_init(ks[1], (d, p), 1.0),
+        "wq": truncated_normal_init(ks[2], (p, p), 1.0),
+        "wk": truncated_normal_init(ks[3], (p, p), 1.0),
+        "wv": truncated_normal_init(ks[4], (p, p), 1.0),
+        "w_i": truncated_normal_init(ks[5], (p, h), 1.0),
+        "w_f": truncated_normal_init(ks[6], (p, h), 1.0),
+        "w_down": truncated_normal_init(ks[7], (p, d), 1.0),
+        "out_norm": rmsnorm_init(p),
+    }
+
+
+def mlstm_state_init(cfg, batch: int, dtype=jnp.float32):
+    p = 2 * cfg.d_model
+    h = cfg.n_heads
+    hd = p // h
+    return {
+        "C": jnp.zeros((batch, h, hd, hd), dtype),
+        "n": jnp.zeros((batch, h, hd), dtype),
+        "m": jnp.full((batch, h), -1e30, dtype),
+    }
+
+
+def mlstm_scan(q, k, v, i_gate, f_gate, state, chunk_size: int = 256):
+    """Chunkwise stabilized mLSTM.
+
+    q,k,v: [B, S, H, hd] (k pre-scaled by hd^-0.5 by the caller)
+    i_gate, f_gate: [B, S, H] raw (pre-activation) gates
+    state: dict(C [B,H,hd,hd], n [B,H,hd], m [B,H]) — stabilized carry
+    Returns (h [B,S,H,hd], new_state).
+    """
+    b, s, h, hd = q.shape
+    c = min(chunk_size, s)
+    n_chunks = -(-s // c)
+    pad = n_chunks * c - s
+    if pad:
+        padq = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q = jnp.pad(q, padq)
+        k = jnp.pad(k, padq)
+        v = jnp.pad(v, padq)
+        # padded steps must not raise the stabilizer m: i -> -inf (no input)
+        i_gate = jnp.pad(i_gate, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        # pad forget gates with +inf raw -> logsig ~ 0 -> carry decays by 1
+        f_gate = jnp.pad(f_gate, ((0, 0), (0, pad), (0, 0)), constant_values=40.0)
+
+    def reshape_chunks(x):
+        return x.reshape((b, n_chunks, c) + x.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = reshape_chunks(q), reshape_chunks(k), reshape_chunks(v)
+    ic, fc = reshape_chunks(i_gate), reshape_chunks(f_gate)
+
+    def chunk_step(carry, xs):
+        C0, n0, m0 = carry  # [B,H,hd,hd], [B,H,hd], [B,H]
+        qj, kj, vj, ij, fj = xs  # [B,c,H,hd] / [B,c,H]
+        qj = qj.astype(jnp.float32)
+        kj = kj.astype(jnp.float32)
+        vj = vj.astype(jnp.float32)
+        logf = jax.nn.log_sigmoid(fj.astype(jnp.float32))  # [B,c,H]
+        bcum = jnp.cumsum(logf, axis=1)  # b_j, [B,c,H]
+        a = bcum + m0[:, None, :]  # carry-decay log, [B,c,H]
+        itb = ij.astype(jnp.float32) - bcum  # i_l - b_l
+        local_max = jax.lax.cummax(itb, axis=1)  # [B,c,H]
+        m = jnp.maximum(a, bcum + local_max)  # m_j, [B,c,H]
+
+        # intra-chunk: D[j,l] = exp(b_j - b_l + i_l - m_j) for l <= j
+        # log D = (b_j - m_j)[:, j] + (i_l - b_l)[:, l]
+        logd = (bcum - m)[:, :, None, :] + itb[:, None, :, :]  # [B,j,l,H]
+        mask = jnp.tril(jnp.ones((c, c), bool))
+        dmat = jnp.where(mask[None, :, :, None], jnp.exp(logd), 0.0)  # [B,j,l,H]
+        scores = jnp.einsum("bjhd,blhd->bjlh", qj, kj) * dmat
+        h_intra = jnp.einsum("bjlh,blhd->bjhd", scores, vj)
+        n_intra = jnp.einsum("bjlh,blhd->bjhd", dmat, kj)
+
+        # inter-chunk: exp(a_j - m_j) * (q_j @ C0)
+        w_inter = jnp.exp(a - m)  # [B,c,H]
+        h_inter = jnp.einsum("bjhd,bhde->bjhe", qj, C0) * w_inter[..., None]
+        n_inter = n0[:, None, :, :] * w_inter[..., None]
+
+        num = h_intra + h_inter
+        nvec = n_intra + n_inter
+        qn = jnp.einsum("bjhd,bjhd->bjh", qj, nvec)
+        denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m))
+        hj = num / denom[..., None]
+
+        # carry update (at j = c-1)
+        m_end = m[:, -1, :]  # [B,H]
+        w_carry = jnp.exp(a[:, -1, :] - m_end)  # decay of old carry
+        w_kv = jnp.exp((bcum[:, -1:, :] - bcum) + ij.astype(jnp.float32) - m_end[:, None, :])
+        C_new = C0 * w_carry[..., None, None] + jnp.einsum(
+            "blh,blhd,blhe->bhde", w_kv, kj, vj
+        )
+        n_new = n0 * w_carry[..., None] + jnp.einsum("blh,blhd->bhd", w_kv, kj)
+        return (C_new, n_new, m_end), hj
+
+    carry0 = (
+        state["C"].astype(jnp.float32),
+        state["n"].astype(jnp.float32),
+        state["m"].astype(jnp.float32),
+    )
+    (C, n, m), hs = jax.lax.scan(chunk_step, carry0, (qc, kc, vc, ic, fc))
+    out = hs.swapaxes(0, 1).reshape(b, n_chunks * c, h, hd)[:, :s]
+    return out.astype(q.dtype), {"C": C, "n": n, "m": m}
+
+
+def mlstm_block(params, x, cfg, state=None, chunk_size: int = 256):
+    """Full mLSTM residual block.  x: [B,S,D].  Returns (y, new_state)."""
+    b, s, d = x.shape
+    dt = x.dtype
+    h = cfg.n_heads
+    p = 2 * d
+    hd = p // h
+    xin = rmsnorm(params["norm"], x, cfg.norm_eps)
+    up = xin @ params["w_up"].astype(dt)  # [B,S,p]
+    gate = jax.nn.silu(xin @ params["w_gate"].astype(dt))
+    q = (up @ params["wq"].astype(dt)).reshape(b, s, h, hd)
+    k = (up @ params["wk"].astype(dt)).reshape(b, s, h, hd) / jnp.sqrt(hd).astype(dt)
+    v = (up @ params["wv"].astype(dt)).reshape(b, s, h, hd)
+    ig = up @ params["w_i"].astype(dt)  # [B,S,H]
+    fg = up @ params["w_f"].astype(dt)
+    if state is None:
+        state = mlstm_state_init(cfg, b)
+    hseq, new_state = mlstm_scan(q, k, v, ig, fg, state, chunk_size)
+    hseq = rmsnorm(params["out_norm"], hseq.reshape(b, s, p), cfg.norm_eps)
+    y = (hseq * gate) @ params["w_down"].astype(dt)
+    return x + y, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg):
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    ks = jax.random.split(key, 10)
+    return {
+        "norm": rmsnorm_init(d),
+        # input projections for z,i,f,o
+        "w_z": truncated_normal_init(ks[0], (d, d), 1.0),
+        "w_i": truncated_normal_init(ks[1], (d, d), 1.0),
+        "w_f": truncated_normal_init(ks[2], (d, d), 1.0),
+        "w_o": truncated_normal_init(ks[3], (d, d), 1.0),
+        # block-diagonal (per-head) recurrent matrices
+        "r_z": truncated_normal_init(ks[4], (h, hd, hd), 1.0),
+        "r_i": truncated_normal_init(ks[5], (h, hd, hd), 1.0),
+        "r_f": truncated_normal_init(ks[6], (h, hd, hd), 1.0),
+        "r_o": truncated_normal_init(ks[7], (h, hd, hd), 1.0),
+        "w_down": truncated_normal_init(ks[8], (d, d), 1.0),
+        "out_norm": rmsnorm_init(d),
+    }
+
+
+def slstm_state_init(cfg, batch: int, dtype=jnp.float32):
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), dtype),
+        "n": jnp.zeros((batch, d), dtype),
+        "h": jnp.zeros((batch, d), dtype),
+        "m": jnp.full((batch, d), -1e30, dtype),
+    }
+
+
+def _block_diag_matvec(r, h_vec, n_heads):
+    """r: [H, hd, hd]; h_vec: [B, D] -> [B, D] per-head recurrent matvec."""
+    b, d = h_vec.shape
+    hd = d // n_heads
+    hh = h_vec.reshape(b, n_heads, hd)
+    return jnp.einsum("bhk,hkl->bhl", hh, r).reshape(b, d)
+
+
+def slstm_scan(params, xz, xi, xf, xo, state, n_heads):
+    """Sequential sLSTM over time (true recurrence — not parallelizable).
+
+    xz..xo: [B, S, D] pre-activation input contributions.
+    """
+
+    def step(carry, xs):
+        c, n, h, m = carry
+        z_in, i_in, f_in, o_in = xs
+        z = jnp.tanh(z_in + _block_diag_matvec(params["r_z"], h, n_heads))
+        i_raw = i_in + _block_diag_matvec(params["r_i"], h, n_heads)
+        f_raw = f_in + _block_diag_matvec(params["r_f"], h, n_heads)
+        o = jax.nn.sigmoid(o_in + _block_diag_matvec(params["r_o"], h, n_heads))
+        logf = jax.nn.log_sigmoid(f_raw)
+        m_new = jnp.maximum(logf + m, i_raw)
+        i_s = jnp.exp(i_raw - m_new)
+        f_s = jnp.exp(logf + m - m_new)
+        c_new = f_s * c + i_s * z
+        n_new = f_s * n + i_s
+        h_new = o * c_new / jnp.maximum(n_new, jnp.exp(-m_new))
+        return (c_new, n_new, h_new, m_new), h_new
+
+    xs = tuple(a.swapaxes(0, 1).astype(jnp.float32) for a in (xz, xi, xf, xo))
+    carry0 = (state["c"], state["n"], state["h"], state["m"])
+    carry, hs = jax.lax.scan(step, carry0, xs)
+    c, n, h, m = carry
+    return hs.swapaxes(0, 1), {"c": c, "n": n, "h": h, "m": m}
+
+
+def slstm_block(params, x, cfg, state=None):
+    b, s, d = x.shape
+    dt = x.dtype
+    xin = rmsnorm(params["norm"], x, cfg.norm_eps)
+    xz = xin @ params["w_z"].astype(dt)
+    xi = xin @ params["w_i"].astype(dt)
+    xf = xin @ params["w_f"].astype(dt)
+    xo = xin @ params["w_o"].astype(dt)
+    if state is None:
+        state = slstm_state_init(cfg, b)
+    hseq, new_state = slstm_scan(params, xz, xi, xf, xo, state, cfg.n_heads)
+    hseq = rmsnorm(params["out_norm"], hseq.astype(dt), cfg.norm_eps)
+    y = hseq @ params["w_down"].astype(dt)
+    return x + y, new_state

@@ -1,0 +1,29 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    OptState,
+    adam,
+    sgd,
+    apply_updates,
+    clip_by_global_norm,
+    global_norm,
+)
+from repro.optim.schedules import (
+    constant_schedule,
+    exponential_decay,
+    cosine_schedule,
+    warmup_cosine,
+)
+
+__all__ = [
+    "Optimizer",
+    "OptState",
+    "adam",
+    "sgd",
+    "apply_updates",
+    "clip_by_global_norm",
+    "global_norm",
+    "constant_schedule",
+    "exponential_decay",
+    "cosine_schedule",
+    "warmup_cosine",
+]

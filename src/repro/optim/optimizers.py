@@ -1,0 +1,85 @@
+"""Minimal optax-style optimizers built from scratch (optax is not available
+offline).  An ``Optimizer`` is an (init, update) pair over pytrees; ``update``
+takes (grads, state, step, lr) and returns (updates, new_state) so learning-
+rate schedules stay outside the state (important for the paper's per-round
+lr decay, supplementary Tables 1-3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, jax.Array, jax.Array], tuple[PyTree, PyTree]]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdamState:
+    mu: PyTree
+    nu: PyTree
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SgdState:
+    momentum: PyTree
+
+
+OptState = Any
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    """Adam (Kingma & Ba, 2015) — the paper's optimizer for all NN runs."""
+
+    def init(params: PyTree) -> AdamState:
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        return AdamState(mu=zeros, nu=jax.tree.map(jnp.zeros_like, params))
+
+    def update(grads, state: AdamState, step, lr):
+        step = step + 1  # 1-indexed for bias correction
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g), state.nu, grads)
+        bc1 = 1.0 - b1**step.astype(jnp.float32)
+        bc2 = 1.0 - b2**step.astype(jnp.float32)
+        updates = jax.tree.map(
+            lambda m, v: -lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps), mu, nu
+        )
+        return updates, AdamState(mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(momentum: float = 0.0) -> Optimizer:
+    def init(params: PyTree) -> SgdState:
+        return SgdState(momentum=jax.tree.map(jnp.zeros_like, params))
+
+    def update(grads, state: SgdState, step, lr):
+        del step
+        mom = jax.tree.map(lambda m, g: momentum * m + g, state.momentum, grads)
+        updates = jax.tree.map(lambda m: -lr * m, mom)
+        return updates, SgdState(momentum=mom)
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads)

@@ -1,0 +1,40 @@
+"""Learning-rate schedules.  The paper uses Adam with initial lr 1e-3 and a
+multiplicative decay of 0.99 per communication round (supplementary
+Tables 1-3) — that is ``exponential_decay(1e-3, 0.99)``."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+def constant_schedule(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def exponential_decay(lr: float, decay: float) -> Schedule:
+    """lr * decay^step (step = communication round in the paper)."""
+    return lambda step: jnp.asarray(lr, jnp.float32) * decay ** step.astype(jnp.float32)
+
+
+def cosine_schedule(lr: float, total_steps: int, final_frac: float = 0.0) -> Schedule:
+    def fn(step):
+        frac = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return lr * (final_frac + (1.0 - final_frac) * cos)
+
+    return fn
+
+
+def warmup_cosine(lr: float, warmup_steps: int, total_steps: int) -> Schedule:
+    cosine = cosine_schedule(lr, max(total_steps - warmup_steps, 1))
+
+    def fn(step):
+        step_f = step.astype(jnp.float32)
+        warm = lr * step_f / max(warmup_steps, 1)
+        return jnp.where(step_f < warmup_steps, warm, cosine(step - warmup_steps))
+
+    return fn

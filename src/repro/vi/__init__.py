@@ -1,0 +1,15 @@
+from repro.vi.bayes_by_backprop import (
+    free_energy,
+    free_energy_and_grad,
+    local_vi_steps,
+    mc_predict,
+    predictive_confidence,
+)
+
+__all__ = [
+    "free_energy",
+    "free_energy_and_grad",
+    "local_vi_steps",
+    "mc_predict",
+    "predictive_confidence",
+]

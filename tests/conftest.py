@@ -1,0 +1,9 @@
+import os
+
+# Smoke tests and benches must see 1 CPU device (the dry-run, and ONLY the
+# dry-run, sets --xla_force_host_platform_device_count=512 itself).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,121 @@
+"""Theorem 1 validation: the finite-Theta learning rule converges at (at
+least) the predicted exponential rate K(Theta), and the centrality/
+informativeness phenomenology of Remark 3 holds."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.discrete import (
+    run_social_learning,
+    social_learning_round,
+    wrong_belief_trajectory,
+)
+from repro.core.graphs import complete_w, ring_w, star_w
+from repro.core.theory import rate_K, stationary_distribution
+
+
+def _gaussian_loglik_sampler(key, means, noise_std, n_agents, batch=4):
+    """Agents observe y ~ N(means[j, true], noise); loglik over candidate
+    thetas: means[j, t].  means: [N, T] per-agent per-theta predicted mean
+    (theta*=index 0)."""
+    y = means[:, 0:1] + noise_std * jax.random.normal(key, (n_agents, batch))
+    # log l(y | theta) summed over batch, [N, T]
+    ll = -0.5 * jnp.sum(
+        ((y[:, :, None] - means[:, None, :]) / noise_std) ** 2, axis=1
+    )
+    return ll
+
+
+def _run(W, means, noise_std, rounds, seed=0):
+    n_agents, n_theta = means.shape
+
+    def sampler(k):
+        return _gaussian_loglik_sampler(k, means, noise_std, n_agents)
+
+    traj = run_social_learning(
+        jax.random.key(seed), jnp.asarray(W), sampler, rounds, n_theta
+    )
+    wrong = wrong_belief_trajectory(traj, jnp.arange(1, n_theta))
+    return np.asarray(wrong)
+
+
+def test_converges_to_truth_when_jointly_identifiable():
+    """No single agent can identify theta*, the network jointly can
+    (Assumption 2): agent 0 distinguishes theta1, agent 1 distinguishes
+    theta2."""
+    # rows: agents; cols: candidate thetas (0 = truth)
+    means = jnp.asarray(
+        [
+            [0.0, 1.0, 0.0],  # agent 0: theta2 indistinguishable from truth
+            [0.0, 0.0, 1.0],  # agent 1: theta1 indistinguishable
+        ]
+    )
+    W = np.array([[0.5, 0.5], [0.5, 0.5]])
+    wrong = _run(W, means, noise_std=1.0, rounds=300)
+    assert wrong[-1] < 1e-3, wrong[-1]
+
+
+def test_isolated_agents_fail_without_cooperation():
+    means = jnp.asarray([[0.0, 1.0, 0.0], [0.0, 0.0, 1.0]])
+    W = np.eye(2)
+    wrong = _run(W, means, noise_std=1.0, rounds=300)
+    assert wrong[-1] > 0.3  # the ambiguous theta keeps high belief
+
+
+def test_empirical_rate_close_to_K():
+    """Empirical decay slope of max wrong belief ~ K(Theta) (eq. 7)."""
+    n, t = 4, 3
+    rng = np.random.default_rng(0)
+    means = jnp.asarray(rng.normal(0, 1.0, (n, t)).astype(np.float32))
+    means = means.at[:, 0].set(0.0)
+    noise = 1.0
+    W = complete_w(n)
+    v = stationary_distribution(W)
+    # I_j(theta*, theta_t) = (mu_true - mu_t)^2/(2 s^2) * batch(=4)
+    I = np.zeros((n, 1, t - 1))
+    for j in range(n):
+        for tt in range(1, t):
+            I[j, 0, tt - 1] = 4 * float((means[j, 0] - means[j, tt]) ** 2) / (2 * noise**2)
+    K = rate_K(v, I)
+    rounds = 150
+    wrong = _run(W, means, noise, rounds, seed=1)
+    # fit slope on log-beliefs over the tail
+    tail = np.arange(rounds // 3, rounds)
+    valid = wrong[tail] > 1e-30
+    slope = -np.polyfit(tail[valid], np.log(wrong[tail][valid]), 1)[0]
+    # Theorem 1: wrong belief < exp(-n(K - eps)); empirically slope >= ~K
+    assert slope > 0.5 * K, (slope, K)
+    assert wrong[-1] < wrong[0]
+
+
+def test_centrality_speeds_convergence():
+    """Remark 3: informative agent at the CENTER of a star converges faster
+    than the same agent at an edge (compare log-belief decay, several
+    seeds — the effect is about rates, not single-run endpoints)."""
+    n = 5
+    means = np.zeros((n, 2), np.float32)
+    rounds = 25  # before float32 underflow (K*rounds stays representable)
+
+    def decay_slope(idx, seed):
+        m = means.copy()
+        m[idx, 1] = 1.0  # only agent idx distinguishes theta1
+        W = star_w(n - 1, a=0.5)  # center has high centrality
+        wrong = _run(W, jnp.asarray(m), 1.0, rounds, seed)
+        t = np.arange(5, rounds)
+        lb = np.log(np.maximum(wrong[t], 1e-40))
+        return -np.polyfit(t, lb, 1)[0]
+
+    s_center = np.mean([decay_slope(0, s) for s in range(5)])
+    s_edge = np.mean([decay_slope(2, s) for s in range(5)])
+    # K_center = 0.77, K_edge = 0.31 for this setup: clear separation
+    assert s_center > s_edge * 1.3, (s_center, s_edge)
+
+
+def test_round_preserves_normalization():
+    key = jax.random.key(0)
+    logq = jnp.log(jnp.asarray([[0.2, 0.5, 0.3], [0.6, 0.2, 0.2]]))
+    loglik = jax.random.normal(key, (2, 3))
+    W = jnp.asarray(ring_w(2))
+    logq2, logb = social_learning_round(logq, loglik, W)
+    np.testing.assert_allclose(np.exp(logq2).sum(-1), 1.0, rtol=1e-5)
+    np.testing.assert_allclose(np.exp(logb).sum(-1), 1.0, rtol=1e-5)

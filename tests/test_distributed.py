@@ -1,0 +1,201 @@
+"""Multi-device numeric tests for the production distribution layer.
+
+These run in SUBPROCESSES with ``--xla_force_host_platform_device_count=8``
+(a (2, 2, 2) pod/data/model mini-mesh) so the main pytest process keeps its
+single CPU device.  They verify that the SHARDED production steps compute
+the same numbers as the unsharded reference:
+
+* eq.-(6) consensus over a sharded pod axis == single-device consensus
+* the bf16 ppermute consensus == f32 einsum consensus up to bf16 rounding
+* one fused train round on the mini-mesh == the same round on one device
+"""
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_PRELUDE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+"""
+
+
+def _run(body: str) -> None:
+    code = _PRELUDE + textwrap.dedent(body)
+    proc = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "JAX_PLATFORMS": "cpu",
+             "HOME": "/root"},
+        cwd="/root/repo",
+        timeout=420,
+    )
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+
+
+@pytest.mark.slow
+def test_consensus_einsum_sharded_matches_unsharded():
+    _run("""
+    from repro.core.posterior import GaussianPosterior, consensus_all_agents
+    a, p = 2, 4096
+    rng = np.random.default_rng(0)
+    mean = jnp.asarray(rng.normal(size=(a, p)), jnp.float32)
+    rho = jnp.asarray(rng.normal(size=(a, p)) * 0.3, jnp.float32)
+    W = jnp.asarray([[0.7, 0.3], [0.4, 0.6]], jnp.float32)
+    posts = GaussianPosterior(mean={"w": mean}, rho={"w": rho})
+    ref = consensus_all_agents(posts, W)
+
+    sh = NamedSharding(mesh, P("pod", ("data", "model")))
+    posts_sh = GaussianPosterior(
+        mean={"w": jax.device_put(mean, sh)}, rho={"w": jax.device_put(rho, sh)}
+    )
+    with mesh:
+        out = jax.jit(lambda q: consensus_all_agents(q, W))(posts_sh)
+    np.testing.assert_allclose(np.asarray(out.mean["w"]), np.asarray(ref.mean["w"]),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out.rho["w"]), np.asarray(ref.rho["w"]),
+                               rtol=1e-4, atol=1e-4)
+    print("OK")
+    """)
+
+
+@pytest.mark.slow
+def test_consensus_ppermute_matches_einsum():
+    _run("""
+    from repro.core.posterior import GaussianPosterior, consensus_all_agents
+    from repro.launch.consensus_opt import consensus_ppermute_pod
+    a, p = 2, 2048
+    rng = np.random.default_rng(1)
+    mean = jnp.asarray(rng.normal(size=(a, p)), jnp.float32)
+    rho = jnp.asarray(rng.normal(size=(a, p)) * 0.3, jnp.float32)
+    W = jnp.asarray([[0.6, 0.4], [0.25, 0.75]], jnp.float32)
+    sh = NamedSharding(mesh, P("pod", ("data", "model")))
+    posts = GaussianPosterior(
+        mean={"w": jax.device_put(mean, sh)}, rho={"w": jax.device_put(rho, sh)}
+    )
+    shardings = GaussianPosterior(mean={"w": sh}, rho={"w": sh})
+    ref = consensus_all_agents(posts, W)
+    with mesh:
+        out = jax.jit(lambda q: consensus_ppermute_pod(
+            q, W, mesh, shardings, wire_dtype=jnp.bfloat16))(posts)
+    # bf16 wire: ~3 decimal digits on the exchanged sufficient statistics
+    np.testing.assert_allclose(np.asarray(out.mean["w"]), np.asarray(ref.mean["w"]),
+                               rtol=2e-2, atol=2e-2)
+    # f32 wire: exact
+    with mesh:
+        out32 = jax.jit(lambda q: consensus_ppermute_pod(
+            q, W, mesh, shardings, wire_dtype=jnp.float32))(posts)
+    np.testing.assert_allclose(np.asarray(out32.mean["w"]), np.asarray(ref.mean["w"]),
+                               rtol=1e-5, atol=1e-5)
+    print("OK")
+    """)
+
+
+@pytest.mark.slow
+def test_train_round_step_sharded_matches_single_device():
+    _run("""
+    from repro.configs import get_config
+    from repro.core.graphs import complete_w
+    from repro.launch.steps import init_train_state, make_train_round_step
+    from repro.launch.sharding import param_shardings
+    from repro.data.pipeline import make_lm_batch_sampler
+    from repro.optim import adam
+
+    cfg = get_config("repro-100m").reduced()
+    a = 2
+    opt = adam()
+    W = jnp.asarray(complete_w(a))
+    step = make_train_round_step(cfg, W, opt=opt, remat=False, kl_scale=1e-5)
+    state = init_train_state(jax.random.key(0), cfg, a, opt)
+    batch = make_lm_batch_sampler(cfg.vocab_size, 4, 32, n_agents=a)(
+        jax.random.key(1), 0)
+    key = jax.random.key(2)
+    ref_state, ref_m = jax.jit(step)(state, batch, key)
+
+    shardings = param_shardings(jax.eval_shape(lambda: state), mesh,
+                                agent_leading=True)
+    state_sh = jax.tree.map(jax.device_put, state, shardings)
+    with mesh:
+        out_state, out_m = jax.jit(step)(state_sh, batch, key)
+    np.testing.assert_allclose(float(jnp.mean(out_m["loss"])),
+                               float(jnp.mean(ref_m["loss"])), rtol=1e-4)
+    l_ref = jax.tree.leaves(ref_state.posterior.mean)[0]
+    l_out = jax.tree.leaves(out_state.posterior.mean)[0]
+    # Adam turns bf16 reduction-order noise on ~0 grads into +-lr sign flips
+    # (|delta| <= 2*lr = 2e-3) on a tiny fraction of elements; bound both the
+    # per-element deviation and how many elements deviate at all.
+    diff = np.abs(np.asarray(l_out) - np.asarray(l_ref))
+    assert diff.max() <= 2.5e-3, diff.max()
+    assert (diff > 1e-4).mean() < 5e-3, (diff > 1e-4).mean()
+    print("OK")
+    """)
+
+
+@pytest.mark.slow
+def test_decode_step_sharded_matches_single_device():
+    _run("""
+    from repro.configs import get_config
+    from repro.launch.steps import make_agent_cache, make_decode_step, make_prefill_step
+    from repro.launch.sharding import cache_shardings, param_shardings
+    from repro.models import init_params
+
+    cfg = get_config("qwen3-8b").reduced()
+    a, b, s = 2, 4, 8
+    params = jax.vmap(lambda k: init_params(cfg, k))(
+        jax.random.split(jax.random.key(0), a))
+    toks = jax.random.randint(jax.random.key(1), (a, b, s), 0, cfg.vocab_size)
+    prefill = make_prefill_step(cfg)
+    decode = make_decode_step(cfg)
+    cache = make_agent_cache(cfg, a, b, capacity=s + 2, dtype=jnp.float32)
+    lg_ref, cache_ref = jax.jit(prefill)(params, {"tokens": toks}, cache)
+    d_ref, _ = jax.jit(decode)(params, toks[:, :, :1],
+                               jnp.asarray(s, jnp.int32), cache_ref, None)
+
+    psh = param_shardings(jax.eval_shape(lambda: params), mesh, agent_leading=True)
+    csh = cache_shardings(jax.eval_shape(lambda: cache), mesh, agent_leading=True)
+    params_sh = jax.tree.map(jax.device_put, params, psh)
+    cache_sh = jax.tree.map(jax.device_put, cache, csh)
+    tok_sh = jax.device_put(toks, NamedSharding(mesh, P("pod", "data", None)))
+    with mesh:
+        lg, cache2 = jax.jit(prefill)(params_sh, {"tokens": tok_sh}, cache_sh)
+        d, _ = jax.jit(decode)(params_sh, tok_sh[:, :, :1],
+                               jnp.asarray(s, jnp.int32), cache2, None)
+    np.testing.assert_allclose(np.asarray(lg, np.float32),
+                               np.asarray(lg_ref, np.float32), atol=5e-2, rtol=5e-2)
+    np.testing.assert_allclose(np.asarray(d, np.float32),
+                               np.asarray(d_ref, np.float32), atol=5e-2, rtol=5e-2)
+    print("OK")
+    """)
+
+
+@pytest.mark.slow
+def test_expert_parallel_matches_reference():
+    _run("""
+    import dataclasses
+    from repro.configs import get_config
+    from repro.models.moe import moe_ffn, moe_init
+    from repro.launch.expert_parallel import moe_ffn_expert_parallel
+
+    mesh2 = jax.make_mesh((2, 4), ("data", "model"))
+    cfg = dataclasses.replace(
+        get_config("olmoe-1b-7b").reduced(), n_experts=8, top_k=2,
+        capacity_factor=16.0,  # no drops: exact comparison
+    )
+    p = moe_init(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 16, cfg.d_model))
+    y_ref, aux_ref = moe_ffn(p, x, cfg)
+    with mesh2:
+        y_ep, aux_ep = jax.jit(
+            lambda p_, x_: moe_ffn_expert_parallel(p_, x_, cfg, mesh2)
+        )(p, x)
+    np.testing.assert_allclose(np.asarray(y_ep, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               atol=2e-3, rtol=2e-3)
+    assert np.isclose(float(aux_ep), float(aux_ref), rtol=0.3)
+    print("OK")
+    """)

@@ -1,0 +1,125 @@
+"""Graph/W builders + Theorem 1 quantities, validated against the numbers
+the paper itself reports."""
+import numpy as np
+import pytest
+
+from repro.core.graphs import (
+    bidirectional_ring_w,
+    check_w,
+    complete_w,
+    erdos_w,
+    grid_w,
+    max_in_degree,
+    neighbor_lists,
+    ring_w,
+    star_w,
+    time_varying_star_schedule,
+    torus_w,
+)
+from repro.core.theory import (
+    lambda_max,
+    rate_K,
+    sample_complexity,
+    spectral_gap,
+    stationary_distribution,
+)
+
+
+def test_star_centrality_matches_paper():
+    """Supplementary 1.4.1: a in [0.1,0.2,0.3,0.5,0.7] ->
+    v_center in [0.1, 0.18, 0.25, 0.36, 0.44]."""
+    expected = {0.1: 0.10, 0.2: 0.18, 0.3: 0.25, 0.5: 0.36, 0.7: 0.44}
+    for a, v_exp in expected.items():
+        v = stationary_distribution(star_w(8, a))
+        assert abs(v[0] - v_exp) < 0.01, (a, v[0])
+
+
+def test_star_centrality_monotone_in_a():
+    vs = [stationary_distribution(star_w(8, a))[0] for a in (0.1, 0.3, 0.5, 0.7, 0.9)]
+    assert all(v2 > v1 for v1, v2 in zip(vs, vs[1:]))
+
+
+def test_grid_centrality_proportional_to_degree():
+    """Paper Sec 4.2.2: with W_ij = 1/|N(i)| the centrality of agent i is
+    proportional to its degree."""
+    W = grid_w(3, 3)
+    v = stationary_distribution(W)
+    deg = np.array([len(nb) for nb in neighbor_lists(W)])
+    ratio = v / deg
+    assert np.allclose(ratio, ratio[0], rtol=1e-6)
+    # center (position 4) is the most central
+    assert np.argmax(v) == 4
+
+
+@pytest.mark.parametrize(
+    "builder",
+    [
+        lambda: star_w(8, 0.5),
+        lambda: grid_w(3, 3),
+        lambda: ring_w(7),
+        lambda: bidirectional_ring_w(6),
+        lambda: torus_w(4, 4),
+        lambda: complete_w(5),
+        lambda: erdos_w(10, 0.4, seed=3),
+    ],
+)
+def test_builders_valid(builder):
+    W = builder()
+    check_w(W)
+    v = stationary_distribution(W)
+    assert np.all(v > 0) and abs(v.sum() - 1) < 1e-9
+    assert 0.0 <= lambda_max(W) < 1.0  # aperiodic + irreducible
+
+
+def test_stationarity_equation():
+    W = star_w(8, 0.3)
+    v = stationary_distribution(W)
+    np.testing.assert_allclose(v @ W, v, atol=1e-10)
+
+
+def test_spectral_gap_complete_graph_is_one():
+    assert abs(spectral_gap(complete_w(6)) - 1.0) < 1e-9
+
+
+def test_time_varying_schedule_union_connected():
+    mats = time_varying_star_schedule(25, 5, a=0.5)
+    assert len(mats) == 5
+    for W in mats:
+        assert np.allclose(W.sum(1), 1.0)
+
+
+def test_rate_K_weights_informative_central_agents():
+    """Remark 3: K grows when the informative agent is more central."""
+    W = star_w(8, 0.5)
+    v = stationary_distribution(W)
+    n = 9
+    # agent 0 (center) can distinguish; others cannot
+    I_center_informed = np.zeros((n, 1, 1))
+    I_center_informed[0] = 1.0
+    I_edge_informed = np.zeros((n, 1, 1))
+    I_edge_informed[3] = 1.0
+    assert rate_K(v, I_center_informed) > rate_K(v, I_edge_informed)
+
+
+def test_rate_K_increases_with_centrality_a():
+    n = 9
+    I = np.zeros((n, 1, 1))
+    I[0] = 1.0  # center informative
+    ks = []
+    for a in (0.1, 0.3, 0.5, 0.7):
+        v = stationary_distribution(star_w(8, a))
+        ks.append(rate_K(v, I))
+    assert all(k2 > k1 for k1, k2 in zip(ks, ks[1:]))
+
+
+def test_sample_complexity_scales_with_gap():
+    Wa = star_w(8, 0.5)
+    Wb = complete_w(9)
+    na = sample_complexity(9, 10, 0.05, 0.1, 2.0, Wa)
+    nb = sample_complexity(9, 10, 0.05, 0.1, 2.0, Wb)
+    assert nb < na  # larger spectral gap -> fewer samples
+
+
+def test_max_in_degree():
+    assert max_in_degree(star_w(8, 0.5)) == 9  # center listens to everyone
+    assert max_in_degree(ring_w(5)) == 2

@@ -1,0 +1,214 @@
+"""Per-architecture smoke tests (reduced configs: 2 layers, d_model<=256,
+<=4 experts) + family-level numerical consistency checks."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config, list_archs
+from repro.models import decode_step, forward, init_cache, init_params, nll_loss
+from repro.optim import adam, apply_updates
+
+ASSIGNED = [a for a in list_archs() if a != "repro-100m"]
+
+
+def _batch(cfg, b=2, s=16, key=jax.random.key(0)):
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "targets": jnp.roll(toks, -1, axis=1)}
+    if cfg.frontend == "audio_stub":
+        batch["frames"] = (
+            jnp.ones((b, cfg.encoder_seq, cfg.d_model), jnp.float32) * 0.1
+        )
+    if cfg.frontend == "vision_stub":
+        batch["patches"] = (
+            jnp.ones((b, cfg.n_patches, cfg.d_model), jnp.float32) * 0.1
+        )
+        batch["targets"] = jax.random.randint(
+            key, (b, s + cfg.n_patches), 0, cfg.vocab_size
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_arch_smoke_forward_shapes_and_no_nans(arch):
+    cfg = get_config(arch).reduced()
+    assert cfg.n_layers <= 2 and cfg.d_model <= 512
+    assert cfg.n_experts <= 4
+    params = init_params(cfg, jax.random.key(0))
+    batch = _batch(cfg)
+    logits, _, aux = forward(
+        params, cfg, batch["tokens"],
+        frames=batch.get("frames"), patches=batch.get("patches"),
+    )
+    s_total = 16 + (cfg.n_patches if cfg.frontend == "vision_stub" else 0)
+    assert logits.shape == (2, s_total, cfg.padded_vocab)
+    assert not np.any(np.isnan(np.asarray(logits)))
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_arch_smoke_one_train_step(arch):
+    """One Adam step on the NLL reduces loss on the same batch (sanity of
+    grads through every block kind)."""
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, jax.random.key(1))
+    batch = _batch(cfg, key=jax.random.key(2))
+
+    def loss_fn(p):
+        nll, aux = nll_loss(p, cfg, batch)
+        return nll / batch["targets"].size + 0.01 * aux
+
+    loss0, grads = jax.value_and_grad(loss_fn)(params)
+    assert np.isfinite(float(loss0))
+    gnorm = sum(float(jnp.sum(jnp.square(g))) for g in jax.tree.leaves(grads))
+    assert gnorm > 0 and np.isfinite(gnorm)
+    opt = adam()
+    upd, _ = opt.update(grads, opt.init(params), jnp.asarray(0), jnp.asarray(1e-2))
+    loss1 = loss_fn(apply_updates(params, upd))
+    assert float(loss1) < float(loss0)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "xlstm-1.3b", "recurrentgemma-9b",
+                                  "granite-20b", "whisper-tiny"])
+def test_decode_matches_forward(arch):
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, jax.random.key(1))
+    b, s = 2, 12
+    toks = jax.random.randint(jax.random.key(2), (b, s), 0, cfg.vocab_size)
+    fr = (jnp.ones((b, cfg.encoder_seq, cfg.d_model)) * 0.1
+          if cfg.is_encdec else None)
+    full, _, _ = forward(params, cfg, toks, frames=fr)
+    cache = init_cache(cfg, b, capacity=s, dtype=jnp.float32)
+    outs = []
+    for t in range(s):
+        lg, cache = decode_step(
+            params, cfg, toks[:, t : t + 1], jnp.asarray(t), cache,
+            enc_out_frames=fr,
+        )
+        outs.append(lg)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(dec, full, atol=5e-2, rtol=5e-2)
+
+
+def test_prefill_then_decode_continuation():
+    """Prefill builds a cache the decode path can continue from."""
+    cfg = get_config("qwen3-8b").reduced()
+    params = init_params(cfg, jax.random.key(3))
+    b, s = 2, 10
+    toks = jax.random.randint(jax.random.key(4), (b, s + 2), 0, cfg.vocab_size)
+    full, _, _ = forward(params, cfg, toks)
+    cache = init_cache(cfg, b, capacity=s + 2, dtype=jnp.float32)
+    _, cache, _ = forward(params, cfg, toks[:, :s], cache=cache)
+    lg1, cache = decode_step(params, cfg, toks[:, s : s + 1], jnp.asarray(s), cache)
+    lg2, cache = decode_step(
+        params, cfg, toks[:, s + 1 : s + 2], jnp.asarray(s + 1), cache
+    )
+    np.testing.assert_allclose(lg1[:, 0], full[:, s], atol=5e-2, rtol=5e-2)
+    np.testing.assert_allclose(lg2[:, 0], full[:, s + 1], atol=5e-2, rtol=5e-2)
+
+
+def test_sliding_window_ring_buffer_decode():
+    """SWA ring-buffer cache (long-context decode) == full-cache decode with
+    window masking."""
+    cfg = dataclasses.replace(
+        get_config("qwen3-8b").reduced(), sliding_window=8,
+        pattern=("local_attn", "local_attn"),
+    )
+    cfg.validate()
+    params = init_params(cfg, jax.random.key(5))
+    b, s = 1, 24
+    toks = jax.random.randint(jax.random.key(6), (b, s), 0, cfg.vocab_size)
+    # reference: full forward with window masking
+    full, _, _ = forward(params, cfg, toks)
+    # ring buffer: capacity == window
+    cache = init_cache(cfg, b, capacity=8, dtype=jnp.float32)
+    outs = []
+    for t in range(s):
+        lg, cache = decode_step(params, cfg, toks[:, t : t + 1], jnp.asarray(t), cache)
+        outs.append(lg)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(dec, full, atol=5e-2, rtol=5e-2)
+
+
+def test_window_override_matches_local_attn():
+    """window_override on 'attn' == a config with local_attn of that window."""
+    base = get_config("deepseek-7b").reduced()
+    params = init_params(base, jax.random.key(7))
+    toks = jax.random.randint(jax.random.key(8), (2, 20), 0, base.vocab_size)
+    out_override, _, _ = forward(params, base, toks, window_override=6)
+    local = dataclasses.replace(base, pattern=("local_attn", "local_attn"),
+                                sliding_window=6)
+    # same weights, reindexed under the local_attn kind
+    params_local = dict(params)
+    params_local["stacks"] = {"local_attn": params["stacks"]["attn"]}
+    out_local, _, _ = forward(params_local, local, toks)
+    np.testing.assert_allclose(out_override, out_local, atol=1e-5, rtol=1e-5)
+
+
+def test_moe_capacity_factor_effect():
+    """Higher capacity factor -> fewer dropped tokens -> different output;
+    at cf large the dispatch is exact vs the dense reference."""
+    from repro.models.moe import moe_ffn, moe_init
+
+    cfg = dataclasses.replace(
+        get_config("olmoe-1b-7b").reduced(), capacity_factor=16.0
+    )
+    p = moe_init(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 8, cfg.d_model))
+    y, aux = moe_ffn(p, x, cfg)
+
+    def dense_ref(p, x):
+        b, s, d = x.shape
+        xt = x.reshape(-1, d)
+        probs = jax.nn.softmax(xt @ p["router"], -1)
+        w, idx = jax.lax.top_k(probs, cfg.top_k)
+        w = w / w.sum(-1, keepdims=True)
+        g = jnp.einsum("td,edf->tef", xt, p["w_gate"])
+        u = jnp.einsum("td,edf->tef", xt, p["w_up"])
+        yo = jnp.einsum("tef,efd->ted", jax.nn.silu(g) * u, p["w_down"])
+        sel = jnp.take_along_axis(yo, idx[:, :, None], axis=1)
+        return (sel * w[:, :, None]).sum(1).reshape(b, s, d)
+
+    np.testing.assert_allclose(y, dense_ref(p, x), atol=1e-4, rtol=1e-4)
+    assert float(aux) > 0
+
+
+def test_vocab_padding_multiple_of_256():
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        assert cfg.padded_vocab % 256 == 0
+        assert cfg.padded_vocab >= cfg.vocab_size
+
+
+def test_vlm_prefill_then_decode():
+    """Pixtral path: patch embeddings prepended in prefill; decode continues
+    from the cache at post-patch positions."""
+    cfg = get_config("pixtral-12b").reduced()
+    params = init_params(cfg, jax.random.key(9))
+    b, s = 2, 8
+    toks = jax.random.randint(jax.random.key(10), (b, s + 2), 0, cfg.vocab_size)
+    patches = jax.random.normal(jax.random.key(11), (b, cfg.n_patches, cfg.d_model)) * 0.1
+    full, _, _ = forward(params, cfg, toks, patches=patches)
+    total0 = cfg.n_patches + s
+    cache = init_cache(cfg, b, capacity=cfg.n_patches + s + 2, dtype=jnp.float32)
+    _, cache, _ = forward(params, cfg, toks[:, :s], patches=patches, cache=cache)
+    lg, cache = decode_step(params, cfg, toks[:, s : s + 1], jnp.asarray(total0), cache)
+    np.testing.assert_allclose(lg[:, 0], full[:, total0], atol=5e-2, rtol=5e-2)
+
+
+def test_encdec_decode_with_frames():
+    """Whisper decode consumes fresh encoder output each step (cross-attn)."""
+    cfg = get_config("whisper-tiny").reduced()
+    params = init_params(cfg, jax.random.key(12))
+    b = 2
+    fr = jax.random.normal(jax.random.key(13), (b, cfg.encoder_seq, cfg.d_model)) * 0.1
+    cache = init_cache(cfg, b, capacity=8, dtype=jnp.float32)
+    tok = jnp.zeros((b, 1), jnp.int32)
+    for t in range(4):
+        lg, cache = decode_step(params, cfg, tok, jnp.asarray(t), cache,
+                                enc_out_frames=fr)
+        assert lg.shape == (b, 1, cfg.padded_vocab)
+        assert not np.any(np.isnan(np.asarray(lg, np.float32)))
+        tok = jnp.argmax(lg[..., : cfg.vocab_size], -1).astype(jnp.int32)

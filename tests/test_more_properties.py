@@ -1,0 +1,129 @@
+"""Additional property-based tests for the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.discrete import local_bayes_update, social_learning_round
+from repro.core.graphs import bidirectional_ring_w, complete_w
+from repro.core.posterior import (
+    GaussianPosterior,
+    consensus_all_agents,
+    init_posterior,
+    softplus,
+)
+from repro.core.theory import stationary_distribution
+
+
+def _posts(n, p, seed):
+    rng = np.random.default_rng(seed)
+    return GaussianPosterior(
+        mean={"w": jnp.asarray(rng.normal(size=(n, p)), jnp.float32)},
+        rho={"w": jnp.asarray(rng.normal(size=(n, p)) * 0.3, jnp.float32)},
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(3, 6), st.integers(1, 12), st.integers(0, 50))
+def test_consensus_permutation_equivariant(n, p, seed):
+    """Relabeling agents commutes with consensus: C(P W P^T, P q) = P C(W, q)."""
+    rng = np.random.default_rng(seed)
+    posts = _posts(n, p, seed)
+    W = rng.random((n, n)) + 0.1
+    W = W / W.sum(1, keepdims=True)
+    perm = rng.permutation(n)
+    Pm = np.eye(n)[perm]
+    posts_p = GaussianPosterior(
+        mean={"w": posts.mean["w"][perm]}, rho={"w": posts.rho["w"][perm]}
+    )
+    # consensus(permuted inputs, permuted W) == permuted consensus(inputs, W)
+    outp = consensus_all_agents(posts_p, jnp.asarray(Pm @ W @ Pm.T, jnp.float32))
+    ref = consensus_all_agents(posts, jnp.asarray(W, jnp.float32))
+    np.testing.assert_allclose(
+        np.asarray(outp.mean["w"]), np.asarray(ref.mean["w"])[perm],
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(3, 6), st.integers(0, 30))
+def test_repeated_consensus_reaches_agreement(n, seed):
+    """Iterating eq. (6) with a fixed primitive W drives the network to
+    agreement (spread -> 0) — the paper's consensus-contraction property."""
+    posts = _posts(n, 8, seed)
+    W = jnp.asarray(complete_w(n) * 0.5 + bidirectional_ring_w(n) * 0.5)
+    spread0 = float(jnp.sum(jnp.var(posts.mean["w"], axis=0)))
+    for _ in range(60):
+        posts = consensus_all_agents(posts, W)
+    spread = float(jnp.sum(jnp.var(posts.mean["w"], axis=0)))
+    assert spread < spread0 * 1e-4 + 1e-10
+
+
+def test_repeated_consensus_fixed_point_is_v_weighted():
+    """The agreement point of pure averaging-of-log-densities has precision
+    prec* = sum_i v_i prec_i under repeated application (v = centrality)."""
+    n, p = 5, 6
+    posts = _posts(n, p, 3)
+    Wnp = complete_w(n) * 0.3 + bidirectional_ring_w(n) * 0.7
+    v = stationary_distribution(Wnp)
+    prec0 = 1.0 / np.square(np.asarray(softplus(posts.rho["w"])))
+    expected = np.einsum("i,ip->p", v, prec0)
+    W = jnp.asarray(Wnp)
+    for _ in range(200):
+        posts = consensus_all_agents(posts, W)
+    prec = 1.0 / np.square(np.asarray(softplus(posts.rho["w"])))
+    np.testing.assert_allclose(prec[0], expected, rtol=1e-3)
+    np.testing.assert_allclose(prec, np.broadcast_to(expected, prec.shape), rtol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 5), st.integers(2, 6),
+       st.floats(-20.0, 20.0, allow_nan=False), st.integers(0, 40))
+def test_discrete_update_shift_invariant(n, t, shift, seed):
+    """Adding a constant to every log-likelihood (per agent) must not change
+    the posterior (normalization invariance of eq. 2)."""
+    rng = np.random.default_rng(seed)
+    logq = jnp.log(jax.nn.softmax(jnp.asarray(rng.normal(size=(n, t)), jnp.float32)))
+    loglik = jnp.asarray(rng.normal(size=(n, t)), jnp.float32)
+    b1 = local_bayes_update(logq, loglik)
+    b2 = local_bayes_update(logq, loglik + shift)
+    np.testing.assert_allclose(np.asarray(b1), np.asarray(b2), atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 5), st.integers(2, 5), st.integers(0, 30))
+def test_round_with_identity_w_is_pure_bayes(n, t, seed):
+    """W = I: the decentralized round degenerates to independent Bayes."""
+    rng = np.random.default_rng(seed)
+    logq = jnp.log(jax.nn.softmax(jnp.asarray(rng.normal(size=(n, t)), jnp.float32)))
+    loglik = jnp.asarray(rng.normal(size=(n, t)), jnp.float32)
+    logq2, logb = social_learning_round(logq, loglik, jnp.eye(n))
+    np.testing.assert_allclose(np.asarray(logq2), np.asarray(logb), atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.floats(0.01, 2.0), st.integers(1, 64), st.integers(0, 20))
+def test_init_posterior_sigma(sigma, p, seed):
+    post = init_posterior({"w": jnp.zeros((p,))}, init_sigma=float(sigma))
+    got = np.asarray(softplus(post.rho["w"]))
+    np.testing.assert_allclose(got, sigma, rtol=1e-4)
+
+
+def test_moe_dropless_at_high_capacity_property():
+    """At capacity_factor high enough, NO assignment is dropped: the MoE
+    output is independent of capacity_factor beyond that point."""
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.models.moe import moe_ffn, moe_init
+
+    base = get_config("olmoe-1b-7b").reduced()
+    p = moe_init(jax.random.key(0), base)
+    x = jax.random.normal(jax.random.key(1), (2, 8, base.d_model))
+    outs = []
+    for cf in (8.0, 16.0, 64.0):
+        cfg = dataclasses.replace(base, capacity_factor=cf)
+        y, _ = moe_ffn(p, x, cfg)
+        outs.append(np.asarray(y, np.float32))
+    np.testing.assert_allclose(outs[0], outs[1], atol=1e-5)
+    np.testing.assert_allclose(outs[1], outs[2], atol=1e-5)

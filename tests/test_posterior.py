@@ -1,0 +1,170 @@
+"""Property-based tests for the paper's core objects: mean-field/full-cov
+Gaussian posteriors and the eq.-(6) consensus operator."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.posterior import (
+    FullCovGaussian,
+    GaussianPosterior,
+    consensus_all_agents,
+    consensus_full_cov,
+    consensus_mean_field,
+    init_posterior,
+    kl_gaussian,
+    linreg_bayes_update,
+    softplus,
+    softplus_inv,
+)
+
+finite_f = st.floats(-5.0, 5.0, allow_nan=False, allow_infinity=False)
+pos_f = st.floats(0.05, 3.0, allow_nan=False)
+
+
+def _posts(n, p, seed=0, sigma_scale=1.0):
+    rng = np.random.default_rng(seed)
+    mean = jnp.asarray(rng.normal(size=(n, p)), jnp.float32)
+    rho = jnp.asarray(rng.normal(size=(n, p)) * 0.3 * sigma_scale, jnp.float32)
+    return GaussianPosterior(mean={"w": mean}, rho={"w": rho})
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(0.01, 10.0))
+def test_softplus_inverse_roundtrip(y):
+    x = softplus_inv(jnp.asarray(y, jnp.float32))
+    assert np.isclose(float(softplus(x)), y, rtol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 6), st.integers(1, 40), st.integers(0, 100))
+def test_consensus_identity_w(n, p, seed):
+    """W = I must leave every agent's posterior unchanged."""
+    posts = _posts(n, p, seed)
+    out = consensus_all_agents(posts, jnp.eye(n))
+    np.testing.assert_allclose(out.mean["w"], posts.mean["w"], rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(out.rho["w"], posts.rho["w"], rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 6), st.integers(1, 20), st.integers(0, 100))
+def test_consensus_consensus_fixed_point(n, p, seed):
+    """If all agents hold the SAME posterior, any row-stochastic W fixes it."""
+    rng = np.random.default_rng(seed)
+    one = rng.normal(size=(1, p))
+    posts = GaussianPosterior(
+        mean={"w": jnp.asarray(np.repeat(one, n, 0), jnp.float32)},
+        rho={"w": jnp.full((n, p), -1.0, jnp.float32)},
+    )
+    W = rng.random((n, n)) + 0.1
+    W = jnp.asarray(W / W.sum(1, keepdims=True), jnp.float32)
+    out = consensus_all_agents(posts, W)
+    np.testing.assert_allclose(out.mean["w"], posts.mean["w"], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(out.rho["w"], posts.rho["w"], rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 5), st.integers(1, 16), st.integers(0, 50))
+def test_consensus_precision_is_convex_combo(n, p, seed):
+    """Output precision = W-weighted combination => bounded by neighbor
+    min/max precision (positivity + boundedness invariant)."""
+    posts = _posts(n, p, seed)
+    rng = np.random.default_rng(seed + 1)
+    W = rng.random((n, n)) + 0.05
+    W = jnp.asarray(W / W.sum(1, keepdims=True), jnp.float32)
+    out = consensus_all_agents(posts, W)
+    prec_in = 1.0 / np.square(np.asarray(softplus(posts.rho["w"])))
+    prec_out = 1.0 / np.square(np.asarray(softplus(out.rho["w"])))
+    assert np.all(prec_out > 0)
+    assert np.all(prec_out <= prec_in.max(0) * (1 + 1e-4))
+    assert np.all(prec_out >= prec_in.min(0) * (1 - 1e-4))
+
+
+def test_consensus_matches_log_pool_numerically():
+    """Eq. (4) log-linear pooling of Gaussian pdfs == eq. (6) closed form,
+    checked by numeric integration on a 1-d grid."""
+    mus = np.array([0.5, -1.0, 2.0])
+    sigmas = np.array([0.7, 1.3, 0.4])
+    w = np.array([0.2, 0.5, 0.3])
+    grid = np.linspace(-10, 10, 20001)
+    logp = sum(
+        wi * (-0.5 * ((grid - m) / s) ** 2 - np.log(s))
+        for wi, m, s in zip(w, mus, sigmas)
+    )
+    p = np.exp(logp - logp.max())
+    p /= np.trapezoid(p, grid)
+    mean_num = np.trapezoid(p * grid, grid)
+    var_num = np.trapezoid(p * (grid - mean_num) ** 2, grid)
+
+    posts = GaussianPosterior(
+        mean={"w": jnp.asarray(mus[:, None], jnp.float32)},
+        rho={"w": jnp.asarray(softplus_inv(jnp.asarray(sigmas))[:, None], jnp.float32)},
+    )
+    out = consensus_mean_field(posts, jnp.asarray(w, jnp.float32))
+    sigma_out = float(softplus(out.rho["w"][0]))
+    assert np.isclose(float(out.mean["w"][0]), mean_num, atol=1e-3)
+    assert np.isclose(sigma_out**2, var_num, rtol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(finite_f, pos_f, finite_f, pos_f)
+def test_kl_nonnegative_and_zero_iff_equal(m1, s1, m2, s2):
+    q = GaussianPosterior(
+        mean={"w": jnp.asarray([m1], jnp.float32)},
+        rho={"w": softplus_inv(jnp.asarray([s1], jnp.float32))},
+    )
+    p = GaussianPosterior(
+        mean={"w": jnp.asarray([m2], jnp.float32)},
+        rho={"w": softplus_inv(jnp.asarray([s2], jnp.float32))},
+    )
+    kl = float(kl_gaussian(q, p))
+    assert kl >= -1e-5
+    assert np.isclose(float(kl_gaussian(q, q)), 0.0, atol=1e-6)
+
+
+def test_full_cov_consensus_reduces_to_mean_field_on_diagonals():
+    rng = np.random.default_rng(0)
+    n, d = 3, 4
+    mus = rng.normal(size=(n, d))
+    sig = rng.uniform(0.3, 2.0, size=(n, d))
+    W = rng.random((n, n)) + 0.1
+    W = W / W.sum(1, keepdims=True)
+    fc = FullCovGaussian(
+        mean=jnp.asarray(mus, jnp.float32),
+        prec=jnp.asarray(np.stack([np.diag(1 / s**2) for s in sig]), jnp.float32),
+    )
+    out_fc = consensus_full_cov(fc, jnp.asarray(W, jnp.float32))
+    mf = GaussianPosterior(
+        mean={"w": jnp.asarray(mus, jnp.float32)},
+        rho={"w": softplus_inv(jnp.asarray(sig, jnp.float32))},
+    )
+    out_mf = consensus_all_agents(mf, jnp.asarray(W, jnp.float32))
+    np.testing.assert_allclose(out_fc.mean, out_mf.mean["w"], rtol=1e-4, atol=1e-5)
+    var_fc = np.stack([np.diag(np.linalg.inv(p)) for p in np.asarray(out_fc.prec)])
+    var_mf = np.square(np.asarray(softplus(out_mf.rho["w"])))
+    np.testing.assert_allclose(var_fc, var_mf, rtol=1e-3)
+
+
+def test_linreg_bayes_update_matches_closed_form():
+    rng = np.random.default_rng(1)
+    d, b = 3, 20
+    phi = rng.normal(size=(b, d))
+    theta = rng.normal(size=d)
+    y = phi @ theta + rng.normal(0, 0.5, b)
+    prior = FullCovGaussian(
+        mean=jnp.zeros(d, jnp.float32), prec=jnp.eye(d, dtype=jnp.float32) * 2.0
+    )
+    post = linreg_bayes_update(prior, jnp.asarray(phi, jnp.float32),
+                               jnp.asarray(y, jnp.float32), 0.25)
+    prec_ref = 2.0 * np.eye(d) + phi.T @ phi / 0.25
+    mean_ref = np.linalg.solve(prec_ref, phi.T @ y / 0.25)
+    np.testing.assert_allclose(np.asarray(post.prec), prec_ref, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(post.mean), mean_ref, rtol=1e-3, atol=1e-4)
+
+
+def test_posterior_sample_statistics():
+    post = init_posterior({"w": jnp.zeros((2000,))}, init_sigma=0.5)
+    s = post.sample(jax.random.key(0))
+    assert abs(float(jnp.mean(s["w"]))) < 0.05
+    assert np.isclose(float(jnp.std(s["w"])), 0.5, rtol=0.1)

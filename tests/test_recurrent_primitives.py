@@ -1,0 +1,130 @@
+"""Recurrent primitives vs. step-by-step sequential references."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.rglru import CONV_WIDTH, causal_conv1d, rglru_scan
+from repro.models.xlstm import mlstm_scan, slstm_scan, slstm_init, slstm_state_init
+
+
+def _mlstm_seq_ref(q, k, v, ig, fg):
+    b, s, h, hd = q.shape
+    C = np.zeros((b, h, hd, hd))
+    n = np.zeros((b, h, hd))
+    m = np.full((b, h), -1e30)
+    out = np.zeros((b, s, h, hd))
+    q, k, v, ig, fg = map(np.asarray, (q, k, v, ig, fg))
+    for t in range(s):
+        logf = np.log(1 / (1 + np.exp(-fg[:, t])))
+        m_new = np.maximum(logf + m, ig[:, t])
+        i_s = np.exp(ig[:, t] - m_new)
+        f_s = np.exp(logf + m - m_new)
+        C = f_s[..., None, None] * C + i_s[..., None, None] * np.einsum(
+            "bhd,bhe->bhde", k[:, t], v[:, t]
+        )
+        n = f_s[..., None] * n + i_s[..., None] * k[:, t]
+        qn = np.einsum("bhd,bhd->bh", q[:, t], n)
+        den = np.maximum(np.abs(qn), np.exp(-m_new))
+        out[:, t] = np.einsum("bhd,bhde->bhe", q[:, t], C) / den[..., None]
+        m = m_new
+    return out, C, n, m
+
+
+@pytest.mark.parametrize("chunk", [1, 4, 7, 8, 24])
+def test_mlstm_chunkwise_vs_sequential(chunk):
+    key = jax.random.key(0)
+    b, s, h, hd = 2, 24, 2, 8
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, h, hd)) / np.sqrt(hd)
+    v = jax.random.normal(ks[2], (b, s, h, hd))
+    ig = jax.random.normal(ks[3], (b, s, h)) * 2
+    fg = jax.random.normal(ks[4], (b, s, h)) * 2 + 1
+    ref_out, refC, refn, refm = _mlstm_seq_ref(q, k, v, ig, fg)
+    state = {
+        "C": jnp.zeros((b, h, hd, hd)),
+        "n": jnp.zeros((b, h, hd)),
+        "m": jnp.full((b, h), -1e30),
+    }
+    out, st = mlstm_scan(q, k, v, ig, fg, state, chunk_size=chunk)
+    np.testing.assert_allclose(out, ref_out, atol=1e-4)
+    np.testing.assert_allclose(st["C"], refC, atol=1e-5)
+    np.testing.assert_allclose(st["m"], refm, atol=1e-5)
+
+
+def test_mlstm_state_continuation():
+    """Split-sequence evaluation (decode semantics) == one-shot."""
+    key = jax.random.key(1)
+    b, s, h, hd = 1, 20, 2, 4
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, h, hd))
+    v = jax.random.normal(ks[2], (b, s, h, hd))
+    ig = jax.random.normal(ks[3], (b, s, h))
+    fg = jax.random.normal(ks[4], (b, s, h)) + 1
+    state = {
+        "C": jnp.zeros((b, h, hd, hd)),
+        "n": jnp.zeros((b, h, hd)),
+        "m": jnp.full((b, h), -1e30),
+    }
+    full, _ = mlstm_scan(q, k, v, ig, fg, state, chunk_size=5)
+    o1, st = mlstm_scan(q[:, :8], k[:, :8], v[:, :8], ig[:, :8], fg[:, :8], state, 4)
+    o2, _ = mlstm_scan(q[:, 8:], k[:, 8:], v[:, 8:], ig[:, 8:], fg[:, 8:], st, 4)
+    np.testing.assert_allclose(jnp.concatenate([o1, o2], 1), full, atol=1e-5)
+
+
+def test_rglru_scan_vs_sequential():
+    key = jax.random.key(2)
+    b, s, d = 2, 17, 8
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (b, s, d))
+    r = jax.nn.sigmoid(jax.random.normal(ks[1], (b, s, d)))
+    i = jax.nn.sigmoid(jax.random.normal(ks[2], (b, s, d)))
+    lam = jax.random.normal(ks[3], (d,))
+    h0 = jnp.full((b, d), 0.3)
+    hs, hl = rglru_scan(x, r, i, lam, h0)
+    a = np.exp(-8 * np.log1p(np.exp(np.asarray(lam)))[None, None] * np.asarray(r))
+    g = np.sqrt(1 - a**2) * (np.asarray(i) * np.asarray(x))
+    h = np.full((b, d), 0.3)
+    ref = np.zeros((b, s, d))
+    for t in range(s):
+        h = a[:, t] * h + g[:, t]
+        ref[:, t] = h
+    np.testing.assert_allclose(hs, ref, atol=1e-5)
+    np.testing.assert_allclose(hl, ref[:, -1], atol=1e-5)
+
+
+def test_causal_conv_continuation():
+    key = jax.random.key(3)
+    b, s, d = 2, 12, 6
+    x = jax.random.normal(key, (b, s, d))
+    w = jax.random.normal(jax.random.key(4), (CONV_WIDTH, d))
+    bb = jnp.zeros((d,))
+    full, _ = causal_conv1d(x, w, bb)
+    o1, hist = causal_conv1d(x[:, :7], w, bb)
+    o2, _ = causal_conv1d(x[:, 7:], w, bb, hist)
+    np.testing.assert_allclose(jnp.concatenate([o1, o2], 1), full, atol=1e-6)
+
+
+def test_slstm_scan_stability_and_continuation():
+    class Cfg:
+        d_model = 8
+        n_heads = 2
+        norm_eps = 1e-6
+
+    cfg = Cfg()
+    params = slstm_init(jax.random.key(0), cfg)
+    b, s, d = 2, 14, 8
+    ks = jax.random.split(jax.random.key(1), 4)
+    xz, xi, xf, xo = (jax.random.normal(k, (b, s, d)) for k in ks)
+    st0 = slstm_state_init(cfg, b)
+    full, _ = slstm_scan(params, xz, xi, xf, xo, st0, cfg.n_heads)
+    assert not np.any(np.isnan(np.asarray(full)))
+    o1, st = slstm_scan(
+        params, xz[:, :6], xi[:, :6], xf[:, :6], xo[:, :6], st0, cfg.n_heads
+    )
+    o2, _ = slstm_scan(
+        params, xz[:, 6:], xi[:, 6:], xf[:, 6:], xo[:, 6:], st, cfg.n_heads
+    )
+    np.testing.assert_allclose(jnp.concatenate([o1, o2], 1), full, atol=1e-5)
