@@ -1,0 +1,223 @@
+"""Consensus-path benchmark: leaf-loop einsum vs flat-fused network kernel.
+
+Sweeps (N_agents x P x topology) and times one eq.-(6) round through
+
+  * ``leaf_loop``    — the paper-faithful reference: Python loop over the
+    model pytree's leaves, one einsum chain per leaf
+    (``core.posterior.consensus_all_agents`` on a ``GaussianPosterior``);
+  * ``flat_fused``   — the same math on the contiguous [N, P]
+    ``FlatPosterior`` buffers as ONE fused computation
+    (``core.flat.consensus_flat``: Pallas network kernel on TPU, single
+    fused XLA einsum elsewhere);
+  * ``flat_sparse``  — the CSR-neighbor-list variant on sparse topologies.
+
+Wall-clock (median of ``iters`` jitted calls, after warmup) is reported per
+path, together with the analytic roofline (``launch.costmodel
+.consensus_roofline``): on CPU the Pallas kernels run in interpreter mode,
+whose wall-clock says nothing about TPU, so the HBM-pass model is the
+load-bearing number there — the interpreter run is kept only as a
+correctness probe (max |err| vs the fused XLA reference).
+
+Output: ``BENCH_consensus.json`` — see ROADMAP.md "Performance" for how to
+read it; the perf trajectory is tracked from this file PR-over-PR.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.flat import (
+    FlatLayout,
+    consensus_flat,
+    consensus_flat_sparse,
+    flat_posterior_from_pytree,
+    neighbor_tables,
+)
+from repro.core.graphs import bidirectional_ring_w, complete_w, star_w
+from repro.core.posterior import GaussianPosterior, consensus_all_agents
+from repro.launch.costmodel import consensus_roofline
+
+DEFAULT_JSON = "BENCH_consensus.json"
+
+
+def _ragged_params(key, n_agents: int, p_target: int, n_leaves: int):
+    """A deliberately ragged mixed-shape parameter pytree of ~p_target
+    scalars per agent, mimicking a real model's many differently-shaped
+    leaves (the case where per-leaf dispatch overhead hurts most)."""
+    ks = jax.random.split(key, n_leaves)
+    per = max(p_target // n_leaves, 8)
+    tree = {}
+    for i, k in enumerate(ks):
+        # cycle through 1-D / 2-D / odd-sized shapes
+        if i % 3 == 0:
+            shape = (per,)
+        elif i % 3 == 1:
+            shape = (max(per // 16, 2), 16)
+        else:
+            shape = (max(per // 7, 1), 7)
+        tree[f"leaf_{i:02d}"] = jax.random.normal(k, (n_agents,) + shape)
+    return tree
+
+
+def _posts_for(key, n_agents: int, p_target: int, n_leaves: int):
+    k1, k2 = jax.random.split(key)
+    mean = _ragged_params(k1, n_agents, p_target, n_leaves)
+    rho = jax.tree.map(
+        lambda m, k: jax.random.normal(k, m.shape) * 0.3 - 1.0,
+        mean,
+        dict(zip(mean, jax.random.split(k2, len(mean)))),
+    )
+    return GaussianPosterior(mean=mean, rho=rho)
+
+
+def _topology(name: str, n: int) -> np.ndarray:
+    if name == "complete":
+        return complete_w(n)
+    if name == "ring":
+        return bidirectional_ring_w(n)
+    if name == "star":
+        return star_w(n - 1, a=0.5)
+    raise ValueError(f"unknown topology {name!r}")
+
+
+def _time(fn, args, iters: int) -> float:
+    """Median wall-clock us of ``fn(*args)``.
+
+    ``fn`` must be jitted with the posteriors passed as ARGUMENTS — a jitted
+    closure capturing them as constants lets XLA constant-fold the whole
+    consensus at compile time and times nothing.
+    """
+    jax.block_until_ready(fn(*args))  # warmup / compile
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def bench_one(
+    n_agents: int,
+    p_target: int,
+    topology: str,
+    n_leaves: int = 32,
+    iters: int = 10,
+    check_interpret: bool = False,
+    seed: int = 0,
+) -> dict:
+    posts = _posts_for(jax.random.key(seed), n_agents, p_target, n_leaves)
+    flat = flat_posterior_from_pytree(posts, leading_axes=1)
+    W = jnp.asarray(_topology(topology, n_agents), jnp.float32)
+    nbr_np, wts_np = neighbor_tables(np.asarray(W))
+    nbr, wts = jnp.asarray(nbr_np), jnp.asarray(wts_np)
+    p = flat.layout.n_params
+
+    leaf_fn = jax.jit(lambda po, w: consensus_all_agents(po, w).mean)
+    flat_fn = jax.jit(lambda fp, w: consensus_flat(fp, w).mean)
+    sparse_fn = jax.jit(lambda fp, i, v: consensus_flat_sparse(fp, i, v).mean)
+
+    rec = {
+        "n_agents": n_agents,
+        "p": p,
+        "n_leaves": n_leaves,
+        "topology": topology,
+        "max_degree": int((np.asarray(W) > 0).sum(1).max()),
+        "backend": jax.default_backend(),
+        "us": {
+            "leaf_loop": _time(leaf_fn, (posts, W), iters),
+            "flat_fused": _time(flat_fn, (flat, W), iters),
+            "flat_sparse": _time(sparse_fn, (flat, nbr, wts), iters),
+        },
+        "roofline": consensus_roofline(
+            n_agents, p, n_leaves, max_degree=int((np.asarray(W) > 0).sum(1).max())
+        ),
+    }
+    rec["speedup_flat_vs_leaf_loop"] = rec["us"]["leaf_loop"] / rec["us"]["flat_fused"]
+    # the flat-fused path FOR a sparse topology is the sparse-neighborhood
+    # kernel (dense matmul form is the complete-graph case) — best-of both
+    rec["speedup_best_flat_vs_leaf_loop"] = rec["us"]["leaf_loop"] / min(
+        rec["us"]["flat_fused"], rec["us"]["flat_sparse"]
+    )
+    if check_interpret:
+        # correctness probe only: the Pallas interpreter is not timed
+        ref = consensus_flat(flat, W, mode="xla")
+        kern = consensus_flat(flat, W, mode="interpret", block=256)
+        sref = consensus_flat_sparse(flat, nbr, wts, mode="xla")
+        skern = consensus_flat_sparse(flat, nbr, wts, mode="interpret", block=256)
+        rec["interpret_max_err"] = {
+            "dense_mean": float(jnp.max(jnp.abs(ref.mean - kern.mean))),
+            "dense_rho": float(jnp.max(jnp.abs(ref.rho - kern.rho))),
+            "sparse_mean": float(jnp.max(jnp.abs(sref.mean - skern.mean))),
+            "sparse_rho": float(jnp.max(jnp.abs(sref.rho - skern.rho))),
+        }
+    return rec
+
+
+# (n_agents, p, topology, n_leaves) — n_leaves is a first-class axis: the
+# leaf-loop baseline pays per-leaf dispatch, so shallow pytrees (few big
+# leaves) are its best case and deep-model pytrees (hundreds of leaves, the
+# realistic regime — e.g. whisper-tiny has ~700) its worst.
+QUICK_SWEEP = [(4, 4096, "ring", 8)]
+FULL_SWEEP = [
+    (4, 1 << 16, "complete", 32),
+    (4, 1 << 16, "ring", 32),
+    (9, 1 << 16, "star", 64),
+    (9, 1 << 18, "ring", 32),
+    (16, 1 << 18, "complete", 64),
+    (16, 1 << 18, "ring", 128),
+    (26, 1 << 16, "star", 420),
+    (26, 1 << 18, "star", 420),  # largest CPU-feasible config
+]
+
+
+def run(quick: bool = False, json_out: str | None = DEFAULT_JSON) -> dict:
+    """Execute the sweep; returns (and optionally writes) the JSON document.
+
+    Also prints the harness's usual ``name,us_per_call,derived`` CSV rows so
+    ``benchmarks/run.py`` aggregation keeps working.
+    """
+    sweep = QUICK_SWEEP if quick else FULL_SWEEP
+    results = []
+    for i, (n, p, topo, n_leaves) in enumerate(sweep):
+        rec = bench_one(
+            n, p, topo,
+            n_leaves=n_leaves,
+            iters=3 if quick else 10,
+            check_interpret=(i == 0),  # one interpreter correctness probe
+        )
+        results.append(rec)
+        print(
+            f"bench_consensus[{n}x{rec['p']}:{topo}],"
+            f"{rec['us']['flat_fused']:.1f},"
+            f"speedup={rec['speedup_flat_vs_leaf_loop']:.2f}x"
+        )
+    doc = {
+        "benchmark": "consensus_eq6",
+        "backend": jax.default_backend(),
+        "quick": quick,
+        "results": results,
+        "summary": {
+            "max_speedup_flat_vs_leaf_loop": max(
+                r["speedup_flat_vs_leaf_loop"] for r in results
+            ),
+            "largest_config_speedup_best_flat_vs_leaf_loop": results[-1][
+                "speedup_best_flat_vs_leaf_loop"
+            ],
+            "model_speedup_fused_vs_leaf_loop": results[-1]["roofline"][
+                "model_speedup_fused_vs_leaf_loop"
+            ],
+        },
+    }
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"# wrote {json_out}")
+    return doc
+
+
+if __name__ == "__main__":
+    run()

@@ -10,14 +10,24 @@ Prints ``name,us_per_call,derived`` CSV rows.
   thm1   predicted rate K(Theta) vs empirical decay slope
   calib  (beyond-paper) ECE calibration of the Bayesian MC predictive
   roofline  dry-run roofline terms per (arch x shape x mesh) + kernel bench
+  consensus leaf-loop einsum vs flat-fused network consensus kernel
+            (writes BENCH_consensus.json; see ROADMAP.md "Performance")
+
+Subcommands:
+  run.py [figures] [--only ...] [--json-out F]   paper figures (default)
+  run.py bench [--full] [--json-out F]           quick consensus sweep — the
+            CI smoke test of the benchmark harness itself (interpret-mode
+            kernel probe + tiny shapes; --full for the real sweep)
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
 from benchmarks import (
+    bench_consensus,
     calibration,
     fig1_linreg,
     fig2_star_centrality,
@@ -39,13 +49,38 @@ ALL = {
     "thm1": thm1_rate.run,
     "calib": calibration.run,
     "roofline": roofline.run,
+    # quick sweep, no JSON side-effect: the figures path must not silently
+    # overwrite the tracked BENCH_consensus.json (use the `bench` subcommand
+    # for that)
+    "consensus": lambda: bench_consensus.run(quick=True, json_out=None),
 }
 
 
-def main() -> None:
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "cmd", nargs="?", choices=["figures", "bench"], default="figures",
+        help="figures (default): paper figures; bench: consensus perf sweep",
+    )
     ap.add_argument("--only", nargs="*", choices=list(ALL), default=None)
-    args = ap.parse_args()
+    ap.add_argument(
+        "--json-out", default=None,
+        help="write a JSON result document (bench: the BENCH_consensus.json "
+        "path; figures: {name: ok|failed} status map)",
+    )
+    ap.add_argument(
+        "--full", action="store_true",
+        help="bench only: run the full sweep instead of the quick CI smoke",
+    )
+    args = ap.parse_args(argv)
+
+    if args.cmd == "bench":
+        bench_consensus.run(
+            quick=not args.full,
+            json_out=args.json_out or bench_consensus.DEFAULT_JSON,
+        )
+        return
+
     names = args.only or list(ALL)
     print("name,us_per_call,derived")
     failed = []
@@ -56,6 +91,11 @@ def main() -> None:
             failed.append(name)
             traceback.print_exc(file=sys.stderr)
             print(f"{name},0.0,FAILED")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(
+                {n: ("failed" if n in failed else "ok") for n in names}, f, indent=2
+            )
     if failed:
         print(f"# FAILED: {failed}", file=sys.stderr)
         sys.exit(1)

@@ -1,3 +1,15 @@
-from repro.checkpoint.io import save_pytree, restore_pytree, CheckpointManager
+from repro.checkpoint.io import (
+    CheckpointManager,
+    restore_flat_posterior,
+    restore_pytree,
+    save_flat_posterior,
+    save_pytree,
+)
 
-__all__ = ["save_pytree", "restore_pytree", "CheckpointManager"]
+__all__ = [
+    "save_pytree",
+    "restore_pytree",
+    "save_flat_posterior",
+    "restore_flat_posterior",
+    "CheckpointManager",
+]

@@ -1,9 +1,16 @@
 """msgpack-based pytree checkpointing (orbax/flax are not available offline).
 
-Arrays are serialized as (dtype, shape, raw bytes) with zstd compression;
+Arrays are serialized as (dtype, shape, raw bytes) with zstd compression
+(zlib fallback when the ``zstandard`` wheel is absent — the reader sniffs
+the frame magic, so either build restores both formats it can decode);
 the pytree structure is serialized as a nested msgpack document.  Restore
 optionally re-shards onto a ``jax.sharding.NamedSharding`` tree via
 ``jax.device_put`` (production path), or returns numpy arrays (host path).
+
+``FlatPosterior`` checkpoints (``save_flat_posterior``) are
+self-describing: the layout doc (leaf paths/shapes/dtypes/offsets) rides in
+the document, so restore needs no ``like`` tree and hands back the exact
+[N, P] buffers — no flatten/unflatten round-trip on the save/restore path.
 
 ``CheckpointManager`` adds step-numbered directories, retention, and an
 atomic-rename commit protocol so a preempted writer never leaves a corrupt
@@ -13,18 +20,41 @@ from __future__ import annotations
 
 import os
 import shutil
+import zlib
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # optional: not in every offline image
+    import zstandard
+except ImportError:  # pragma: no cover - depends on the container
+    zstandard = None
 
 PyTree = Any
 
 _ARR = "__arr__"
 _SCALAR = "__scalar__"
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _compress(raw: bytes, level: int) -> bytes:
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=level).compress(raw)
+    return zlib.compress(raw, level)
+
+
+def _decompress(comp: bytes) -> bytes:
+    if comp[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise RuntimeError(
+                "checkpoint is zstd-compressed but the zstandard module is "
+                "not installed in this environment"
+            )
+        return zstandard.ZstdDecompressor().decompress(comp)
+    return zlib.decompress(comp)
 
 
 def _pack_leaf(leaf):
@@ -57,8 +87,12 @@ def save_pytree(path: str, tree: PyTree, compress_level: int = 3) -> None:
         "treedef": str(treedef),
         "leaves": [_pack_leaf(l) for l in leaves],
     }
+    _write_doc(path, doc, compress_level)
+
+
+def _write_doc(path: str, doc: dict, compress_level: int = 3) -> None:
     raw = msgpack.packb(doc, use_bin_type=True)
-    comp = zstandard.ZstdCompressor(level=compress_level).compress(raw)
+    comp = _compress(raw, compress_level)
     tmp = path + ".tmp"
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(tmp, "wb") as f:
@@ -66,13 +100,17 @@ def save_pytree(path: str, tree: PyTree, compress_level: int = 3) -> None:
     os.replace(tmp, path)  # atomic commit
 
 
+def _read_doc(path: str) -> dict:
+    with open(path, "rb") as f:
+        raw = _decompress(f.read())
+    return msgpack.unpackb(raw, raw=False)
+
+
 def restore_pytree(path: str, like: PyTree, shardings: PyTree | None = None) -> PyTree:
     """Restore into the structure of ``like``.  If ``shardings`` (a pytree of
     jax.sharding.Sharding matching ``like``) is given, leaves are placed
     directly onto devices with those shardings."""
-    with open(path, "rb") as f:
-        raw = zstandard.ZstdDecompressor().decompress(f.read())
-    doc = msgpack.unpackb(raw, raw=False)
+    doc = _read_doc(path)
     leaves = [_unpack_leaf(d) for d in doc["leaves"]]
     like_leaves, treedef = jax.tree.flatten(like)
     if len(leaves) != len(like_leaves):
@@ -93,6 +131,48 @@ def restore_pytree(path: str, like: PyTree, shardings: PyTree | None = None) -> 
         else:
             out.append(stored)
     return jax.tree.unflatten(treedef, out)
+
+
+_FLAT = "__flat_posterior__"
+
+
+def save_flat_posterior(path: str, post, compress_level: int = 3) -> None:
+    """Checkpoint a ``core.flat.FlatPosterior`` with its layout doc inline.
+
+    The [N, P] mean/rho buffers are written contiguously (no per-leaf
+    packing) and the ``FlatLayout`` rides along as a self-describing doc, so
+    ``restore_flat_posterior`` needs no ``like`` tree.
+    """
+    doc = {
+        _FLAT: True,
+        "layout": post.layout.to_doc(),
+        "mean": _pack_leaf(post.mean),
+        "rho": _pack_leaf(post.rho),
+    }
+    _write_doc(path, doc, compress_level)
+
+
+def restore_flat_posterior(path: str, sharding=None):
+    """Restore a ``FlatPosterior`` saved by ``save_flat_posterior``.
+
+    ``sharding`` (optional jax.sharding.Sharding) places both buffers on
+    device; otherwise numpy arrays are wrapped as-is.
+    """
+    from repro.core.flat import FlatLayout, FlatPosterior
+
+    doc = _read_doc(path)
+    if not doc.get(_FLAT):
+        raise ValueError(f"{path} is not a flat-posterior checkpoint")
+    layout = FlatLayout.from_doc(doc["layout"])
+    mean = _unpack_leaf(doc["mean"])
+    rho = _unpack_leaf(doc["rho"])
+    if sharding is not None:
+        mean = jax.device_put(mean, sharding)
+        rho = jax.device_put(rho, sharding)
+    else:
+        mean = jnp.asarray(mean)
+        rho = jnp.asarray(rho)
+    return FlatPosterior(mean=mean, rho=rho, layout=layout)
 
 
 class CheckpointManager:

@@ -15,9 +15,27 @@ from repro.core.posterior import (
     softplus_inv,
 )
 from repro.core import discrete, graphs, theory
+from repro.core.flat import (
+    FlatLayout,
+    FlatPosterior,
+    consensus_flat,
+    consensus_flat_sparse,
+    flat_posterior_from_pytree,
+    init_flat_posterior,
+    make_flat_nll,
+    neighbor_tables,
+)
 from repro.core.simulated import NetworkState, init_network, make_round_fn, run_rounds
 
 __all__ = [
+    "FlatLayout",
+    "FlatPosterior",
+    "consensus_flat",
+    "consensus_flat_sparse",
+    "flat_posterior_from_pytree",
+    "init_flat_posterior",
+    "make_flat_nll",
+    "neighbor_tables",
     "FullCovGaussian",
     "GaussianPosterior",
     "consensus_all_agents",

@@ -1,0 +1,424 @@
+"""Flat-buffer posterior representation — the canonical runtime format.
+
+A ``FlatPosterior`` stores the whole network's mean-field Gaussian posterior
+as TWO contiguous fp32 buffers:
+
+    mean: [N_agents, P]     rho: [N_agents, P]
+
+plus a cached, hashable ``FlatLayout`` that records, per model-parameter
+leaf: key path, shape, dtype and its (offset, size) column span in the flat
+buffer.  The layout is built ONCE (``FlatLayout.for_pytree``) and carried as
+static pytree metadata; ``to_pytree``/``from_pytree`` are the only
+conversion points and they lower to pure slice/reshape/cast ops that XLA
+fuses into the surrounding computation (no data movement beyond the
+unavoidable cast when a leaf is not fp32).
+
+Layout contract (shared with ``kernels.consensus``; see that module's
+docstring for the kernel-side half):
+  * axis 0 = agent axis, axis 1 = flattened parameter axis, leaf-major in
+    ``layout.specs`` order, fp32;
+  * buffers are UNPADDED (P = exact parameter count); lane padding to the
+    kernel BLOCK multiple happens inside the kernels and is sliced off
+    before any value escapes (mean pads 0.0, rho pads 1.0 -> finite sigma);
+  * per-leaf dtypes are recorded in the layout and restored on
+    ``to_pytree`` (mixed-dtype pytrees never silently promote).
+
+Why: the consensus round (paper eq. 6) is purely memory-bound; with the
+posterior flat, the whole network round is ONE fused pass over [N, P]
+(``kernels.consensus.consensus_fused_network`` on TPU, a single fused XLA
+einsum elsewhere) instead of a Python loop over leaves doing ~6 elementwise
+HBM round-trips each.  ``benchmarks/bench_consensus.py`` tracks the win in
+``BENCH_consensus.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.numerics import (
+    COMPUTE_DTYPE,
+    softplus,
+    softplus_inv,
+    softplus_inv_py,
+)
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSpec:
+    """One model-parameter leaf's slot in the flat buffer."""
+
+    path: str  # jax key-path string, for error messages / checkpoint docs
+    shape: tuple[int, ...]  # per-agent shape (leading agent axes stripped)
+    dtype: str  # dtype NAME of the original leaf (name, not np .str — the
+    #             numpy byte-string for bfloat16 is a lossy '<V2')
+    offset: int  # start column in the flat buffer
+    size: int  # number of scalars = prod(shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatLayout:
+    """Cached leaf layout: offsets/shapes/dtypes + the pytree structure.
+
+    Hashable (usable as static pytree metadata / jit static argument).
+    """
+
+    specs: tuple[LeafSpec, ...]
+    treedef: Any  # jax PyTreeDef (hashable)
+    n_params: int  # P: total scalars per agent
+
+    @classmethod
+    def for_pytree(cls, tree: PyTree, leading_axes: int = 0) -> "FlatLayout":
+        """Build the layout from an example pytree.
+
+        ``leading_axes`` axes are stripped off every leaf shape (pass 1 for a
+        network-stacked tree whose leaves are [N, ...]).
+        """
+        leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        specs, off = [], 0
+        for path, leaf in leaves_with_path:
+            shape = tuple(int(s) for s in leaf.shape[leading_axes:])
+            size = int(np.prod(shape)) if shape else 1
+            specs.append(
+                LeafSpec(
+                    path=jax.tree_util.keystr(path),
+                    shape=shape,
+                    dtype=jnp.dtype(leaf.dtype).name,
+                    offset=off,
+                    size=size,
+                )
+            )
+            off += size
+        return cls(specs=tuple(specs), treedef=treedef, n_params=off)
+
+    # -- conversions ---------------------------------------------------------
+
+    def flatten(self, tree: PyTree) -> jax.Array:
+        """Pytree with leaves [*B, *spec.shape] -> fp32 buffer [*B, P].
+
+        Any common leading batch shape B (e.g. the agent axis) is preserved.
+        """
+        leaves = self.treedef.flatten_up_to(tree)
+        batch = None
+        flat = []
+        for spec, leaf in zip(self.specs, leaves):
+            nb = leaf.ndim - len(spec.shape)
+            b = tuple(leaf.shape[:nb])
+            if tuple(leaf.shape[nb:]) != spec.shape or (batch not in (None, b)):
+                raise ValueError(
+                    f"leaf {spec.path}: shape {leaf.shape} does not match "
+                    f"layout {spec.shape} (batch {batch})"
+                )
+            batch = b
+            flat.append(leaf.reshape(b + (spec.size,)).astype(COMPUTE_DTYPE))
+        return jnp.concatenate(flat, axis=-1)
+
+    def unflatten(self, flat: jax.Array) -> PyTree:
+        """fp32 buffer [*B, P] -> pytree with leaves [*B, *shape], cast back
+        to each leaf's recorded dtype (mixed-dtype trees round-trip exactly
+        in structure and dtype)."""
+        if flat.shape[-1] != self.n_params:
+            raise ValueError(
+                f"buffer has {flat.shape[-1]} params, layout expects {self.n_params}"
+            )
+        b = tuple(flat.shape[:-1])
+        leaves = [
+            jax.lax.slice_in_dim(flat, s.offset, s.offset + s.size, axis=flat.ndim - 1)
+            .reshape(b + s.shape)
+            .astype(s.dtype)
+            for s in self.specs
+        ]
+        return jax.tree.unflatten(self.treedef, leaves)
+
+    # -- checkpoint doc ------------------------------------------------------
+
+    def to_doc(self) -> dict:
+        """Self-describing msgpack-able doc (see checkpoint.io flat helpers)."""
+        skeleton = jax.tree.unflatten(self.treedef, list(range(len(self.specs))))
+        return {
+            "n_params": self.n_params,
+            "specs": [dataclasses.asdict(s) | {"shape": list(s.shape)} for s in self.specs],
+            "skeleton": _encode_skeleton(skeleton),
+        }
+
+    @classmethod
+    def from_doc(cls, doc: dict) -> "FlatLayout":
+        skeleton = _decode_skeleton(doc["skeleton"])
+        treedef = jax.tree.structure(skeleton)
+        specs = tuple(
+            LeafSpec(
+                path=s["path"],
+                shape=tuple(s["shape"]),
+                dtype=s["dtype"],
+                offset=s["offset"],
+                size=s["size"],
+            )
+            for s in doc["specs"]
+        )
+        return cls(specs=specs, treedef=treedef, n_params=doc["n_params"])
+
+
+def _encode_skeleton(node):
+    """Encode a dict/list/tuple/int skeleton as msgpack-able JSON-ish data
+    (tuples tagged so they survive the round trip)."""
+    if isinstance(node, dict):
+        if not all(isinstance(k, str) for k in node):
+            raise TypeError("FlatLayout checkpoint docs require str dict keys")
+        return {k: _encode_skeleton(v) for k, v in node.items()}
+    if isinstance(node, tuple):
+        return {"__tuple__": [_encode_skeleton(v) for v in node]}
+    if isinstance(node, list):
+        return [_encode_skeleton(v) for v in node]
+    if isinstance(node, int):
+        return node
+    raise TypeError(
+        f"pytree node {type(node)} not supported in a self-describing flat "
+        "checkpoint; restore with an explicit `like` tree instead"
+    )
+
+
+def _decode_skeleton(node):
+    if isinstance(node, dict):
+        if set(node) == {"__tuple__"}:
+            return tuple(_decode_skeleton(v) for v in node["__tuple__"])
+        return {k: _decode_skeleton(v) for k, v in node.items()}
+    if isinstance(node, list):
+        return [_decode_skeleton(v) for v in node]
+    return node
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class FlatPosterior:
+    """Mean-field Gaussian posterior over flat buffers [*B, P].
+
+    Duck-types ``GaussianPosterior`` (mean / rho / sigma / precision /
+    sample / n_params) so the VI step, optimizers and KL are shared; the
+    leading batch axes B are typically (N_agents,) at the network level and
+    () inside the per-agent ``vmap``.
+    """
+
+    mean: jax.Array
+    rho: jax.Array
+    layout: FlatLayout = dataclasses.field(metadata=dict(static=True))
+
+    def sigma(self) -> jax.Array:
+        return softplus(self.rho)
+
+    def precision(self) -> jax.Array:
+        return 1.0 / jnp.square(softplus(self.rho))
+
+    def sample(self, key: jax.Array) -> jax.Array:
+        """Reparameterized sample theta = mu + sigma * eps — a FLAT [*B, P]
+        vector; feed it to the model through ``layout.unflatten`` (or use
+        ``make_flat_nll`` which does exactly that at the apply boundary)."""
+        eps = jax.random.normal(key, self.mean.shape, self.mean.dtype)
+        return self.mean + softplus(self.rho) * eps
+
+    def sample_pytree(self, key: jax.Array) -> PyTree:
+        return self.layout.unflatten(self.sample(key))
+
+    def n_params(self) -> int:
+        return self.layout.n_params
+
+    def to_pytree(self):
+        """-> ``GaussianPosterior`` over the original parameter pytree."""
+        from repro.core.posterior import GaussianPosterior
+
+        return GaussianPosterior(
+            mean=self.layout.unflatten(self.mean),
+            rho=self.layout.unflatten(self.rho.astype(COMPUTE_DTYPE)),
+        )
+
+
+def flat_posterior_from_pytree(post, layout: FlatLayout | None = None,
+                               leading_axes: int = 1) -> FlatPosterior:
+    """``GaussianPosterior`` (leaves [*B, ...]) -> ``FlatPosterior``.
+
+    Pass a prebuilt ``layout`` to skip re-deriving it (it never changes for a
+    fixed model, so build it once at setup time)."""
+    if layout is None:
+        layout = FlatLayout.for_pytree(post.mean, leading_axes=leading_axes)
+    return FlatPosterior(
+        mean=layout.flatten(post.mean), rho=layout.flatten(post.rho), layout=layout
+    )
+
+
+def init_flat_posterior(
+    params: PyTree,
+    init_sigma: float = 0.05,
+    layout: FlatLayout | None = None,
+    leading_axes: int = 0,
+) -> FlatPosterior:
+    """Flat analogue of ``init_posterior``: mean = flatten(params), constant
+    rho = softplus^-1(init_sigma)."""
+    if layout is None:
+        layout = FlatLayout.for_pytree(params, leading_axes=leading_axes)
+    mean = layout.flatten(params)
+    rho = jnp.full_like(mean, softplus_inv_py(init_sigma))
+    return FlatPosterior(mean=mean, rho=rho, layout=layout)
+
+
+def make_flat_nll(nll_fn: Callable[[PyTree, Any], jax.Array], layout: FlatLayout):
+    """Wrap a pytree-parameter nll into one taking a flat theta [P] — the
+    single model-apply-boundary conversion of the flat runtime."""
+
+    def flat_nll(theta_flat: jax.Array, batch: Any) -> jax.Array:
+        return nll_fn(layout.unflatten(theta_flat), batch)
+
+    return flat_nll
+
+
+# ---------------------------------------------------------------------------
+# Network-wide consensus over the flat buffers
+# ---------------------------------------------------------------------------
+
+
+XLA_BLOCK = 16384  # CPU cache-blocking width (lanes) for the XLA path
+_MAX_UNROLL = 256  # cap on unrolled column blocks (graph-size guard)
+
+
+def _eq6_block(W, mean, rho):
+    """Eq. (6) on one [N, BLOCK] column block (identical math to the Pallas
+    network kernel body)."""
+    prec = 1.0 / jnp.square(softplus(rho))
+    new_prec = jnp.matmul(W, prec, preferred_element_type=COMPUTE_DTYPE)
+    new_pm = jnp.matmul(W, prec * mean, preferred_element_type=COMPUTE_DTYPE)
+    return new_pm / new_prec, softplus_inv(jax.lax.rsqrt(new_prec))
+
+
+def consensus_flat_reference(
+    mean: jax.Array, rho: jax.Array, W: jax.Array, block: int = XLA_BLOCK
+) -> tuple[jax.Array, jax.Array]:
+    """Eq. (6) on the flat [N, P] buffers — the reference semantics for the
+    Pallas kernels and the fast non-TPU path.
+
+    Processed in unrolled column blocks of ``block`` lanes, assembled with
+    ``dynamic_update_slice`` (in-place after XLA copy elision): the block
+    intermediates stay cache-resident and independent blocks schedule across
+    CPU threads — a monolithic [N, P] matmul pair spills its intermediates
+    to DRAM and measures ~2x slower, and a ``concatenate`` assembly costs
+    more than the whole computation (measured on XLA:CPU; see
+    BENCH_consensus.json).  Math is bitwise identical per block.
+    """
+    n, p = mean.shape
+    if p <= block:
+        return _eq6_block(W, mean, rho)
+    n_blocks = -(-p // block)
+    if n_blocks > _MAX_UNROLL:
+        block = -(-p // _MAX_UNROLL)
+    mean_out = jnp.empty_like(mean)
+    rho_out = jnp.empty_like(rho)
+    for s in range(0, p, block):
+        e = min(s + block, p)
+        m_o, r_o = _eq6_block(W, mean[:, s:e], rho[:, s:e])
+        mean_out = jax.lax.dynamic_update_slice(mean_out, m_o, (0, s))
+        rho_out = jax.lax.dynamic_update_slice(rho_out, r_o, (0, s))
+    return mean_out, rho_out
+
+
+def consensus_flat(
+    posts: FlatPosterior,
+    W: jax.Array,
+    *,
+    mode: str | None = None,
+    block: int | None = None,
+) -> FlatPosterior:
+    """Single fused network-wide consensus (eq. 6) on a ``FlatPosterior``.
+
+    mode:
+      None        auto — Pallas kernel on TPU, fused XLA einsum elsewhere
+      "pallas"    the Pallas network kernel (compiled on TPU, interpreted
+                  elsewhere — SLOW off-TPU, correctness checks only)
+      "interpret" force the Pallas interpreter
+      "xla"       force the fused XLA reference path
+    """
+    from repro.kernels.consensus import DEFAULT_BLOCK, consensus_fused_network
+
+    if mode is None:
+        mode = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if mode == "xla":
+        mean, rho = consensus_flat_reference(
+            posts.mean, posts.rho, W, block=(XLA_BLOCK if block is None else block)
+        )
+    elif mode in ("pallas", "interpret"):
+        mean, rho = consensus_fused_network(
+            W, posts.mean, posts.rho,
+            block=(DEFAULT_BLOCK if block is None else block),
+            interpret=(True if mode == "interpret" else None),
+        )
+    else:
+        raise ValueError(f"unknown consensus_flat mode {mode!r}")
+    return FlatPosterior(mean=mean, rho=rho, layout=posts.layout)
+
+
+def neighbor_tables(W: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """CSR-style padded neighbor tables for ``consensus_fused_sparse``.
+
+    Returns (neighbors [N, D] int32, weights [N, D] float32), D = max
+    in-degree.  Zero-weight entries of W are skipped; ragged rows are padded
+    with the agent's own id at weight 0.0 (reads a tile the agent already
+    touches, contributes nothing).  Host-side/static: call once per topology,
+    not per round.
+    """
+    Wn = np.asarray(W)
+    n = Wn.shape[0]
+    rows = [np.nonzero(Wn[i])[0] for i in range(n)]
+    d = max((len(r) for r in rows), default=1) or 1
+    neighbors = np.tile(np.arange(n, dtype=np.int32)[:, None], (1, d))
+    weights = np.zeros((n, d), np.float32)
+    for i, r in enumerate(rows):
+        neighbors[i, : len(r)] = r
+        weights[i, : len(r)] = Wn[i, r]
+    return neighbors, weights
+
+
+def _sparse_reference(mean, rho, neighbors, weights, block: int = XLA_BLOCK):
+    """Sparse reference path: rebuild the (tiny, [N, N]) dense W from the
+    neighbor tables and reuse the blocked dense path.  Bitwise-identical
+    semantics (zero-weight entries contribute nothing; self-padded slots
+    scatter-add 0.0 onto the diagonal), and far faster than row-gathers on
+    XLA:CPU, whose gather lowers to a scalar loop.  The true deg(i)-tile
+    HBM saving only exists on the Pallas path (mode="pallas" on TPU)."""
+    n = mean.shape[0]
+    rows = jnp.broadcast_to(jnp.arange(n, dtype=neighbors.dtype)[:, None], neighbors.shape)
+    W = jnp.zeros((n, n), COMPUTE_DTYPE).at[rows, neighbors].add(weights)
+    return consensus_flat_reference(mean, rho, W, block=block)
+
+
+def consensus_flat_sparse(
+    posts: FlatPosterior,
+    neighbors: jax.Array,
+    weights: jax.Array,
+    *,
+    mode: str | None = None,
+    block: int | None = None,
+) -> FlatPosterior:
+    """Sparse-neighborhood consensus: agents read only their deg(i) neighbor
+    rows (Pallas path).  Same mode/block semantics as ``consensus_flat``:
+    the block default is per-mode (XLA cache block vs kernel lane block);
+    the "xla" path rebuilds the tiny dense W (reference semantics — the
+    deg(i) traffic saving exists only on the Pallas path)."""
+    from repro.kernels.consensus import DEFAULT_BLOCK, consensus_fused_sparse
+
+    if mode is None:
+        mode = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if mode == "xla":
+        mean, rho = _sparse_reference(
+            posts.mean, posts.rho, neighbors, weights,
+            block=(XLA_BLOCK if block is None else block),
+        )
+    elif mode in ("pallas", "interpret"):
+        mean, rho = consensus_fused_sparse(
+            neighbors, weights, posts.mean, posts.rho,
+            block=(DEFAULT_BLOCK if block is None else block),
+            interpret=(True if mode == "interpret" else None),
+        )
+    else:
+        raise ValueError(f"unknown consensus_flat_sparse mode {mode!r}")
+    return FlatPosterior(mean=mean, rho=rho, layout=posts.layout)

@@ -1,0 +1,44 @@
+"""Shared numerical primitives for Gaussian posteriors.
+
+Single home for the softplus/softplus^-1 pair so the Pallas kernels, the
+pure-jnp reference paths, and the core posterior code all use the SAME
+stable formulation (previously the kernel inlined its own copy — satellite
+fix of ISSUE 1).
+
+``softplus_inv`` is stable over the full fp32 range of sigma:
+
+* tiny y (sigma -> 0): softplus_inv(y) = log(expm1(y)) ~= log(y); the naive
+  ``y + log1p(-exp(-y))`` form computes log1p(-exp(-eps)) which underflows
+  ``-exp(-y)`` to -1 and returns -inf one ulp too early.  We use
+  ``log(-expm1(-y)) + y`` which keeps full precision down to y ~ 1e-38.
+* huge y (sigma >> 1): exp(-y) underflows to 0 and the result is exactly y,
+  which is the correct asymptote (softplus(x) -> x for large x).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+# canonical compute dtype for flat posterior buffers and kernel wrappers
+COMPUTE_DTYPE = jnp.float32
+
+
+def softplus(x: jax.Array) -> jax.Array:
+    return jax.nn.softplus(x)
+
+
+def softplus_inv(y: jax.Array) -> jax.Array:
+    """Inverse of softplus for y > 0: x s.t. log1p(exp(x)) == y.
+
+    Stable form ``y + log(-expm1(-y))`` — see module docstring for why
+    ``expm1`` (and not ``log1p(-exp(.))``) is required at tiny y.
+    """
+    return y + jnp.log(-jnp.expm1(-y))
+
+
+def softplus_inv_py(y: float) -> float:
+    """Pure-Python softplus^-1 (same formulation) for use at trace time /
+    under ``jax.eval_shape`` where no jnp ops may run (dry-run path)."""
+    return y + math.log(-math.expm1(-y))

@@ -24,16 +24,9 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core.numerics import softplus, softplus_inv, softplus_inv_py
+
 PyTree = Any
-
-# numerically-stable softplus inverse: rho = sigma + log1p(-exp(-sigma))
-def softplus(x: jax.Array) -> jax.Array:
-    return jax.nn.softplus(x)
-
-
-def softplus_inv(y: jax.Array) -> jax.Array:
-    # inverse of softplus for y > 0
-    return y + jnp.log1p(-jnp.exp(-y))
 
 
 @jax.tree_util.register_dataclass
@@ -75,9 +68,7 @@ def init_posterior(
     """Build a mean-field posterior matching the structure of ``params``."""
     mean = params if mean_init is None else mean_init
     # pure-Python softplus^-1 so this works under jax.eval_shape (dry-run)
-    import math
-
-    rho0 = init_sigma + math.log1p(-math.exp(-init_sigma))
+    rho0 = softplus_inv_py(init_sigma)
     rho = jax.tree.map(lambda p: jnp.full_like(p, rho0), params)
     return GaussianPosterior(mean=mean, rho=rho)
 
@@ -135,7 +126,17 @@ def consensus_all_agents(
     [N, N] row-stochastic social-interaction matrix.  Returns posteriors with
     the same leading axis.  This is the simulated-runtime (vmap) path; the
     production path uses collectives (core.collectives).
+
+    ``posts`` may be a ``GaussianPosterior`` over a parameter pytree (the
+    paper-faithful leaf-loop reference below) or a ``core.flat.FlatPosterior``
+    (contiguous [N, P] buffers), in which case the call dispatches to the
+    single fused network-wide path (Pallas kernel on TPU, fused XLA einsum
+    elsewhere) — one HBM pass over the whole network posterior per round.
     """
+    from repro.core.flat import FlatPosterior, consensus_flat
+
+    if isinstance(posts, FlatPosterior):
+        return consensus_flat(posts, W)
 
     def combine(mean_stack, rho_stack):
         prec = 1.0 / jnp.square(softplus(rho_stack))

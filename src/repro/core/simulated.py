@@ -19,6 +19,7 @@ from typing import Any, Callable, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core.flat import FlatLayout, flat_posterior_from_pytree, make_flat_nll
 from repro.core.posterior import (
     GaussianPosterior,
     consensus_all_agents,
@@ -49,10 +50,17 @@ def init_network(
     opt: Optimizer,
     init_sigma: float = 0.05,
     shared_init: bool = True,
+    flat: bool = False,
 ) -> NetworkState:
     """Paper Remark 7: agents use a SHARED initialization the first time the
     local models are trained (but never re-synchronize afterwards).  Set
     ``shared_init=False`` to study the divergent-initialization failure mode.
+
+    ``flat=True`` stores the posterior as a ``core.flat.FlatPosterior``
+    (contiguous [N, P] buffers) — the fast runtime format: consensus runs as
+    ONE fused network-wide pass and the optimizer state collapses to flat
+    buffers too.  Pair it with ``make_round_fn(..., param_layout=...)`` so
+    the model is applied through the layout at the sample boundary.
     """
     from repro.core.posterior import init_posterior
 
@@ -65,6 +73,8 @@ def init_network(
         keys = jax.random.split(key, n_agents)
         stack = jax.vmap(init_params_fn)(keys)
     post = init_posterior(stack, init_sigma=init_sigma)
+    if flat:
+        post = flat_posterior_from_pytree(post, leading_axes=1)
     opt_state = opt.init(post)
     return NetworkState(
         posterior=post,
@@ -81,15 +91,23 @@ def make_round_fn(
     n_mc_samples: int = 1,
     kl_scale: float = 1.0,
     consensus: str = "gaussian",
+    param_layout: FlatLayout | None = None,
 ):
     """Build the jittable per-round transition.
 
     round_fn(state, batches, W, key) -> (state', mean_loss_per_agent)
       batches: pytree, leaves [N, u, ...] — u local minibatches per agent
       W: [N, N] row-stochastic (may differ per round: time-varying networks)
+
+    ``param_layout``: pass the ``FlatLayout`` of the model parameters when
+    the network state holds a ``FlatPosterior`` (``init_network(flat=True)``).
+    ``nll_fn`` keeps its pytree signature — it is wrapped once here so the
+    flat theta sample crosses to a pytree only at the model-apply boundary.
     """
     if consensus not in ("gaussian", "mean_only", "none"):
         raise ValueError(f"unknown consensus mode {consensus!r}")
+    if param_layout is not None:
+        nll_fn = make_flat_nll(nll_fn, param_layout)
 
     def round_fn(state: NetworkState, batches: Any, W: jax.Array, key: jax.Array):
         n_agents = state.step.shape[0]
@@ -119,7 +137,10 @@ def make_round_fn(
         if consensus == "gaussian":
             post = consensus_all_agents(post, W)
         elif consensus == "mean_only":
-            post = GaussianPosterior(
+            # dataclasses.replace keeps the posterior's own type (and, for a
+            # FlatPosterior, its static layout)
+            post = dataclasses.replace(
+                post,
                 mean=consensus_mean_only(post.mean, W),
                 rho=consensus_mean_only(post.rho, W),
             )

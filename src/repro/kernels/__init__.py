@@ -5,7 +5,11 @@
 # Each has a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py;
 # validated in interpret=True mode on CPU, compiled via Mosaic on TPU.
 from repro.kernels import ops, ref
-from repro.kernels.consensus import consensus_fused
+from repro.kernels.consensus import (
+    consensus_fused,
+    consensus_fused_network,
+    consensus_fused_sparse,
+)
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.gauss_vi import sample_and_kl_fused
 
@@ -13,6 +17,8 @@ __all__ = [
     "ops",
     "ref",
     "consensus_fused",
+    "consensus_fused_network",
+    "consensus_fused_sparse",
     "flash_attention",
     "sample_and_kl_fused",
 ]

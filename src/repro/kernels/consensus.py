@@ -1,24 +1,42 @@
-"""Pallas TPU kernel: fused precision-weighted posterior consensus (eq. 6).
+"""Pallas TPU kernels: fused precision-weighted posterior consensus (eq. 6).
 
-For one agent, given the stacked neighbor posteriors (mean, rho) and the
-agent's W row, compute
+Three kernels, all computing
 
     prec_j   = softplus(rho_j)^-2
     prec_out = sum_j w_j prec_j
     mean_out = sum_j w_j prec_j mean_j / prec_out
     rho_out  = softplus^-1(prec_out^-1/2)
 
-Unfused, this is ~6 elementwise HBM round-trips over tensors the size of the
-model (hundreds of MB-GB per device); the consensus step is purely
-memory-bound, so fusing everything into a single pass is worth ~6x on the
-consensus step's HBM traffic.  The parameter vector is processed in VMEM
-tiles of [N_neighbors, BLOCK] — with N <= 16 neighbors and BLOCK = 2048
-fp32 lanes the working set is N*BLOCK*4B*2 = 256 KiB << 16 MiB VMEM.
+* ``consensus_fused``          — one agent, stacked neighbor posteriors.
+* ``consensus_fused_network``  — ALL agents in one ``pallas_call`` over the
+  flat network posterior (mean, rho: ``[N, P]``) with the full row-stochastic
+  ``W [N, N]`` resident in VMEM.  Grid ``(P // BLOCK,)``: each program loads
+  one ``[N, BLOCK]`` column tile of mean and rho ONCE and produces the
+  consensus rows for every agent via an MXU matmul ``W @ prec`` — a single
+  HBM pass over the network posterior per round, vs (leaves x agents x ~6)
+  elementwise round-trips for the unfused leaf-loop einsum.
+* ``consensus_fused_sparse``   — CSR-style neighbor-list variant for sparse
+  topologies (ring/grid/star): grid ``(N, P // BLOCK, D)`` with the neighbor
+  ids scalar-prefetched so each agent reads only its deg(i) <= D neighbor
+  tiles instead of all N rows.
 
-Kernel layout notes (TPU):
-  * the last dim (BLOCK) is the lane dim — keep it a multiple of 128;
-  * the neighbor dim N rides the sublane dim; reductions over it are
-    cheap vector-unit reductions, no MXU involvement.
+Flat-buffer layout contract (shared with ``core.flat.FlatPosterior``):
+  * axis 0 is the agent axis (N rows), axis 1 the flattened parameter axis
+    (P fp32 lanes, leaf-major in layout order);
+  * the caller's buffers are UNPADDED; kernels pad the lane dim up to a
+    BLOCK multiple internally (mean pads 0.0, rho pads 1.0 so pad lanes keep
+    finite precision) and slice the pad back off before returning;
+  * keep BLOCK a multiple of 128 (TPU lane width); the last dim rides the
+    lane dim, agents/neighbors ride sublanes.
+
+Unfused, eq. (6) is ~6 elementwise HBM round-trips over tensors the size of
+the model; the consensus step is purely memory-bound, so fusing the whole
+network into one pass is the entire game (see launch.costmodel
+.consensus_roofline for the analytic pass counts the benchmark reports).
+
+``interpret=None`` on every entry point means auto: Pallas-compiled on TPU,
+interpreter (CPU-correctness mode) elsewhere — callers on TPU no longer
+silently run the interpreter (satellite fix of ISSUE 1).
 """
 from __future__ import annotations
 
@@ -27,8 +45,24 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.numerics import softplus_inv
+from repro.kernels.dispatch import auto_interpret as _auto_interpret
 
 DEFAULT_BLOCK = 2048
+
+
+def _pad_lanes(mean, rho, block):
+    """Pad the lane (last) dim to a BLOCK multiple.  rho pads with 1.0 so the
+    pad lanes keep a finite sigma (inf precision would poison the row sums)."""
+    p = mean.shape[-1]
+    pad = (-p) % block
+    if pad:
+        widths = ((0, 0),) * (mean.ndim - 1) + ((0, pad),)
+        mean = jnp.pad(mean, widths)
+        rho = jnp.pad(rho, widths, constant_values=1.0)
+    return mean, rho, p + pad
 
 
 def _consensus_kernel(w_ref, mean_ref, rho_ref, mean_out_ref, rho_out_ref):
@@ -40,9 +74,7 @@ def _consensus_kernel(w_ref, mean_ref, rho_ref, mean_out_ref, rho_out_ref):
     wp = w * prec  # [N, BLOCK]
     prec_out = jnp.sum(wp, axis=0)  # [BLOCK]
     mean_out = jnp.sum(wp * mean, axis=0) / prec_out
-    sigma_out = jax.lax.rsqrt(prec_out)
-    # softplus^-1(y) = y + log1p(-exp(-y)), stable for y > 0
-    rho_out = sigma_out + jnp.log1p(-jnp.exp(-sigma_out))
+    rho_out = softplus_inv(jax.lax.rsqrt(prec_out))
     mean_out_ref[...] = mean_out[None, :]
     rho_out_ref[...] = rho_out[None, :]
 
@@ -54,20 +86,16 @@ def consensus_fused(
     rho_stack: jax.Array,  # [N, P]
     *,
     block: int = DEFAULT_BLOCK,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Fused consensus over a flat parameter block.  Returns (mean, rho) [P].
 
-    ``interpret=True`` executes the kernel body with the Pallas interpreter
-    (CPU-correctness mode); on real TPU pass interpret=False.
+    ``interpret=None`` auto-dispatches (compiled on TPU, interpreter
+    elsewhere); pass an explicit bool to force either mode.
     """
+    interpret = _auto_interpret(interpret)
     n, p = mean_stack.shape
-    pad = (-p) % block
-    if pad:
-        mean_stack = jnp.pad(mean_stack, ((0, 0), (0, pad)))
-        # rho pads with 1.0 (finite sigma) to avoid inf precision on pad lanes
-        rho_stack = jnp.pad(rho_stack, ((0, 0), (0, pad)), constant_values=1.0)
-    pp = p + pad
+    mean_stack, rho_stack, pp = _pad_lanes(mean_stack, rho_stack, block)
     grid = (pp // block,)
     mean_out, rho_out = pl.pallas_call(
         _consensus_kernel,
@@ -88,3 +116,140 @@ def consensus_fused(
         interpret=interpret,
     )(w_row[:, None], mean_stack, rho_stack)
     return mean_out[0, :p], rho_out[0, :p]
+
+
+def _consensus_network_kernel(w_ref, mean_ref, rho_ref, mean_out_ref, rho_out_ref):
+    w = w_ref[...]  # [N, N], resident in VMEM for every tile
+    mean = mean_ref[...]  # [N, BLOCK]
+    rho = rho_ref[...]  # [N, BLOCK]
+    sigma = jax.nn.softplus(rho)
+    prec = 1.0 / (sigma * sigma)
+    # new_prec[i] = sum_j W[i,j] prec[j]: one MXU matmul covers every agent,
+    # so each [N, BLOCK] column tile is read from HBM exactly once.
+    new_prec = jnp.dot(w, prec, preferred_element_type=jnp.float32)
+    new_pm = jnp.dot(w, prec * mean, preferred_element_type=jnp.float32)
+    mean_out_ref[...] = new_pm / new_prec
+    rho_out_ref[...] = softplus_inv(jax.lax.rsqrt(new_prec))
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def consensus_fused_network(
+    W: jax.Array,  # [N, N] row-stochastic
+    mean: jax.Array,  # [N, P] flat network posterior means
+    rho: jax.Array,  # [N, P]
+    *,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Eq. (6) for the WHOLE network in one ``pallas_call``.
+
+    Returns (mean, rho), both [N, P].  One HBM pass: grid ``(P // BLOCK,)``,
+    W stays in VMEM, each column tile of (mean, rho) is streamed through
+    VMEM once and the per-agent reduction runs on the MXU.
+    """
+    interpret = _auto_interpret(interpret)
+    n, p = mean.shape
+    mean, rho, pp = _pad_lanes(mean, rho, block)
+    grid = (pp // block,)
+    mean_out, rho_out = pl.pallas_call(
+        _consensus_network_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, n), lambda i: (0, 0)),  # W resident across tiles
+            pl.BlockSpec((n, block), lambda i: (0, i)),
+            pl.BlockSpec((n, block), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n, block), lambda i: (0, i)),
+            pl.BlockSpec((n, block), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, pp), mean.dtype),
+            jax.ShapeDtypeStruct((n, pp), rho.dtype),
+        ],
+        interpret=interpret,
+    )(W.astype(jnp.float32), mean, rho)
+    return mean_out[:, :p], rho_out[:, :p]
+
+
+def _consensus_sparse_kernel(
+    nbr_ref,  # scalar-prefetch [N, D] int32 neighbor ids (self-padded)
+    wts_ref,  # scalar-prefetch [N, D] fp32 neighbor weights (0-padded)
+    mean_ref,  # [1, BLOCK] — row nbr[i, d], column tile j
+    rho_ref,  # [1, BLOCK]
+    mean_out_ref,  # [1, BLOCK] — row i, column tile j
+    rho_out_ref,  # [1, BLOCK]
+    acc_prec,  # VMEM scratch [1, BLOCK]
+    acc_pm,  # VMEM scratch [1, BLOCK]
+):
+    i = pl.program_id(0)
+    d = pl.program_id(2)
+    w = wts_ref[i, d]
+
+    @pl.when(d == 0)
+    def _init():
+        acc_prec[...] = jnp.zeros_like(acc_prec)
+        acc_pm[...] = jnp.zeros_like(acc_pm)
+
+    sigma = jax.nn.softplus(rho_ref[...])
+    wp = w / (sigma * sigma)  # zero-weight pad entries contribute nothing
+    acc_prec[...] += wp
+    acc_pm[...] += wp * mean_ref[...]
+
+    @pl.when(d == pl.num_programs(2) - 1)
+    def _finish():
+        prec_out = acc_prec[...]
+        mean_out_ref[...] = acc_pm[...] / prec_out
+        rho_out_ref[...] = softplus_inv(jax.lax.rsqrt(prec_out))
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def consensus_fused_sparse(
+    neighbors: jax.Array,  # [N, D] int32: neighbor ids, padded with self id
+    weights: jax.Array,  # [N, D] fp32: W[i, neighbors[i]], padded with 0.0
+    mean: jax.Array,  # [N, P]
+    rho: jax.Array,  # [N, P]
+    *,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Sparse-neighborhood eq. (6): each agent reads only deg(i) <= D
+    neighbor tiles (D = max in-degree), not all N rows.
+
+    The (neighbors, weights) tables come from ``core.flat.neighbor_tables``
+    (rows of W with zero weight are skipped entirely; ragged degrees are
+    padded with the self id at weight 0, which reads a tile the agent already
+    needs but adds nothing to the sums).  HBM traffic: sum_i deg(i) tiles vs
+    N^2 for the dense kernel — the win for ring/grid/star topologies.
+    """
+    interpret = _auto_interpret(interpret)
+    n, p = mean.shape
+    d = neighbors.shape[1]
+    mean, rho, pp = _pad_lanes(mean, rho, block)
+    grid = (n, pp // block, d)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i, j, k, nbr, wts: (nbr[i, k], j)),
+            pl.BlockSpec((1, block), lambda i, j, k, nbr, wts: (nbr[i, k], j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda i, j, k, nbr, wts: (i, j)),
+            pl.BlockSpec((1, block), lambda i, j, k, nbr, wts: (i, j)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, block), jnp.float32),
+            pltpu.VMEM((1, block), jnp.float32),
+        ],
+    )
+    mean_out, rho_out = pl.pallas_call(
+        _consensus_sparse_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n, pp), mean.dtype),
+            jax.ShapeDtypeStruct((n, pp), rho.dtype),
+        ],
+        interpret=interpret,
+    )(neighbors.astype(jnp.int32), weights.astype(jnp.float32), mean, rho)
+    return mean_out[:, :p], rho_out[:, :p]

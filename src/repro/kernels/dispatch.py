@@ -1,0 +1,17 @@
+"""Shared execution-mode dispatch for all Pallas kernels.
+
+Single home for the "Pallas-compiled on TPU, interpreter elsewhere" policy
+so the per-kernel wrappers and ops.py cannot drift apart.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def auto_interpret(interpret: bool | None) -> bool:
+    """Resolve an ``interpret=None`` auto flag; an explicit bool wins."""
+    return (not on_tpu()) if interpret is None else interpret

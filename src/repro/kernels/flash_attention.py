@@ -24,6 +24,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.dispatch import auto_interpret as _auto_interpret
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
@@ -98,8 +100,10 @@ def flash_attention(
     window: int = 0,
     block_q: int = 512,
     block_k: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    # interpret=None -> auto: Pallas-compiled on TPU, interpreter elsewhere
+    interpret = _auto_interpret(interpret)
     b, h, s, hd = q.shape
     sk = k.shape[2]
     bq = min(block_q, s)

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.dispatch import auto_interpret as _auto_interpret
+
 DEFAULT_BLOCK = 2048
 
 
@@ -49,9 +51,11 @@ def sample_and_kl_fused(
     rho_p: jax.Array,  # [P]
     *,
     block: int = DEFAULT_BLOCK,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Returns (theta [P], kl scalar)."""
+    """Returns (theta [P], kl scalar).  ``interpret=None`` auto-dispatches
+    (Pallas-compiled on TPU, interpreter elsewhere)."""
+    interpret = _auto_interpret(interpret)
     p = mu.shape[0]
     pad = (-p) % block
     if pad:

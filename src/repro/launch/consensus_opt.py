@@ -17,12 +17,14 @@ row-stochastic, output precision remains a convex combination.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.flat import FlatPosterior
 from repro.core.posterior import GaussianPosterior, softplus, softplus_inv
 
 
@@ -55,6 +57,72 @@ def consensus_einsum(posts: GaussianPosterior, W: jax.Array,
         mean=jax.tree.unflatten(treedef, [m for m, _ in out]),
         rho=jax.tree.unflatten(treedef, [r for _, r in out]),
     )
+
+
+def consensus_einsum_flat(
+    posts: FlatPosterior, W: jax.Array, wire_dtype=jnp.float32
+) -> FlatPosterior:
+    """Dense eq. (6) directly on the flat [N, P] buffers: ONE einsum pair for
+    the whole network instead of a Python loop over leaves.  Under GSPMD with
+    the agent dim sharded this still lowers to an all-gather, but of one
+    contiguous buffer — a single collective per round (vs one per leaf), and
+    the wire-dtype compression applies to the whole payload at once."""
+    prec = 1.0 / jnp.square(softplus(posts.rho))
+    pm = (prec * posts.mean).astype(wire_dtype)
+    prec_w = prec.astype(wire_dtype)
+    w_cast = W.astype(wire_dtype)
+    new_prec = jnp.einsum("ij,jp->ip", w_cast, prec_w,
+                          preferred_element_type=jnp.float32)
+    new_pm = jnp.einsum("ij,jp->ip", w_cast, pm,
+                        preferred_element_type=jnp.float32)
+    return dataclasses.replace(
+        posts,
+        mean=new_pm / new_prec,
+        rho=softplus_inv(jnp.sqrt(1.0 / new_prec)),
+    )
+
+
+def consensus_ppermute_ring_flat(
+    posts: FlatPosterior,
+    mesh: jax.sharding.Mesh,
+    axis: str,
+    self_weight: float = 1.0 / 3.0,
+    wire_dtype=jnp.float32,
+) -> FlatPosterior:
+    """Bidirectional-ring eq. (6) on the flat buffers: one ``shard_map`` over
+    the two [N, P] arrays (the pytree version below issues one shard_map per
+    leaf).  Wire bytes per agent: 2 x P (both neighbor directions)."""
+    n = mesh.shape[axis]
+    w_self, w_prev, w_next = ring_weights(n, self_weight)
+    fwd = [(i, (i + 1) % n) for i in range(n)]  # receive from i-1
+    bwd = [(i, (i - 1) % n) for i in range(n)]  # receive from i+1
+
+    def shard_fn(mean, rho):
+        prec = 1.0 / jnp.square(softplus(rho))
+        pm = (prec * mean).astype(wire_dtype)
+        pw = prec.astype(wire_dtype)
+        prev_p = jax.lax.ppermute(pw, axis, fwd)
+        prev_pm = jax.lax.ppermute(pm, axis, fwd)
+        next_p = jax.lax.ppermute(pw, axis, bwd)
+        next_pm = jax.lax.ppermute(pm, axis, bwd)
+        new_prec = (
+            w_self * prec
+            + w_prev * prev_p.astype(jnp.float32)
+            + w_next * next_p.astype(jnp.float32)
+        )
+        new_pm = (
+            w_self * (prec * mean)
+            + w_prev * prev_pm.astype(jnp.float32)
+            + w_next * next_pm.astype(jnp.float32)
+        )
+        return new_pm / new_prec, softplus_inv(jnp.sqrt(1.0 / new_prec))
+
+    spec = P(axis, None)
+    fn = jax.shard_map(
+        shard_fn, mesh=mesh, in_specs=(spec, spec), out_specs=(spec, spec)
+    )
+    mean, rho = fn(posts.mean, posts.rho)
+    return dataclasses.replace(posts, mean=mean, rho=rho)
 
 
 def consensus_ppermute_pod(

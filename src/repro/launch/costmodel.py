@@ -25,6 +25,71 @@ from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 ATTN_KINDS = ("attn", "local_attn", "moe", "dec_attn")
 
 
+def consensus_roofline(
+    n_agents: int,
+    n_params: int,
+    n_leaves: int,
+    max_degree: int | None = None,
+    bytes_per_el: int = 4,
+) -> dict[str, Any]:
+    """Analytic HBM traffic of one consensus round (eq. 6), per execution
+    strategy, for the memory-bound roofline.  Used by
+    ``benchmarks/bench_consensus.py`` when interpret-mode wall-clock is not
+    meaningful (the Pallas interpreter is orders of magnitude off real HW).
+
+    The posterior state is 2 buffers (mean, rho) of [n_agents, n_params]
+    scalars.  Counted array-sized HBM touches (reads + writes), per buffer
+    pair:
+
+    * ``leaf_loop``: the unfused per-leaf einsum reference — per leaf the
+      chain softplus/square/reciprocal -> einsum -> mul/einsum/div ->
+      rsqrt/softplus_inv materializes ~6 round-trips (12 touches) over the
+      leaf-sized tensors; XLA fuses within each elementwise group but the
+      two einsums force the intermediates (prec, prec*mu, new_prec, new_pm)
+      through HBM, and each of the ``n_leaves`` leaves dispatches its own
+      kernel chain.
+    * ``flat_fused``: the single network-wide kernel — read mean+rho once,
+      write mean+rho once: 4 touches, 1 HBM pass, independent of n_leaves.
+    * ``flat_sparse``: same, but each agent reads only deg(i) <= max_degree
+      neighbor rows instead of all N (identical write traffic).
+
+    Returns bytes per strategy, the pass counts, and the roofline seconds at
+    ``HBM_BW`` (single chip).
+    """
+    row_bytes = n_params * bytes_per_el  # one agent, one buffer
+    net_bytes = n_agents * row_bytes  # one buffer for the whole network
+    touches_leaf_loop = 12.0  # ~6 round-trips over both buffers
+    touches_fused = 4.0  # read mean+rho, write mean+rho
+    deg = n_agents if max_degree is None else max_degree
+    bytes_leaf_loop = touches_leaf_loop * net_bytes
+    bytes_fused = touches_fused * net_bytes
+    # sparse: each agent reads deg(i) neighbor rows of both buffers; writes
+    # are the same 2 network-sized buffers as the dense fused kernel
+    bytes_sparse = 2.0 * n_agents * deg * row_bytes + 2.0 * net_bytes
+    out = {
+        "n_agents": n_agents,
+        "n_params": n_params,
+        "n_leaves": n_leaves,
+        "hbm_bytes": {
+            "leaf_loop": bytes_leaf_loop,
+            "flat_fused": bytes_fused,
+            "flat_sparse": bytes_sparse,
+        },
+        "hbm_passes": {  # in fused-pass units (1.0 = one read+write of both buffers)
+            "leaf_loop": touches_leaf_loop / touches_fused,
+            "flat_fused": 1.0,
+            "flat_sparse": bytes_sparse / bytes_fused,
+        },
+        "roofline_seconds": {
+            "leaf_loop": bytes_leaf_loop / HBM_BW,
+            "flat_fused": bytes_fused / HBM_BW,
+            "flat_sparse": bytes_sparse / HBM_BW,
+        },
+        "model_speedup_fused_vs_leaf_loop": bytes_leaf_loop / bytes_fused,
+    }
+    return out
+
+
 def _layer_kind_counts(cfg) -> dict[str, int]:
     counts: dict[str, int] = {}
     for k in cfg.pattern:

@@ -9,6 +9,16 @@ negative log-likelihood is estimated with simple Monte Carlo through the
 reparameterization trick.  The *prior* of round n is the consensus posterior
 q_i^{(n-1)} — this is exactly how the paper injects the network's global
 information into local training (Remark 7).
+
+Posterior-representation contract: everything here is polymorphic over the
+posterior type.  ``post``/``prior`` may be a ``GaussianPosterior`` (pytree
+mean/rho; ``post.sample`` returns a parameter pytree) or a
+``core.flat.FlatPosterior`` (contiguous [P] fp32 buffers; ``post.sample``
+returns a FLAT theta vector).  In the flat case ``nll_fn``/``logits_fn``
+must accept the flat theta — wrap a pytree model once with
+``core.flat.make_flat_nll`` (or apply ``layout.unflatten`` yourself) so the
+flat->pytree conversion happens only at the model-apply boundary.  KL,
+gradients, and the optimizer all run directly on the flat buffers.
 """
 from __future__ import annotations
 
@@ -114,11 +124,14 @@ def mc_predict(
     P(y) = (1/L) sum_k Softmax(y, f_{theta_k}(x)), theta_k ~ b_i^{(n)}.
 
     Returns the averaged class-probability array [..., n_classes].
+    ``logits_fn`` takes a parameter PYTREE; a ``FlatPosterior`` is sampled
+    through its layout (``sample_pytree``) so callers never see flat theta.
     """
     keys = jax.random.split(key, n_mc)
+    sample = getattr(post, "sample_pytree", post.sample)
 
     def one(k):
-        theta = post.sample(k)
+        theta = sample(k)
         return jax.nn.softmax(logits_fn(theta, x), axis=-1)
 
     return jnp.mean(jax.vmap(one)(keys), axis=0)
