@@ -1,5 +1,12 @@
 """Shared helpers for the paper-figure benchmarks (CSV output contract:
-``name,us_per_call,derived``)."""
+``name,us_per_call,derived``).
+
+All NN drivers run on the declarative API (``repro.api``): build one
+``ExperimentSpec`` per figure configuration with ``classification_spec``,
+then ``run_classification`` -> a finished ``Session``.  The MLP definition
+lives in ``repro.api.models`` (re-exported here for the drivers/tests that
+evaluate posteriors directly).
+"""
 from __future__ import annotations
 
 import time
@@ -8,89 +15,77 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.simulated import init_network, make_round_fn, run_rounds
-from repro.data.pipeline import AgentDataset, make_round_batches
-from repro.optim import adam
-from repro.optim.schedules import exponential_decay
+from repro.api import (
+    DataSpec,
+    ExperimentSpec,
+    InferenceSpec,
+    RunSpec,
+    Session,
+    TopologySpec,
+    build_session,
+)
+from repro.api.models import mlp_init, mlp_logits, mlp_nll  # noqa: F401  (re-export)
 from repro.vi.bayes_by_backprop import mc_predict
 
 
-def mlp_init(dim, hidden, n_classes):
-    """The paper's 2-hidden-layer ReLU MLP (200 units on MNIST; scaled via
-    ``hidden`` for the synthetic stand-in)."""
-
-    def init(key):
-        ks = jax.random.split(key, 3)
-        return {
-            "w1": jax.random.normal(ks[0], (dim, hidden)) / np.sqrt(dim),
-            "b1": jnp.zeros((hidden,)),
-            "w2": jax.random.normal(ks[1], (hidden, hidden)) / np.sqrt(hidden),
-            "b2": jnp.zeros((hidden,)),
-            "w3": jax.random.normal(ks[2], (hidden, n_classes)) / np.sqrt(hidden),
-            "b3": jnp.zeros((n_classes,)),
-        }
-
-    return init
-
-
-def mlp_logits(theta, x):
-    h = jax.nn.relu(x @ theta["w1"] + theta["b1"])
-    h = jax.nn.relu(h @ theta["w2"] + theta["b2"])
-    return h @ theta["w3"] + theta["b3"]
-
-
-def mlp_nll(theta, batch):
-    logits = mlp_logits(theta, batch["x"])
-    logz = jax.nn.logsumexp(logits, axis=-1)
-    gold = jnp.take_along_axis(logits, batch["y"][..., None], axis=-1)[..., 0]
-    return jnp.sum(logz - gold)
-
-
-def train_network(
-    shards,
-    W_schedule,
-    rounds,
+def classification_spec(
+    topology: TopologySpec,
     *,
-    hidden=48,
-    n_classes=10,
-    dim=64,
-    batch_size=16,
-    local_updates=4,
-    lr=5e-3,
-    kl_scale=1e-3,
-    consensus="gaussian",
-    seed=0,
-    eval_fn=None,
-    eval_every=0,
-):
-    data = AgentDataset.from_shards(
-        [(x.astype(np.float32), y.astype(np.int32)) for x, y in shards]
+    rounds: int,
+    dataset: str = "synthetic_classification",
+    dataset_params: dict | None = None,
+    partition: str = "iid",
+    partition_params: dict | None = None,
+    hidden: int = 48,
+    batch_size: int = 16,
+    local_updates: int = 4,
+    lr: float = 5e-3,
+    kl_scale: float = 1e-3,
+    consensus: str = "gaussian",
+    seed: int = 0,
+    engine: str = "simulated",
+) -> ExperimentSpec:
+    """The benchmark drivers' common configuration (the paper's NN training
+    recipe: Adam, per-round lr decay 0.99, u local steps of batch 16)."""
+    return ExperimentSpec(
+        topology=topology,
+        data=DataSpec(
+            dataset=dataset,
+            dataset_params=dataset_params or {},
+            partition=partition,
+            partition_params=partition_params or {},
+            batch_size=batch_size,
+            local_updates=local_updates,
+        ),
+        inference=InferenceSpec(
+            hidden=hidden,
+            lr=lr,
+            kl_scale=kl_scale,
+            consensus=consensus,
+        ),
+        run=RunSpec(n_rounds=rounds, seed=seed, engine=engine),
     )
-    n_agents = data.n_agents
-    sampler = make_round_batches(data, batch_size, local_updates)
-    opt = adam()
-    round_fn = make_round_fn(
-        mlp_nll, opt, exponential_decay(lr, 0.99), kl_scale=kl_scale,
-        consensus=consensus,
-    )
-    state = init_network(
-        jax.random.key(seed), n_agents, mlp_init(dim, hidden, n_classes), opt,
-        init_sigma=0.05,
-    )
-    return run_rounds(
-        round_fn, state, sampler, W_schedule, rounds, jax.random.key(seed + 1),
-        eval_fn=eval_fn, eval_every=eval_every,
-    )
+
+
+def run_classification(spec: ExperimentSpec, w_schedule=None) -> Session:
+    """build + run; ``w_schedule`` (static / list / Callable[[int], W])
+    overrides the spec topology round-by-round."""
+    session = build_session(spec)
+    session.run(w_schedule=w_schedule)
+    return session
 
 
 def network_accuracy(state, x_test, y_test, n_mc=4, per_agent=False, key=None):
+    """Per-agent (or network-average) MC-predictive accuracy.  ``state`` is
+    an engine state (``NetworkState``/``BayesTrainState``) or a ``Session``."""
+    posterior = state.posterior() if isinstance(state, Session) else state.posterior
     xt = jnp.asarray(x_test)
     yt = np.asarray(y_test)
-    n_agents = jax.tree.leaves(state.posterior.mean)[0].shape[0]
+    n_agents = jax.tree.leaves(posterior.mean)[0].shape[0]
     key = key if key is not None else jax.random.key(99)
     accs = []
     for i in range(n_agents):
-        post_i = jax.tree.map(lambda l: l[i], state.posterior)
+        post_i = jax.tree.map(lambda l: l[i], posterior)
         probs = mc_predict(post_i, mlp_logits, xt, key, n_mc=n_mc)
         pred = np.asarray(jnp.argmax(probs, -1))
         accs.append(float((pred == yt).mean()))
@@ -100,7 +95,8 @@ def network_accuracy(state, x_test, y_test, n_mc=4, per_agent=False, key=None):
 def agent_confidence(state, agent, x, label, n_mc=8, key=None):
     """Paper's confidence metric: mean posterior-predictive probability of
     ``label`` on inputs x (Figs 3/5)."""
-    post = jax.tree.map(lambda l: l[agent], state.posterior)
+    posterior = state.posterior() if isinstance(state, Session) else state.posterior
+    post = jax.tree.map(lambda l: l[agent], posterior)
     key = key if key is not None else jax.random.key(7)
     probs = mc_predict(post, mlp_logits, jnp.asarray(x), key, n_mc=n_mc)
     return float(np.mean(np.asarray(probs[:, label])))

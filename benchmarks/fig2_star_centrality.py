@@ -5,32 +5,32 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import Timer, emit, network_accuracy, train_network
+from benchmarks.common import Timer, classification_spec, emit, run_classification
+from repro.api import TopologySpec
 from repro.core.graphs import star_w
 from repro.core.theory import stationary_distribution
-from repro.data.partition import star_partition
-from repro.data.synthetic import make_synthetic_classification
 
 A_VALUES = (0.1, 0.3, 0.5, 0.7)
 N_EDGE = 8
 
+# MNIST-Setup1 analogue: center holds labels 2..9, edges share {0,1}
+DATASET = dict(n_classes=10, dim=64, n_train_per_class=200, noise=0.55, seed=0)
+PARTITION = dict(center_labels=list(range(2, 10)), edge_labels=[0, 1], n_edge=N_EDGE)
+
 
 def run(rounds: int = 18) -> None:
-    ds = make_synthetic_classification(
-        n_classes=10, dim=64, n_train_per_class=200, noise=0.55, seed=0
-    )
-    # MNIST-Setup1 analogue: center holds labels 2..9, edges share {0,1}
-    shards = star_partition(
-        ds.x_train, ds.y_train, center_labels=list(range(2, 10)),
-        edge_labels=[0, 1], n_edge=N_EDGE,
-    )
     accs = []
     for a in A_VALUES:
         t = Timer()
-        W = star_w(N_EDGE, a)
-        v1 = stationary_distribution(W)[0]
-        state, _ = train_network(shards, np.asarray(W), rounds, seed=0)
-        acc = network_accuracy(state, ds.x_test, ds.y_test)
+        v1 = stationary_distribution(star_w(N_EDGE, a))[0]
+        session = run_classification(classification_spec(
+            TopologySpec.star(N_EDGE, a),
+            rounds=rounds,
+            dataset_params=DATASET,
+            partition="star",
+            partition_params=PARTITION,
+        ))
+        acc = session.evaluate()["avg_acc"]
         accs.append(acc)
         emit(f"fig2_star_a{a}", t.us(), f"acc={acc:.4f};v_center={v1:.2f}")
     # the paper's qualitative claim: higher centrality of the informative

@@ -5,33 +5,33 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import Timer, agent_confidence, emit, train_network
-from repro.core.graphs import star_w
-from repro.data.partition import star_partition
-from repro.data.synthetic import make_synthetic_classification
+from benchmarks.common import Timer, agent_confidence, classification_spec, emit, run_classification
+from repro.api import TopologySpec
 
 N_EDGE = 8
+DATASET = dict(n_classes=10, dim=64, n_train_per_class=200, noise=0.55, seed=0)
+PARTITION = dict(center_labels=list(range(2, 10)), edge_labels=[0, 1], n_edge=N_EDGE)
 
 
 def run(rounds: int = 18) -> None:
-    ds = make_synthetic_classification(
-        n_classes=10, dim=64, n_train_per_class=200, noise=0.55, seed=0
-    )
-    shards = star_partition(
-        ds.x_train, ds.y_train, center_labels=list(range(2, 10)),
-        edge_labels=[0, 1], n_edge=N_EDGE,
-    )
-    # label 2: ID at the center, OOD at the edges; label 0: vice versa
-    x_lbl2 = ds.x_test[ds.y_test == 2]
-    x_lbl0 = ds.x_test[ds.y_test == 0]
     edge_ood_by_a = []
     for a in (0.3, 0.5, 0.7):
         t = Timer()
-        state, _ = train_network(shards, np.asarray(star_w(N_EDGE, a)), rounds, seed=0)
-        c_center_id = agent_confidence(state, 0, x_lbl2, 2)
-        c_center_ood = agent_confidence(state, 0, x_lbl0, 0)
-        c_edge_id = agent_confidence(state, 1, x_lbl0, 0)
-        c_edge_ood = agent_confidence(state, 1, x_lbl2, 2)
+        session = run_classification(classification_spec(
+            TopologySpec.star(N_EDGE, a),
+            rounds=rounds,
+            dataset_params=DATASET,
+            partition="star",
+            partition_params=PARTITION,
+        ))
+        ds = session.data.dataset
+        # label 2: ID at the center, OOD at the edges; label 0: vice versa
+        x_lbl2 = ds.x_test[ds.y_test == 2]
+        x_lbl0 = ds.x_test[ds.y_test == 0]
+        c_center_id = agent_confidence(session, 0, x_lbl2, 2)
+        c_center_ood = agent_confidence(session, 0, x_lbl0, 0)
+        c_edge_id = agent_confidence(session, 1, x_lbl0, 0)
+        c_edge_ood = agent_confidence(session, 1, x_lbl2, 2)
         edge_ood_by_a.append(c_edge_ood)
         emit(
             f"fig3_confidence_a{a}", t.us(),

@@ -5,28 +5,30 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import Timer, emit, network_accuracy, train_network
+from benchmarks.common import Timer, classification_spec, emit, run_classification
+from repro.api import TopologySpec
 from repro.core.graphs import grid_w
 from repro.core.theory import stationary_distribution
-from repro.data.partition import grid_partition
-from repro.data.synthetic import make_synthetic_classification
+
+DATASET = dict(n_classes=10, dim=64, n_train_per_class=200, noise=0.55, seed=0)
 
 
 def run(rounds: int = 18) -> None:
-    ds = make_synthetic_classification(
-        n_classes=10, dim=64, n_train_per_class=200, noise=0.55, seed=0
-    )
-    W = grid_w(3, 3)
-    v = stationary_distribution(W)
+    v = stationary_distribution(grid_w(3, 3))
     results = {}
     for name, pos in (("center", 4), ("corner", 0)):
         t = Timer()
-        shards = grid_partition(
-            ds.x_train, ds.y_train, type1_labels=list(range(2, 10)),
-            type2_labels=[0, 1], type1_position=pos,
-        )
-        state, _ = train_network(shards, np.asarray(W), rounds, seed=0)
-        acc = network_accuracy(state, ds.x_test, ds.y_test)
+        session = run_classification(classification_spec(
+            TopologySpec.grid(3, 3),
+            rounds=rounds,
+            dataset_params=DATASET,
+            partition="grid",
+            partition_params=dict(
+                type1_labels=list(range(2, 10)), type2_labels=[0, 1],
+                type1_position=pos,
+            ),
+        ))
+        acc = session.evaluate()["avg_acc"]
         results[name] = acc
         emit(f"fig4_grid_{name}", t.us(), f"acc={acc:.4f};v_type1={v[pos]:.3f}")
     assert results["center"] > results["corner"] - 0.01, results

@@ -7,46 +7,55 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import Timer, agent_confidence, emit, network_accuracy, train_network
-from repro.core.graphs import star_w
-from repro.data.partition import star_partition
-from repro.data.synthetic import make_synthetic_classification
+from benchmarks.common import (
+    Timer,
+    agent_confidence,
+    classification_spec,
+    emit,
+    network_accuracy,
+    run_classification,
+)
+from repro.api import TopologySpec
 
 N_EDGE = 8
+TOPOLOGY = TopologySpec.star(N_EDGE, 0.5)
+
+
+def _star_session(rounds, dataset, dataset_params, center, edge):
+    return run_classification(classification_spec(
+        TOPOLOGY,
+        rounds=rounds,
+        dataset=dataset,
+        dataset_params=dataset_params,
+        partition="star",
+        partition_params=dict(center_labels=center, edge_labels=edge, n_edge=N_EDGE),
+    ))
 
 
 def run(rounds: int = 18) -> None:
-    ds = make_synthetic_classification(
+    mnist_params = dict(
         n_classes=10, dim=64, n_train_per_class=200, noise=0.5,
-        confusable_pairs=((4, 9),), confusable_gap=2.5, seed=0,
+        confusable_pairs=[[4, 9]], confusable_gap=2.5, seed=0,
     )
-    W = np.asarray(star_w(N_EDGE, 0.5))
-    pair_mask = np.isin(ds.y_test, [4, 9])
 
     # ambiguous: center {0..7} (has 4), edges {8,9} (have 9) -> nobody sees both
     t = Timer()
-    shards_bad = star_partition(
-        ds.x_train, ds.y_train, center_labels=list(range(8)),
-        edge_labels=[8, 9], n_edge=N_EDGE,
-    )
-    state_bad, _ = train_network(shards_bad, W, rounds, seed=0)
-    acc_bad = network_accuracy(state_bad, ds.x_test, ds.y_test)
-    pair_bad = network_accuracy(
-        state_bad, ds.x_test[pair_mask], ds.y_test[pair_mask]
-    )
-    conf_bad = agent_confidence(state_bad, 0, ds.x_test[ds.y_test == 9], 9)
+    sess_bad = _star_session(rounds, "synthetic_classification", mnist_params,
+                             list(range(8)), [8, 9])
+    ds = sess_bad.data.dataset
+    pair_mask = np.isin(ds.y_test, [4, 9])
+    acc_bad = network_accuracy(sess_bad, ds.x_test, ds.y_test)
+    pair_bad = network_accuracy(sess_bad, ds.x_test[pair_mask], ds.y_test[pair_mask])
+    conf_bad = agent_confidence(sess_bad, 0, ds.x_test[ds.y_test == 9], 9)
     emit("fig5_partition_ambiguous", t.us(),
          f"acc={acc_bad:.4f};pair_acc={pair_bad:.4f};center_conf_9={conf_bad:.3f}")
 
     # clean: the confusable pair lives together at the center
     t = Timer()
-    shards_ok = star_partition(
-        ds.x_train, ds.y_train, center_labels=[2, 3, 4, 5, 6, 7, 8, 9],
-        edge_labels=[0, 1], n_edge=N_EDGE,
-    )
-    state_ok, _ = train_network(shards_ok, W, rounds, seed=0)
-    acc_ok = network_accuracy(state_ok, ds.x_test, ds.y_test)
-    pair_ok = network_accuracy(state_ok, ds.x_test[pair_mask], ds.y_test[pair_mask])
+    sess_ok = _star_session(rounds, "synthetic_classification", mnist_params,
+                            [2, 3, 4, 5, 6, 7, 8, 9], [0, 1])
+    acc_ok = network_accuracy(sess_ok, ds.x_test, ds.y_test)
+    pair_ok = network_accuracy(sess_ok, ds.x_test[pair_mask], ds.y_test[pair_mask])
     emit("fig5_partition_clean", t.us(), f"acc={acc_ok:.4f};pair_acc={pair_ok:.4f}")
 
     assert pair_ok > pair_bad + 0.05, (pair_ok, pair_bad)
@@ -56,18 +65,16 @@ def run(rounds: int = 18) -> None:
     # Setup2 splits pullover AWAY from its family (edges hold it with shoes)
     # -> family members confuse; Setup1 keeps the family together at the
     # center -> clean.
-    from repro.data.synthetic import fmnist_like
-
-    fm = fmnist_like(dim=64, n_train_per_class=200, noise=0.8, seed=1)
+    fm_params = dict(dim=64, n_train_per_class=200, noise=0.8, seed=1)
     shirt_family = [0, 2, 3, 4, 6]
-    fam_mask = np.isin(fm.y_test, shirt_family)
     for tag, center, edge in (
         ("setup1", [0, 2, 3, 4, 6, 8], [1, 5, 7, 9]),  # family together
         ("setup2", [0, 1, 3, 4, 6, 8], [2, 5, 7, 9]),  # pullover split out
     ):
         t = Timer()
-        sh = star_partition(fm.x_train, fm.y_train, center, edge, n_edge=N_EDGE)
-        st, _ = train_network(sh, W, rounds, seed=0)
+        st = _star_session(rounds, "fmnist_like", fm_params, center, edge)
+        fm = st.data.dataset
+        fam_mask = np.isin(fm.y_test, shirt_family)
         fam_acc = network_accuracy(st, fm.x_test[fam_mask], fm.y_test[fam_mask])
         acc = network_accuracy(st, fm.x_test, fm.y_test)
         emit(f"fig5_fmnist_{tag}", t.us(),

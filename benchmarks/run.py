@@ -18,6 +18,10 @@ Subcommands:
   run.py bench [--full] [--json-out F]           quick consensus sweep — the
             CI smoke test of the benchmark harness itself (interpret-mode
             kernel probe + tiny shapes; --full for the real sweep)
+  run.py api-smoke                               headless exercise of the
+            declarative repro.api surface: builds a tiny ExperimentSpec,
+            runs BOTH engines (simulated + launch), asserts their posteriors
+            agree, round-trips a self-describing session checkpoint
 """
 from __future__ import annotations
 
@@ -56,11 +60,63 @@ ALL = {
 }
 
 
+def api_smoke() -> None:
+    """Exercise the repro.api spec/session surface end-to-end on a tiny
+    experiment: eager validation, both engines, engine agreement, evaluate,
+    and the self-describing checkpoint round trip."""
+    import dataclasses
+    import os
+    import tempfile
+
+    import numpy as np
+
+    from repro.api import (
+        DataSpec, ExperimentSpec, InferenceSpec, RunSpec, Session,
+        TopologySpec, build_session,
+    )
+
+    spec = ExperimentSpec(
+        topology=TopologySpec.star(n_edge=2, a=0.5),
+        data=DataSpec(
+            dataset_params=dict(n_classes=3, dim=8, n_train_per_class=30),
+            partition="star",
+            partition_params=dict(center_labels=[1, 2], edge_labels=[0], n_edge=2),
+            batch_size=4, local_updates=2,
+        ),
+        inference=InferenceSpec(hidden=8, depth=1, lr=1e-2),
+        run=RunSpec(n_rounds=3, seed=0),
+    )
+    sessions = {}
+    for engine in ("simulated", "launch"):
+        s = build_session(
+            dataclasses.replace(spec, run=dataclasses.replace(spec.run, engine=engine))
+        )
+        s.run()
+        sessions[engine] = s
+        print(f"api-smoke,{engine},avg_acc={s.evaluate()['avg_acc']:.4f}")
+    p_sim = sessions["simulated"].posterior()
+    p_launch = sessions["launch"].posterior()
+    np.testing.assert_allclose(
+        np.asarray(p_sim.mean), np.asarray(p_launch.mean), atol=1e-5, rtol=1e-5
+    )
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "session.ckpt")
+        sessions["simulated"].save(path)
+        resumed = Session.load(path)
+        np.testing.assert_array_equal(
+            np.asarray(resumed.posterior().mean), np.asarray(p_sim.mean)
+        )
+        assert resumed.round_idx == 3
+    print("api-smoke,ok,engines_agree=1;ckpt_roundtrip=1")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument(
-        "cmd", nargs="?", choices=["figures", "bench"], default="figures",
-        help="figures (default): paper figures; bench: consensus perf sweep",
+        "cmd", nargs="?", choices=["figures", "bench", "api-smoke"],
+        default="figures",
+        help="figures (default): paper figures; bench: consensus perf "
+        "sweep; api-smoke: declarative-API smoke",
     )
     ap.add_argument("--only", nargs="*", choices=list(ALL), default=None)
     ap.add_argument(
@@ -74,6 +130,9 @@ def main(argv=None) -> None:
     )
     args = ap.parse_args(argv)
 
+    if args.cmd == "api-smoke":
+        api_smoke()
+        return
     if args.cmd == "bench":
         bench_consensus.run(
             quick=not args.full,

@@ -1,21 +1,24 @@
 """Paper Example 1 / Fig 1 exactly: decentralized Bayesian linear regression
 with theta* = [-0.3, 0.5, 0.5, 0.1, 0.2], noise 0.8, each of the 4 agents
 observing only ONE input coordinate (extreme non-IID), using the paper's own
-social-interaction matrix from supplementary 1.3.
+social-interaction matrix from supplementary 1.3 — declared as one
+``ExperimentSpec`` with the exact-conjugate inference family
+(``InferenceSpec(method="conjugate_linreg")``, full-covariance posteriors,
+eq. 2 local updates + eq. 6 consensus).
 
     PYTHONPATH=src python examples/linear_regression.py
 """
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graphs import check_w
-from repro.core.posterior import (
-    FullCovGaussian,
-    consensus_full_cov,
-    linreg_bayes_update,
+from repro.api import (
+    DataSpec,
+    ExperimentSpec,
+    InferenceSpec,
+    RunSpec,
+    TopologySpec,
+    build_session,
 )
 from repro.core.theory import lambda_max, stationary_distribution
-from repro.data.linreg import make_linreg_task
 
 # supplementary 1.3 weights (4 agents)
 W = np.array([
@@ -25,38 +28,26 @@ W = np.array([
     [0.0, 0.5, 0.0, 0.5],
 ])
 
+SPEC = ExperimentSpec(
+    topology=TopologySpec.explicit(W),
+    data=DataSpec(dataset="linreg", batch_size=10),
+    inference=InferenceSpec(method="conjugate_linreg", prior_var=0.5),
+    run=RunSpec(n_rounds=200, seed=0),
+)
+
 
 def main():
-    check_w(W)
     print("centrality:", np.round(stationary_distribution(W), 3),
           " lambda_max:", round(lambda_max(W), 3))
-    task = make_linreg_task()
-    rng = np.random.default_rng(0)
-    n, d = 4, task.d
-    posts = FullCovGaussian(
-        mean=jnp.zeros((n, d)),
-        prec=jnp.broadcast_to(jnp.eye(d) / 0.5, (n, d, d)),
-    )
-    phi_t, y_t = task.sample_global(rng, 4000)
-    for r in range(200):
-        means, precs = [], []
-        for i in range(n):
-            phi, y = task.sample_local(rng, i, 10)
-            p = linreg_bayes_update(
-                FullCovGaussian(posts.mean[i], posts.prec[i]),
-                jnp.asarray(phi), jnp.asarray(y), task.noise_std**2,
-            )
-            means.append(p.mean)
-            precs.append(p.prec)
-        posts = consensus_full_cov(
-            FullCovGaussian(jnp.stack(means), jnp.stack(precs)), jnp.asarray(W)
-        )
-        if (r + 1) % 40 == 0:
-            mses = [float(np.mean((phi_t @ np.asarray(posts.mean[i]) - y_t) ** 2))
-                    for i in range(n)]
-            print(f"round {r + 1:4d}  per-agent test MSE "
-                  + " ".join(f"{m:.4f}" for m in mses)
-                  + f"   (noise floor {task.noise_std**2:.3f})")
+    session = build_session(SPEC)  # validates W (Assumption 1) eagerly
+    task = session.data.dataset
+    for _ in range(5):
+        session.run(40)
+        mses = session.evaluate()["mse"]
+        print(f"round {session.round_idx:4d}  per-agent test MSE "
+              + " ".join(f"{m:.4f}" for m in mses)
+              + f"   (noise floor {task.noise_std**2:.3f})")
+    posts = session.posterior()
     print("\ntheta*      =", np.round(task.theta_star, 3))
     print("agent 0 mu  =", np.round(np.asarray(posts.mean[0]), 3))
     print("every agent recovered theta* despite observing a single coordinate.")

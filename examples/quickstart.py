@@ -1,4 +1,4 @@
-"""Quickstart: decentralized Bayesian learning in ~60 lines.
+"""Quickstart: decentralized Bayesian learning in ONE declarative spec.
 
 Four agents, a star network, non-IID label partition of a synthetic
 classification task.  Each round every agent runs a few Bayes-by-Backprop
@@ -6,73 +6,52 @@ steps on its LOCAL data, then precision-averages posteriors with its
 neighbors (eq. 6).  Watch the edge agents learn labels they have NEVER
 seen.
 
+The whole experiment is the ~15-line ``ExperimentSpec`` below —
+``build_session`` validates it eagerly (connectivity, row-stochasticity,
+agent counts) and returns an engine-backed ``Session``; swap
+``RunSpec(engine="launch")`` to run the identical experiment on the
+production ``launch.steps`` path, or change ``TopologySpec`` to move the
+same run onto any other graph.
+
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graphs import star_w
-from repro.core.simulated import init_network, make_round_fn, run_rounds
+from repro.api import (
+    DataSpec,
+    ExperimentSpec,
+    InferenceSpec,
+    RunSpec,
+    TopologySpec,
+    build_session,
+)
 from repro.core.theory import stationary_distribution
-from repro.data.partition import star_partition
-from repro.data.pipeline import AgentDataset, make_round_batches
-from repro.data.synthetic import make_synthetic_classification
-from repro.optim import adam
-from repro.optim.schedules import exponential_decay
-from repro.vi.bayes_by_backprop import mc_predict
 
-
-def mlp_init(key, dim=32, hidden=32, classes=4):
-    ks = jax.random.split(key, 2)
-    return {
-        "w1": jax.random.normal(ks[0], (dim, hidden)) / np.sqrt(dim),
-        "b1": jnp.zeros((hidden,)),
-        "w2": jax.random.normal(ks[1], (hidden, classes)) / np.sqrt(hidden),
-        "b2": jnp.zeros((classes,)),
-    }
-
-
-def logits_fn(theta, x):
-    return jax.nn.relu(x @ theta["w1"] + theta["b1"]) @ theta["w2"] + theta["b2"]
-
-
-def nll_fn(theta, batch):
-    lg = logits_fn(theta, batch["x"])
-    logz = jax.nn.logsumexp(lg, -1)
-    gold = jnp.take_along_axis(lg, batch["y"][..., None], -1)[..., 0]
-    return jnp.sum(logz - gold)
+SPEC = ExperimentSpec(
+    # star: agent 0 (center) holds labels {1,2,3}; 3 edge agents share label 0
+    topology=TopologySpec.star(n_edge=3, a=0.5),
+    data=DataSpec(
+        dataset_params=dict(n_classes=4, dim=32, n_train_per_class=150),
+        partition="star",
+        partition_params=dict(center_labels=[1, 2, 3], edge_labels=[0], n_edge=3),
+        batch_size=16,
+        local_updates=4,
+    ),
+    inference=InferenceSpec(hidden=32, depth=1, lr=5e-3, kl_scale=1e-3),
+    run=RunSpec(n_rounds=20, seed=0, eval_every=5),
+)
 
 
 def main():
-    ds = make_synthetic_classification(n_classes=4, dim=32, n_train_per_class=150)
-    # star: agent 0 (center) holds labels {1,2,3}; 3 edge agents share label 0
-    shards = star_partition(ds.x_train, ds.y_train, [1, 2, 3], [0], n_edge=3)
-    data = AgentDataset.from_shards(shards)
-    W = star_w(3, a=0.5)
+    session = build_session(SPEC)
+    W = SPEC.topology.w_schedule()(0)
     print("eigenvector centrality:", np.round(stationary_distribution(W), 3))
 
-    opt = adam()
-    round_fn = make_round_fn(nll_fn, opt, exponential_decay(5e-3, 0.99),
-                             kl_scale=1e-3)
-    state = init_network(jax.random.key(0), 4, mlp_init, opt)
-    sampler = make_round_batches(data, batch_size=16, n_local_updates=4)
-
-    def evaluate(state):
-        accs = []
-        for i in range(4):
-            post = jax.tree.map(lambda l: l[i], state.posterior)
-            probs = mc_predict(post, logits_fn, jnp.asarray(ds.x_test),
-                               jax.random.key(1), n_mc=4)
-            accs.append(float((np.argmax(np.asarray(probs), -1) == ds.y_test).mean()))
-        return {"acc": accs}
-
-    state, hist = run_rounds(round_fn, state, sampler, np.asarray(W), 20,
-                             jax.random.key(2), eval_fn=evaluate, eval_every=5)
+    hist = session.run(eval_fn=lambda s: s.evaluate())
     for rec in hist:
         accs = ", ".join(f"{a:.2f}" for a in rec["acc"])
         print(f"round {rec['round']:3d}  loss {rec['loss']:7.3f}  per-agent acc [{accs}]")
-    final = np.mean(hist[-1]["acc"])
+    final = hist[-1]["avg_acc"]
     print(f"\nfinal average accuracy {final:.3f} — edge agents classify labels "
           "1-3 they never observed locally (the paper's central claim).")
 

@@ -1,0 +1,69 @@
+"""``repro.api`` — the declarative front door (the supported entry point).
+
+One ``ExperimentSpec`` describes a full decentralized-Bayesian-learning
+experiment (topology x data x inference x run); ``build_session`` validates
+it eagerly and returns an engine-backed ``Session``:
+
+    from repro.api import (
+        DataSpec, ExperimentSpec, InferenceSpec, RunSpec, TopologySpec,
+        build_session,
+    )
+
+    spec = ExperimentSpec(
+        topology=TopologySpec.star(n_edge=3, a=0.5),
+        data=DataSpec(
+            dataset_params=dict(n_classes=4, dim=32, n_train_per_class=150),
+            partition="star",
+            partition_params=dict(center_labels=[1, 2, 3], edge_labels=[0],
+                                  n_edge=3),
+        ),
+        inference=InferenceSpec(hidden=32, depth=1, lr=5e-3),
+        run=RunSpec(n_rounds=20, seed=0),
+    )
+    session = build_session(spec)
+    session.run()
+    print(session.evaluate())
+
+Engines: ``RunSpec.engine="simulated"`` (flat vmap runtime, default) or
+``"launch"`` (production ``launch.steps`` on the flat posterior); the
+conjugate linear-regression family of paper Example 1 is selected by
+``InferenceSpec(method="conjugate_linreg")``.
+"""
+from repro.api.data import DataBundle, build_data
+from repro.api.engines import (
+    ConjugateLinregEngine,
+    Engine,
+    LaunchEngine,
+    SimulatedEngine,
+)
+from repro.api.models import MODELS, ModelFns, build_model, mlp_init, mlp_logits, mlp_nll
+from repro.api.session import Session, build_session
+from repro.api.spec import (
+    DataSpec,
+    ExperimentSpec,
+    InferenceSpec,
+    RunSpec,
+    TopologySpec,
+)
+
+__all__ = [
+    "ConjugateLinregEngine",
+    "DataBundle",
+    "DataSpec",
+    "Engine",
+    "ExperimentSpec",
+    "InferenceSpec",
+    "LaunchEngine",
+    "MODELS",
+    "ModelFns",
+    "RunSpec",
+    "Session",
+    "SimulatedEngine",
+    "TopologySpec",
+    "build_data",
+    "build_model",
+    "build_session",
+    "mlp_init",
+    "mlp_logits",
+    "mlp_nll",
+]

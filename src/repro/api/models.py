@@ -1,0 +1,83 @@
+"""Model registry for the declarative API.
+
+The paper's NN experiments all use a small ReLU MLP trained with
+Bayes-by-Backprop (Sec 4.2: 2 hidden layers, 200 units on MNIST).  The
+registry maps ``InferenceSpec.model`` names to a ``ModelFns`` triple; the
+input/output dimensions always come from the ``DataSpec`` at
+``build_session`` time, so spec and dataset cannot disagree on shapes.
+
+Everything here keeps the PYTREE parameter signature — the flat runtime
+wraps ``nll_fn`` through ``FlatLayout.unflatten`` at the model-apply
+boundary (``core.flat.make_flat_nll``), never the other way around.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelFns:
+    """(init, logits, nll) for one model family at fixed dimensions."""
+
+    init_fn: Callable[[jax.Array], PyTree]
+    logits_fn: Callable[[PyTree, jax.Array], jax.Array]
+    nll_fn: Callable[[PyTree, Any], jax.Array]
+
+
+def mlp_init(dim: int, hidden: int, n_classes: int, depth: int = 2):
+    """``depth``-hidden-layer ReLU MLP, 1/sqrt(fan_in) init (the paper's
+    architecture; ``depth=2`` matches Sec 4.2 / the benchmark drivers)."""
+
+    sizes = [dim] + [hidden] * depth + [n_classes]
+
+    def init(key):
+        ks = jax.random.split(key, len(sizes) - 1)
+        params = {}
+        for i, (k, fan_in, fan_out) in enumerate(zip(ks, sizes[:-1], sizes[1:]), 1):
+            params[f"w{i}"] = jax.random.normal(k, (fan_in, fan_out)) / np.sqrt(fan_in)
+            params[f"b{i}"] = jnp.zeros((fan_out,))
+        return params
+
+    return init
+
+
+def mlp_logits(theta: PyTree, x: jax.Array) -> jax.Array:
+    n_layers = len(theta) // 2
+    h = x
+    for i in range(1, n_layers):
+        h = jax.nn.relu(h @ theta[f"w{i}"] + theta[f"b{i}"])
+    return h @ theta[f"w{n_layers}"] + theta[f"b{n_layers}"]
+
+
+def mlp_nll(theta: PyTree, batch: dict) -> jax.Array:
+    """Total (summed) softmax cross-entropy over the batch."""
+    logits = mlp_logits(theta, batch["x"])
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["y"][..., None], axis=-1)[..., 0]
+    return jnp.sum(logz - gold)
+
+
+def _build_mlp(dim: int, n_classes: int, hidden: int, depth: int) -> ModelFns:
+    return ModelFns(
+        init_fn=mlp_init(dim, hidden, n_classes, depth=depth),
+        logits_fn=mlp_logits,
+        nll_fn=mlp_nll,
+    )
+
+
+MODELS: dict[str, Callable[..., ModelFns]] = {
+    "mlp": _build_mlp,
+}
+
+
+def build_model(name: str, dim: int, n_classes: int, *, hidden: int, depth: int) -> ModelFns:
+    if name not in MODELS:
+        raise ValueError(f"unknown model {name!r}; known: {sorted(MODELS)}")
+    return MODELS[name](dim, n_classes, hidden=hidden, depth=depth)

@@ -1,0 +1,249 @@
+"""``build_session(spec)`` — the supported front door.
+
+Validates an ``ExperimentSpec`` eagerly (topology connectivity and
+row-stochasticity, agent-count agreement between topology and partition,
+dataset/model shape agreement by construction), builds the data and the
+engine, and returns a ``Session``:
+
+    spec = ExperimentSpec(
+        topology=TopologySpec.star(n_edge=3, a=0.5),
+        data=DataSpec(partition="star", partition_params=...),
+        inference=InferenceSpec(hidden=32),
+        run=RunSpec(n_rounds=20, seed=0),
+    )
+    session = build_session(spec)
+    session.run()                    # the whole experiment, or
+    session.round()                  # one communication round at a time
+    session.evaluate()               # per-agent test metrics (MC predictive)
+    session.save("exp.ckpt")         # self-describing: spec embedded
+    session = Session.load("exp.ckpt")   # rebuild + resume
+
+The engine behind the session (``RunSpec.engine``) is swappable without
+touching the loop: ``simulated`` (flat vmap runtime) or ``launch``
+(production step functions) — plus the conjugate linear-regression engine,
+selected automatically by ``InferenceSpec.method``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.data import DataBundle, build_data
+from repro.api.engines import (
+    ConjugateLinregEngine,
+    Engine,
+    LaunchEngine,
+    SimulatedEngine,
+)
+from repro.api.models import ModelFns, build_model
+from repro.api.spec import ExperimentSpec
+from repro.core.simulated import as_w_schedule
+from repro.vi.bayes_by_backprop import mc_predict
+
+
+def build_session(spec: ExperimentSpec) -> "Session":
+    """Validate ``spec`` eagerly and return a ready-to-run ``Session``."""
+    spec.validate()
+    n_agents = spec.topology.n_agents()
+    data = build_data(spec.data, n_agents)
+
+    model: ModelFns | None = None
+    if spec.inference.method == "conjugate_linreg":
+        engine: Engine = ConjugateLinregEngine(spec, data)
+    else:
+        model = build_model(
+            spec.inference.model,
+            data.dim,
+            data.n_classes,
+            hidden=spec.inference.hidden,
+            depth=spec.inference.depth,
+        )
+        engine = (
+            LaunchEngine(spec, model, n_agents)
+            if spec.run.engine == "launch"
+            else SimulatedEngine(spec, model, n_agents)
+        )
+
+    key = jax.random.key(spec.run.seed)
+    key, k_init = jax.random.split(key)
+    state = engine.init(k_init)
+    return Session(
+        spec=spec,
+        engine=engine,
+        model=model,
+        data=data,
+        state=state,
+        key=key,
+        round_idx=0,
+    )
+
+
+@dataclasses.dataclass
+class Session:
+    """A running experiment: engine-backed state + the round loop."""
+
+    spec: ExperimentSpec
+    engine: Engine
+    model: ModelFns | None
+    data: DataBundle
+    state: Any
+    key: jax.Array
+    round_idx: int = 0
+    history: list = dataclasses.field(default_factory=list)
+    _w_schedule: Any = dataclasses.field(default=None, repr=False)
+
+    def _spec_w_schedule(self):
+        """The topology's round-indexed W callable, materialized once (the
+        schedule list can be expensive to rebuild every round)."""
+        if self._w_schedule is None:
+            self._w_schedule = self.spec.topology.w_schedule()
+        return self._w_schedule
+
+    # -- the loop ------------------------------------------------------------
+
+    def round(self, W=None) -> dict:
+        """One communication round (u local steps + consensus).  Returns
+        ``{"round", "loss"}``; ``W`` overrides the spec topology for this
+        round only (ad-hoc time-varying experiments)."""
+        r = self.round_idx
+        if W is None:
+            W = self._spec_w_schedule()(r)
+        self.key, k_batch, k_round = jax.random.split(self.key, 3)
+        batches = self.data.sampler(k_batch, r)
+        self.state, losses = self.engine.run_round(
+            self.state, batches, jnp.asarray(W), k_round
+        )
+        self.round_idx = r + 1
+        return {"round": self.round_idx, "loss": float(jnp.mean(losses))}
+
+    def run(
+        self,
+        n_rounds: int | None = None,
+        w_schedule=None,
+        eval_fn: Callable[["Session"], dict] | None = None,
+        eval_every: int | None = None,
+    ) -> list[dict]:
+        """Run ``n_rounds`` rounds (default: ``spec.run.n_rounds``).
+
+        ``w_schedule`` overrides the spec topology and accepts all three
+        forms — a static W, a list cycled over rounds, or a round-indexed
+        ``Callable[[int], W]``.  The override is PER CALL and is not
+        checkpointed: a session restored via ``Session.load`` resumes on the
+        spec topology, so put a resumable schedule in the spec itself
+        (``TopologySpec(kind="schedule", ...)``).  ``eval_fn(session)`` is
+        merged into the history every ``eval_every`` rounds (default
+        ``spec.run.eval_every``; always on the final round when enabled).
+        """
+        n = self.spec.run.n_rounds if n_rounds is None else n_rounds
+        w_for_round = (
+            as_w_schedule(w_schedule)
+            if w_schedule is not None
+            else self._spec_w_schedule()
+        )
+        eval_every = (
+            self.spec.run.eval_every if eval_every is None else eval_every
+        )
+        history: list[dict] = []
+        for i in range(n):
+            rec = self.round(W=w_for_round(self.round_idx))
+            if eval_every and ((i + 1) % eval_every == 0 or i == n - 1):
+                if eval_fn is not None:
+                    rec.update(eval_fn(self))
+                history.append(rec)
+        self.history.extend(history)
+        return history
+
+    # -- results -------------------------------------------------------------
+
+    def posterior(self):
+        """The network posterior (``FlatPosterior`` [N, P] for BbB engines,
+        stacked ``FullCovGaussian`` for the conjugate linreg engine)."""
+        return self.engine.posterior(self.state)
+
+    def agent_posterior(self, agent: int):
+        """One agent's posterior (leading agent axis indexed away)."""
+        return jax.tree.map(lambda l: l[agent], self.posterior())
+
+    def predictive(self, agent: int, x, n_mc: int = 8, key=None):
+        """MC predictive class probabilities for one agent (paper Sec 4.2).
+
+        ``n_mc=0`` is the deterministic point estimate: one softmax at the
+        posterior MEAN (the paper's L=1 serving fast path / the non-Bayesian
+        confidence baseline) — no sampling, ``key`` ignored."""
+        if self.model is None:
+            raise ValueError("predictive() requires a classification model")
+        post = self.agent_posterior(agent)
+        if n_mc == 0:
+            from repro.core.flat import FlatPosterior
+
+            mean = (post.layout.unflatten(post.mean)
+                    if isinstance(post, FlatPosterior) else post.mean)
+            return jax.nn.softmax(self.model.logits_fn(mean, jnp.asarray(x)), -1)
+        key = jax.random.key(97) if key is None else key
+        return mc_predict(
+            post, self.model.logits_fn, jnp.asarray(x), key, n_mc=n_mc,
+        )
+
+    def evaluate(self, n_mc: int = 4, key=None) -> dict:
+        """Held-out test metrics per agent: MC-predictive accuracy for
+        classification, global-test MSE for linreg."""
+        if self.data.kind == "linreg":
+            phi_t, y_t = self.data.test_phi, self.data.test_y
+            mean = np.asarray(self.posterior().mean)
+            mses = [
+                float(np.mean((phi_t @ mean[i] - y_t) ** 2))
+                for i in range(self.data.n_agents)
+            ]
+            return {"mse": mses, "avg_mse": float(np.mean(mses))}
+        key = jax.random.key(99) if key is None else key
+        yt = np.asarray(self.data.y_test)
+        accs = []
+        for i in range(self.data.n_agents):
+            probs = self.predictive(i, self.data.x_test, n_mc=n_mc, key=key)
+            pred = np.asarray(jnp.argmax(probs, -1))
+            accs.append(float((pred == yt).mean()))
+        return {"acc": accs, "avg_acc": float(np.mean(accs))}
+
+    # -- checkpointing -------------------------------------------------------
+
+    def save(self, path: str) -> None:
+        """Self-describing checkpoint: the spec doc + engine-state leaves +
+        loop counters.  ``Session.load(path)`` needs nothing else.  Only the
+        SPEC is persisted — per-call ``run(w_schedule=...)`` overrides are
+        not (see ``run``); resume is bit-identical for spec-driven runs."""
+        from repro.checkpoint.io import save_session
+
+        save_session(
+            path,
+            self.spec.to_doc(),
+            self.state,
+            round_idx=self.round_idx,
+            key_data=np.asarray(jax.random.key_data(self.key)),
+        )
+
+    @classmethod
+    def load(cls, path: str) -> "Session":
+        """Rebuild the session from an embedded spec and resume: the engine
+        is reconstructed from the spec, then the saved state leaves are
+        restored into its (identical) state structure."""
+        from repro.checkpoint.io import restore_leaf, restore_session
+
+        spec_doc, leaves, round_idx, key_data = restore_session(path)
+        session = build_session(ExperimentSpec.from_doc(spec_doc))
+        ref_leaves, treedef = jax.tree.flatten(session.state)
+        if len(leaves) != len(ref_leaves):
+            raise ValueError(
+                f"checkpoint has {len(leaves)} state leaves, the rebuilt "
+                f"engine expects {len(ref_leaves)}"
+            )
+        session.state = jax.tree.unflatten(
+            treedef,
+            [restore_leaf(s, ref) for s, ref in zip(leaves, ref_leaves)],
+        )
+        session.round_idx = int(round_idx)
+        session.key = jax.random.wrap_key_data(jnp.asarray(np.asarray(key_data)))
+        return session

@@ -1,0 +1,315 @@
+"""Declarative experiment specification — the paper's whole pipeline as data.
+
+An ``ExperimentSpec`` is a pure-data description of one decentralized-
+Bayesian-learning experiment (Sec 2.1): WHO talks to whom (``TopologySpec``,
+the row-stochastic W of eq. 6 — static, scheduled, or round-indexed), WHAT
+each agent observes (``DataSpec``, dataset + non-IID partition strategy),
+HOW each agent updates its posterior (``InferenceSpec``, Bayes-by-Backprop
+hyperparameters or the conjugate linear-regression family of Example 1),
+and the run envelope (``RunSpec``, rounds / seed / engine).
+
+``build_session`` (see ``api.session``) validates the whole spec EAGERLY —
+connectivity (Assumption 1), row-stochasticity, agent-count and shape
+agreement — before any compute, and returns a ``Session`` backed by an
+engine.  Specs round-trip through ``to_doc``/``from_doc`` so checkpoints are
+self-describing (``Session.save`` embeds the doc; ``Session.load`` rebuilds
+the session from it).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+from repro.core import graphs
+
+PyTree = Any
+
+_NAMED_TOPOLOGIES = {
+    "star": graphs.star_w,
+    "grid": graphs.grid_w,
+    "ring": graphs.ring_w,
+    "bidirectional_ring": graphs.bidirectional_ring_w,
+    "torus": graphs.torus_w,
+    "complete": graphs.complete_w,
+    "erdos": graphs.erdos_w,
+}
+
+
+def _freeze(d: dict | None) -> dict:
+    return dict(d) if d else {}
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologySpec:
+    """The communication graph: a named builder, an explicit W, or a
+    round-indexed schedule (subsumes ``time_varying_star_schedule``).
+
+    kind:
+      one of ``star | grid | ring | bidirectional_ring | torus | complete |
+      erdos`` (named static builders, parameterized by ``params``),
+      ``explicit`` (``w`` holds the [N, N] matrix), ``schedule`` (``schedule``
+      holds a list of W's cycled over rounds), ``time_varying_star`` (paper
+      Sec 1.4.3, ``params`` = n_agents/n_active/a), or ``callable``
+      (``schedule`` holds a ``Callable[[int], W]``; requires ``agents`` and
+      is not checkpoint-embeddable).
+    """
+
+    kind: str = "complete"
+    params: dict = dataclasses.field(default_factory=dict)
+    w: Any = None
+    schedule: Any = None
+    agents: int | None = None  # only needed for kind="callable"
+
+    # -- conveniences --------------------------------------------------------
+
+    @classmethod
+    def star(cls, n_edge: int, a: float) -> "TopologySpec":
+        return cls(kind="star", params={"n_edge": n_edge, "a": a})
+
+    @classmethod
+    def grid(cls, rows: int, cols: int) -> "TopologySpec":
+        return cls(kind="grid", params={"rows": rows, "cols": cols})
+
+    @classmethod
+    def complete(cls, n: int) -> "TopologySpec":
+        return cls(kind="complete", params={"n": n})
+
+    @classmethod
+    def explicit(cls, w) -> "TopologySpec":
+        return cls(kind="explicit", w=np.asarray(w, np.float64))
+
+    @classmethod
+    def from_schedule(cls, mats: Sequence) -> "TopologySpec":
+        return cls(kind="schedule", schedule=[np.asarray(m, np.float64) for m in mats])
+
+    @classmethod
+    def time_varying_star(cls, n_agents: int, n_active: int, a: float = 0.5) -> "TopologySpec":
+        return cls(
+            kind="time_varying_star",
+            params={"n_agents": n_agents, "n_active": n_active, "a": a},
+        )
+
+    @classmethod
+    def from_callable(cls, fn: Callable[[int], Any], n_agents: int) -> "TopologySpec":
+        return cls(kind="callable", schedule=fn, agents=n_agents)
+
+    # -- materialization -----------------------------------------------------
+
+    def _static_list(self) -> list | None:
+        """The full W list for non-callable kinds (None for ``callable``)."""
+        if self.kind in _NAMED_TOPOLOGIES:
+            try:
+                return [_NAMED_TOPOLOGIES[self.kind](**_freeze(self.params))]
+            except TypeError as e:
+                raise ValueError(
+                    f"TopologySpec(kind={self.kind!r}) params mismatch: {e}"
+                ) from e
+        if self.kind == "explicit":
+            if self.w is None:
+                raise ValueError("TopologySpec(kind='explicit') requires w")
+            return [np.asarray(self.w, np.float64)]
+        if self.kind == "schedule":
+            if not self.schedule:
+                raise ValueError("TopologySpec(kind='schedule') requires a non-empty schedule")
+            return [np.asarray(m, np.float64) for m in self.schedule]
+        if self.kind == "time_varying_star":
+            return graphs.time_varying_star_schedule(**_freeze(self.params))
+        if self.kind == "callable":
+            return None
+        raise ValueError(
+            f"unknown topology kind {self.kind!r}; known: "
+            f"{sorted(_NAMED_TOPOLOGIES) + ['explicit', 'schedule', 'time_varying_star', 'callable']}"
+        )
+
+    def w_schedule(self) -> Callable[[int], np.ndarray]:
+        """Round-indexed ``Callable[[int], W]`` (the canonical form)."""
+        if self.kind == "callable":
+            return self.schedule
+        mats = self._static_list()
+        return lambda r: mats[r % len(mats)]
+
+    def n_agents(self) -> int:
+        if self.kind == "callable":
+            if self.agents is None:
+                raise ValueError(
+                    "TopologySpec(kind='callable') requires the explicit "
+                    "``agents`` count (the schedule length is unknowable)"
+                )
+            return self.agents
+        return int(np.asarray(self._static_list()[0]).shape[0])
+
+    def validate(self) -> None:
+        """Paper Assumption 1 prerequisites, eagerly.
+
+        Static kinds: W square, nonnegative, row-stochastic, self-loops,
+        strongly connected.  Schedules: every slot row-stochastic; the UNION
+        over the schedule strongly connected (the time-varying relaxation).
+        Callable: round-0 W checked without the connectivity requirement
+        (the union over an unbounded schedule cannot be enumerated).
+        """
+        if self.kind == "callable":
+            W0 = np.asarray(self.schedule(0), np.float64)
+            graphs.check_w(W0, require_connected=False)
+            if self.agents is not None and W0.shape[0] != self.agents:
+                raise ValueError(
+                    f"callable topology produced a {W0.shape[0]}-agent W but "
+                    f"the spec declares agents={self.agents}"
+                )
+            return
+        mats = self._static_list()
+        if len(mats) == 1:
+            graphs.check_w(mats[0], require_connected=True)
+            return
+        for m in mats:
+            graphs.check_w(m, require_connected=False)
+        graphs.check_schedule_union(mats)
+
+
+@dataclasses.dataclass(frozen=True)
+class DataSpec:
+    """What each agent observes: dataset family + non-IID partition strategy
+    + the per-round batching contract (u local minibatches of size B).
+
+    dataset: ``synthetic_classification | mnist_like | fmnist_like``
+    (classification stand-ins, ``dataset_params`` forwarded to
+    ``data.synthetic``) or ``linreg`` (paper Example 1,
+    ``dataset_params`` forwarded to ``data.linreg.make_linreg_task``).
+
+    partition (classification only): ``iid | by_label | star | grid``
+    (``partition_params`` forwarded to ``data.partition``).
+    """
+
+    dataset: str = "synthetic_classification"
+    dataset_params: dict = dataclasses.field(default_factory=dict)
+    partition: str = "iid"
+    partition_params: dict = dataclasses.field(default_factory=dict)
+    batch_size: int = 16
+    local_updates: int = 4
+
+    def validate(self) -> None:
+        if self.dataset not in (
+            "synthetic_classification", "mnist_like", "fmnist_like", "linreg",
+        ):
+            raise ValueError(f"unknown dataset {self.dataset!r}")
+        if self.dataset != "linreg" and self.partition not in (
+            "iid", "by_label", "star", "grid",
+        ):
+            raise ValueError(f"unknown partition {self.partition!r}")
+        if self.batch_size <= 0 or self.local_updates <= 0:
+            raise ValueError("batch_size and local_updates must be positive")
+
+
+@dataclasses.dataclass(frozen=True)
+class InferenceSpec:
+    """How each agent updates its posterior between consensus steps.
+
+    method="bbb": Bayes-by-Backprop (paper Remark 1 / eq. 5) on the model
+    from the registry (``api.models``) — the NN experiments.
+    method="conjugate_linreg": the exact conjugate full-covariance update of
+    Example 1 (eq. 2); model/optimizer fields are ignored.
+    """
+
+    method: str = "bbb"
+    model: str = "mlp"
+    hidden: int = 48
+    depth: int = 2
+    init_sigma: float = 0.05
+    shared_init: bool = True
+    optimizer: str = "adam"
+    lr: float = 5e-3
+    lr_decay: float = 0.99  # multiplicative, per communication round (paper)
+    kl_scale: float = 1e-3
+    n_mc_samples: int = 1
+    consensus: str = "gaussian"  # gaussian | mean_only | none
+    prior_var: float = 0.5  # conjugate_linreg prior N(0, prior_var I)
+
+    def validate(self) -> None:
+        if self.method not in ("bbb", "conjugate_linreg"):
+            raise ValueError(f"unknown inference method {self.method!r}")
+        if self.optimizer not in ("adam", "sgd"):
+            raise ValueError(f"unknown optimizer {self.optimizer!r}")
+        if self.consensus not in ("gaussian", "mean_only", "none"):
+            raise ValueError(f"unknown consensus mode {self.consensus!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class RunSpec:
+    """Run envelope: length, seed, engine, eval cadence."""
+
+    n_rounds: int = 20
+    seed: int = 0
+    engine: str = "simulated"  # simulated | launch
+    eval_every: int = 0
+    jit: bool = True
+
+    def validate(self) -> None:
+        if self.engine not in ("simulated", "launch"):
+            raise ValueError(f"unknown engine {self.engine!r}")
+        if self.n_rounds < 0:
+            raise ValueError("n_rounds must be nonnegative")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """One experiment = topology x data x inference x run."""
+
+    topology: TopologySpec = dataclasses.field(default_factory=TopologySpec)
+    data: DataSpec = dataclasses.field(default_factory=DataSpec)
+    inference: InferenceSpec = dataclasses.field(default_factory=InferenceSpec)
+    run: RunSpec = dataclasses.field(default_factory=RunSpec)
+
+    def validate(self) -> None:
+        self.data.validate()
+        self.inference.validate()
+        self.run.validate()
+        if self.inference.method == "conjugate_linreg" and self.data.dataset != "linreg":
+            raise ValueError("conjugate_linreg inference requires dataset='linreg'")
+        if self.data.dataset == "linreg" and self.inference.method != "conjugate_linreg":
+            raise ValueError("dataset='linreg' requires method='conjugate_linreg'")
+        if self.inference.method == "conjugate_linreg" and self.run.engine == "launch":
+            raise ValueError("the launch engine backs Bayes-by-Backprop inference only")
+        self.topology.validate()
+
+    # -- checkpoint doc (msgpack-able plain data) ----------------------------
+
+    def to_doc(self) -> dict:
+        if self.topology.kind == "callable":
+            raise ValueError(
+                "a callable topology schedule cannot be embedded in a "
+                "checkpoint; use kind='schedule' (materialized W list) for "
+                "resumable runs"
+            )
+        doc = dataclasses.asdict(self)
+        return _plainify(doc)
+
+    @classmethod
+    def from_doc(cls, doc: dict) -> "ExperimentSpec":
+        topo = dict(doc["topology"])
+        if topo.get("w") is not None:
+            topo["w"] = np.asarray(topo["w"], np.float64)
+        if topo.get("schedule") is not None:
+            topo["schedule"] = [np.asarray(m, np.float64) for m in topo["schedule"]]
+        return cls(
+            topology=TopologySpec(**topo),
+            data=DataSpec(**doc["data"]),
+            inference=InferenceSpec(**doc["inference"]),
+            run=RunSpec(**doc["run"]),
+        )
+
+
+def _plainify(node):
+    """Recursively lower numpy arrays/scalars and tuples to msgpack-able
+    lists/py-scalars (the checkpoint document format)."""
+    if isinstance(node, dict):
+        return {k: _plainify(v) for k, v in node.items()}
+    if isinstance(node, (list, tuple)):
+        return [_plainify(v) for v in node]
+    if isinstance(node, np.ndarray):
+        return _plainify(node.tolist())
+    if isinstance(node, np.generic):
+        return node.item()
+    if node is None or isinstance(node, (bool, int, float, str)):
+        return node
+    raise TypeError(f"spec field of type {type(node)} is not checkpoint-embeddable")

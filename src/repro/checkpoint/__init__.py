@@ -2,8 +2,10 @@ from repro.checkpoint.io import (
     CheckpointManager,
     restore_flat_posterior,
     restore_pytree,
+    restore_session,
     save_flat_posterior,
     save_pytree,
+    save_session,
 )
 
 __all__ = [
@@ -11,5 +13,7 @@ __all__ = [
     "restore_pytree",
     "save_flat_posterior",
     "restore_flat_posterior",
+    "save_session",
+    "restore_session",
     "CheckpointManager",
 ]

@@ -106,6 +106,20 @@ def _read_doc(path: str) -> dict:
     return msgpack.unpackb(raw, raw=False)
 
 
+def restore_leaf(stored, ref, shard=None):
+    """Restore ONE stored leaf into the shape/dtype of reference leaf
+    ``ref`` (shared by ``restore_pytree`` and ``api.Session.load`` so there
+    is a single restore semantics).  Non-array references pass the stored
+    value through; ``shard`` optionally device_puts the result."""
+    if isinstance(ref, (jax.Array, np.ndarray, jnp.ndarray)):
+        arr = np.asarray(stored)
+        if tuple(arr.shape) != tuple(np.shape(ref)):
+            raise ValueError(f"shape mismatch: {arr.shape} vs {np.shape(ref)}")
+        arr = arr.astype(np.asarray(ref).dtype, copy=False)
+        return jax.device_put(arr, shard) if shard is not None else arr
+    return stored
+
+
 def restore_pytree(path: str, like: PyTree, shardings: PyTree | None = None) -> PyTree:
     """Restore into the structure of ``like``.  If ``shardings`` (a pytree of
     jax.sharding.Sharding matching ``like``) is given, leaves are placed
@@ -117,19 +131,13 @@ def restore_pytree(path: str, like: PyTree, shardings: PyTree | None = None) -> 
         raise ValueError(
             f"checkpoint has {len(leaves)} leaves, expected {len(like_leaves)}"
         )
-    out = []
     shard_leaves = (
         treedef.flatten_up_to(shardings) if shardings is not None else [None] * len(leaves)
     )
-    for stored, ref, shard in zip(leaves, like_leaves, shard_leaves):
-        if isinstance(ref, (jax.Array, np.ndarray, jnp.ndarray)):
-            arr = np.asarray(stored)
-            if tuple(arr.shape) != tuple(np.shape(ref)):
-                raise ValueError(f"shape mismatch: {arr.shape} vs {np.shape(ref)}")
-            arr = arr.astype(np.asarray(ref).dtype, copy=False)
-            out.append(jax.device_put(arr, shard) if shard is not None else arr)
-        else:
-            out.append(stored)
+    out = [
+        restore_leaf(stored, ref, shard)
+        for stored, ref, shard in zip(leaves, like_leaves, shard_leaves)
+    ]
     return jax.tree.unflatten(treedef, out)
 
 
@@ -173,6 +181,44 @@ def restore_flat_posterior(path: str, sharding=None):
         mean = jnp.asarray(mean)
         rho = jnp.asarray(rho)
     return FlatPosterior(mean=mean, rho=rho, layout=layout)
+
+
+_SESSION = "__session__"
+
+
+def save_session(
+    path: str,
+    spec_doc: dict,
+    state,
+    *,
+    round_idx: int,
+    key_data,
+    compress_level: int = 3,
+) -> None:
+    """Self-describing ``api.Session`` checkpoint: the ``ExperimentSpec``
+    doc (plain data, see ``ExperimentSpec.to_doc``) rides in the document
+    next to the engine-state leaves, so ``restore_session`` +
+    ``Session.load`` can rebuild the engine and resume with no ``like``
+    tree.  Static state metadata (e.g. the ``FlatLayout``) is NOT stored —
+    it is reconstructed by re-building the session from the spec."""
+    doc = {
+        _SESSION: True,
+        "spec": spec_doc,
+        "round": int(round_idx),
+        "key_data": _pack_leaf(np.asarray(key_data)),
+        "leaves": [_pack_leaf(l) for l in jax.tree.leaves(state)],
+    }
+    _write_doc(path, doc, compress_level)
+
+
+def restore_session(path: str) -> tuple[dict, list, int, np.ndarray]:
+    """-> (spec_doc, state_leaves, round_idx, key_data).  Use
+    ``api.Session.load`` for the full rebuild."""
+    doc = _read_doc(path)
+    if not doc.get(_SESSION):
+        raise ValueError(f"{path} is not a session checkpoint")
+    leaves = [_unpack_leaf(d) for d in doc["leaves"]]
+    return doc["spec"], leaves, doc["round"], np.asarray(_unpack_leaf(doc["key_data"]))
 
 
 class CheckpointManager:

@@ -25,7 +25,13 @@ from repro.core.flat import (
     make_flat_nll,
     neighbor_tables,
 )
-from repro.core.simulated import NetworkState, init_network, make_round_fn, run_rounds
+from repro.core.simulated import (
+    NetworkState,
+    as_w_schedule,
+    init_network,
+    make_round_fn,
+    run_rounds,
+)
 
 __all__ = [
     "FlatLayout",
@@ -51,6 +57,7 @@ __all__ = [
     "graphs",
     "theory",
     "NetworkState",
+    "as_w_schedule",
     "init_network",
     "make_round_fn",
     "run_rounds",

@@ -139,6 +139,16 @@ def erdos_w(n: int, p: float, seed: int = 0) -> np.ndarray:
     raise RuntimeError("could not sample a strongly connected graph")
 
 
+def check_schedule_union(mats) -> None:
+    """Time-varying relaxation of Assumption 1: each slot need not be
+    connected, but the UNION of the schedule's support graphs must be
+    strongly connected."""
+    union = (sum((np.asarray(m) > 0).astype(float) for m in mats) > 0).astype(float)
+    g = nx.from_numpy_array(union, create_using=nx.DiGraph)
+    if not nx.is_strongly_connected(g):
+        raise ValueError("union of the W schedule must be strongly connected")
+
+
 def time_varying_star_schedule(
     n_agents: int, n_active: int, a: float = 0.5
 ) -> list[np.ndarray]:
@@ -160,11 +170,7 @@ def time_varying_star_schedule(
             W[j, j] = 1.0 - a
         check_w(W, require_connected=False)
         mats.append(W)
-    # union must be strongly connected
-    union = (sum((m > 0).astype(float) for m in mats) > 0).astype(float)
-    g = nx.from_numpy_array(union, create_using=nx.DiGraph)
-    if not nx.is_strongly_connected(g):
-        raise RuntimeError("union of time-varying graphs not strongly connected")
+    check_schedule_union(mats)
     return mats
 
 

@@ -14,12 +14,18 @@ One communication round at every agent i (Sec 2.1):
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.flat import FlatLayout, flat_posterior_from_pytree, make_flat_nll
+from repro.core.flat import (
+    FlatLayout,
+    FlatPosterior,
+    flat_posterior_from_pytree,
+    make_flat_nll,
+)
 from repro.core.posterior import (
     GaussianPosterior,
     consensus_all_agents,
@@ -50,19 +56,32 @@ def init_network(
     opt: Optimizer,
     init_sigma: float = 0.05,
     shared_init: bool = True,
-    flat: bool = False,
+    flat: bool = True,
 ) -> NetworkState:
     """Paper Remark 7: agents use a SHARED initialization the first time the
     local models are trained (but never re-synchronize afterwards).  Set
     ``shared_init=False`` to study the divergent-initialization failure mode.
 
-    ``flat=True`` stores the posterior as a ``core.flat.FlatPosterior``
-    (contiguous [N, P] buffers) — the fast runtime format: consensus runs as
-    ONE fused network-wide pass and the optimizer state collapses to flat
-    buffers too.  Pair it with ``make_round_fn(..., param_layout=...)`` so
-    the model is applied through the layout at the sample boundary.
+    The posterior is stored as a ``core.flat.FlatPosterior`` (contiguous
+    [N, P] buffers) — the canonical runtime format: consensus runs as ONE
+    fused network-wide pass and the optimizer state collapses to flat
+    buffers too.  ``make_round_fn`` picks the layout up from the state
+    automatically, so ``nll_fn`` keeps its pytree signature either way.
+
+    ``flat=False`` keeps the legacy pytree ``GaussianPosterior`` network
+    state (deprecated; the leaf-loop consensus reference stays reachable
+    through ``consensus_all_agents`` on pytree posteriors).
     """
     from repro.core.posterior import init_posterior
+
+    if not flat:
+        warnings.warn(
+            "init_network(flat=False) builds the deprecated pytree network "
+            "state; the flat [N, P] posterior is the canonical runtime "
+            "format since PR 1 (pytrees remain the model-apply boundary).",
+            DeprecationWarning,
+            stacklevel=2,
+        )
 
     if shared_init:
         params = init_params_fn(key)
@@ -99,10 +118,11 @@ def make_round_fn(
       batches: pytree, leaves [N, u, ...] — u local minibatches per agent
       W: [N, N] row-stochastic (may differ per round: time-varying networks)
 
-    ``param_layout``: pass the ``FlatLayout`` of the model parameters when
-    the network state holds a ``FlatPosterior`` (``init_network(flat=True)``).
-    ``nll_fn`` keeps its pytree signature — it is wrapped once here so the
-    flat theta sample crosses to a pytree only at the model-apply boundary.
+    ``nll_fn`` keeps its pytree signature; when the network state holds a
+    ``FlatPosterior`` the layout is read off the state and the nll is wrapped
+    so the flat theta sample crosses to a pytree only at the model-apply
+    boundary.  ``param_layout`` pre-binds that layout at build time (skips
+    the per-trace wrap; required only when the state type is not known yet).
     """
     if consensus not in ("gaussian", "mean_only", "none"):
         raise ValueError(f"unknown consensus mode {consensus!r}")
@@ -110,6 +130,9 @@ def make_round_fn(
         nll_fn = make_flat_nll(nll_fn, param_layout)
 
     def round_fn(state: NetworkState, batches: Any, W: jax.Array, key: jax.Array):
+        nll = nll_fn
+        if param_layout is None and isinstance(state.posterior, FlatPosterior):
+            nll = make_flat_nll(nll_fn, state.posterior.layout)
         n_agents = state.step.shape[0]
         keys = jax.random.split(key, n_agents)
         lr = lr_schedule(state.round)
@@ -121,7 +144,7 @@ def make_round_fn(
                 prior_i,
                 opt,
                 opt_i,
-                nll_fn,
+                nll,
                 batches_i,
                 key_i,
                 lr,
@@ -156,11 +179,27 @@ def make_round_fn(
     return round_fn
 
 
+def as_w_schedule(
+    w_schedule: Sequence[jax.Array] | jax.Array | Callable[[int], jax.Array],
+) -> Callable[[int], jax.Array]:
+    """Normalize the three accepted topology-schedule forms — a static W, a
+    list cycled over rounds, or a round-indexed callable — to one
+    ``Callable[[int], W]``.  Shared by ``run_rounds`` and ``api.Session``."""
+    if callable(w_schedule):
+        return w_schedule
+    if isinstance(w_schedule, (list, tuple)):
+        ws = list(w_schedule)
+        if not ws:
+            raise ValueError("empty W schedule")
+        return lambda r: ws[r % len(ws)]
+    return lambda r: w_schedule
+
+
 def run_rounds(
     round_fn,
     state: NetworkState,
     batch_sampler: Callable[[jax.Array, int], Any],
-    w_schedule: Sequence[jax.Array] | jax.Array,
+    w_schedule: Sequence[jax.Array] | jax.Array | Callable[[int], jax.Array],
     n_rounds: int,
     key: jax.Array,
     eval_fn: Callable[[NetworkState], dict] | None = None,
@@ -170,16 +209,16 @@ def run_rounds(
     """Python-level driver (rounds may have data-dependent W / eval hooks).
 
     batch_sampler(key, round_idx) -> batches pytree [N, u, ...]
-    w_schedule: a single W or a list cycled over rounds (time-varying nets).
+    w_schedule: a single W, a list cycled over rounds, or a round-indexed
+    ``Callable[[int], W]`` (first-class time-varying topologies).
     """
     fn = jax.jit(round_fn) if jit else round_fn
     history: list[dict] = []
-    ws = w_schedule if isinstance(w_schedule, (list, tuple)) else [w_schedule]
+    w_for_round = as_w_schedule(w_schedule)
     for r in range(n_rounds):
         key, k_batch, k_round = jax.random.split(key, 3)
         batches = batch_sampler(k_batch, r)
-        W = ws[r % len(ws)]
-        state, losses = fn(state, batches, jnp.asarray(W), k_round)
+        state, losses = fn(state, batches, jnp.asarray(w_for_round(r)), k_round)
         if eval_every and ((r + 1) % eval_every == 0 or r == n_rounds - 1):
             rec = {"round": r + 1, "loss": float(jnp.mean(losses))}
             if eval_fn is not None:
