@@ -1,0 +1,219 @@
+"""Gossip-runtime smoke benchmark (`benchmarks/run.py gossip-smoke`).
+
+Three parts, mirroring what the ROADMAP Async section promises:
+
+1. **Equivalence probes** (correctness, not timed): the all-edges-active
+   window must equal the synchronous fused consensus BIT-identically, at
+   the kernel level (``consensus_fused_masked`` vs
+   ``consensus_fused_network``, interpret mode) and at the engine level
+   (all-edges TraceClock GossipEngine vs SimulatedEngine).
+2. **Tiny Poisson run**: a few event windows on a ring through the full
+   ``repro.api`` surface — losses finite, staleness telemetry populated,
+   one jitted call per window (trace-count assertion).
+3. **Window-consensus sweep**: masked-consensus wall-clock vs the dense
+   fused pass at several active fractions, next to the analytic
+   ``gossip_window_roofline`` (on CPU the model numbers are load-bearing,
+   as for BENCH_consensus.json).
+
+Output: ``BENCH_gossip.json`` + the harness's ``name,us_per_call,derived``
+CSV rows.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.flat import (
+    FlatLayout,
+    FlatPosterior,
+    consensus_flat,
+    consensus_flat_masked,
+)
+from repro.core.graphs import bidirectional_ring_w
+from repro.gossip.clocks import PoissonClock, _directed_edges
+from repro.kernels.consensus import (
+    consensus_fused_masked,
+    consensus_fused_network,
+)
+from repro.launch.costmodel import gossip_window_roofline
+
+DEFAULT_JSON = "BENCH_gossip.json"
+
+
+def _time(fn, args, iters: int = 5) -> float:
+    jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def _all_active_equivalence() -> dict:
+    """Bit-identity probes: max |err| must be EXACTLY 0.0."""
+    n, p = 6, 4096
+    ks = jax.random.split(jax.random.key(0), 2)
+    mean = jax.random.normal(ks[0], (n, p))
+    rho = jax.random.normal(ks[1], (n, p)) * 0.4 - 1.0
+    W = jnp.asarray(bidirectional_ring_w(n), jnp.float32)
+    allmask = jnp.ones((n,), bool)
+    mm, rm = consensus_fused_masked(W, allmask, mean, rho, block=512,
+                                    interpret=True)
+    mn, rn = consensus_fused_network(W, mean, rho, block=512, interpret=True)
+    kernel_err = max(
+        float(jnp.max(jnp.abs(mm - mn))), float(jnp.max(jnp.abs(rm - rn)))
+    )
+
+    from repro.api import (
+        DataSpec, ExperimentSpec, InferenceSpec, RunSpec, TopologySpec,
+        build_session,
+    )
+
+    n_agents = 4
+    edges = [[int(i), int(j)]
+             for i, j in _directed_edges(bidirectional_ring_w(n_agents))]
+    data = DataSpec(
+        dataset_params=dict(n_classes=3, dim=8, n_train_per_class=30),
+        partition="iid", partition_params=dict(n_agents=n_agents),
+        batch_size=4, local_updates=2,
+    )
+    inf = InferenceSpec(hidden=8, depth=1, lr=1e-2)
+    run = RunSpec(n_rounds=3, seed=0)
+    s_g = build_session(ExperimentSpec(
+        topology=TopologySpec(
+            kind="gossip",
+            params={"base": "bidirectional_ring",
+                    "base_params": {"n": n_agents}},
+            clock={"kind": "trace", "trace": [edges]},
+        ),
+        data=data, inference=inf, run=run,
+    ))
+    s_s = build_session(ExperimentSpec(
+        topology=TopologySpec(kind="bidirectional_ring",
+                              params={"n": n_agents}),
+        data=data, inference=inf, run=run,
+    ))
+    s_g.run()
+    s_s.run()
+    engine_err = max(
+        float(jnp.max(jnp.abs(s_g.posterior().mean - s_s.posterior().mean))),
+        float(jnp.max(jnp.abs(s_g.posterior().rho - s_s.posterior().rho))),
+    )
+    assert kernel_err == 0.0, f"masked kernel all-active err {kernel_err}"
+    assert engine_err == 0.0, f"gossip-engine all-active err {engine_err}"
+    return {"kernel_max_err": kernel_err, "engine_max_err": engine_err}
+
+
+def _poisson_smoke() -> dict:
+    from repro.api import (
+        DataSpec, ExperimentSpec, InferenceSpec, RunSpec, TopologySpec,
+        build_session,
+    )
+
+    n = 6
+    spec = ExperimentSpec(
+        topology=TopologySpec.gossip(
+            "bidirectional_ring", {"n": n},
+            clock={"kind": "failure_injected",
+                   "inner": {"kind": "poisson", "rate": 0.8, "seed": 1},
+                   "drop_rate": 0.1},
+        ),
+        data=DataSpec(
+            dataset_params=dict(n_classes=3, dim=8, n_train_per_class=30),
+            partition="iid", partition_params=dict(n_agents=n),
+            batch_size=4, local_updates=2,
+        ),
+        inference=InferenceSpec(hidden=8, depth=1, lr=1e-2),
+        run=RunSpec(n_rounds=5, seed=0),
+    )
+    s = build_session(spec)
+    t0 = time.perf_counter()
+    hist = s.run(eval_every=5)
+    wall_us = (time.perf_counter() - t0) * 1e6
+    tel = s.evaluate()
+    assert np.isfinite(hist[-1]["loss"])
+    assert s.engine.n_traces == 1, "window retraced: not one jitted call"
+    return {
+        "windows": tel["windows"],
+        "loss": hist[-1]["loss"],
+        "avg_acc": tel["avg_acc"],
+        "staleness": tel["staleness"],
+        "merges": tel["merges"],
+        "n_traces": s.engine.n_traces,
+        "wall_us_total": wall_us,
+    }
+
+
+def _window_sweep(n: int = 16, p: int = 1 << 15) -> list[dict]:
+    ks = jax.random.split(jax.random.key(3), 2)
+    mean = jax.random.normal(ks[0], (n, p))
+    rho = jax.random.normal(ks[1], (n, p)) * 0.4 - 1.0
+    layout = FlatLayout.for_pytree({"w": jnp.zeros((p,))})
+    posts = FlatPosterior(mean=mean, rho=rho, layout=layout)
+    W_base = bidirectional_ring_w(n)
+    dense_fn = jax.jit(lambda q, w: consensus_flat(q, w).mean)
+    masked_fn = jax.jit(lambda q, w, a: consensus_flat_masked(q, w, a).mean)
+    Wj = jnp.asarray(W_base, jnp.float32)
+    us_dense = _time(dense_fn, (posts, Wj))
+    out = []
+    for rate in (0.1, 0.5, 2.0):
+        win = PoissonClock(W_base, rate=rate, seed=5).window(0)
+        rec = {
+            "rate": rate,
+            "n_events": win.n_events,
+            "active_fraction": win.active_fraction,
+            "us": {
+                "dense_fused": us_dense,
+                "window_masked": _time(
+                    masked_fn,
+                    (posts, jnp.asarray(win.w_eff, jnp.float32),
+                     jnp.asarray(win.active)),
+                ),
+            },
+            "roofline": gossip_window_roofline(
+                n, p,
+                n_participating=int(win.participating().sum()),
+                n_merging=int(win.active.sum()),
+            ),
+        }
+        out.append(rec)
+    return out
+
+
+def run(json_out: str | None = DEFAULT_JSON) -> dict:
+    equiv = _all_active_equivalence()
+    print(f"gossip_equivalence,0.0,"
+          f"kernel_err={equiv['kernel_max_err']};"
+          f"engine_err={equiv['engine_max_err']}")
+    smoke = _poisson_smoke()
+    print(f"gossip_poisson_smoke,{smoke['wall_us_total']:.1f},"
+          f"windows={smoke['windows']};loss={smoke['loss']:.4f};"
+          f"staleness_p90={smoke['staleness']['p90']};"
+          f"traces={smoke['n_traces']}")
+    sweep = _window_sweep()
+    for rec in sweep:
+        print(f"gossip_window[f={rec['active_fraction']:.2f}],"
+              f"{rec['us']['window_masked']:.1f},"
+              f"model_passes="
+              f"{rec['roofline']['hbm_passes']['window_masked']:.3f}")
+    doc = {
+        "benchmark": "gossip_event_windows",
+        "backend": jax.default_backend(),
+        "equivalence": equiv,
+        "poisson_smoke": smoke,
+        "window_sweep": sweep,
+    }
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"# wrote {json_out}")
+    return doc
+
+
+if __name__ == "__main__":
+    run()

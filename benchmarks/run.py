@@ -22,6 +22,11 @@ Subcommands:
             declarative repro.api surface: builds a tiny ExperimentSpec,
             runs BOTH engines (simulated + launch), asserts their posteriors
             agree, round-trips a self-describing session checkpoint
+  run.py gossip-smoke [--json-out F]             event-driven gossip runtime
+            smoke: all-edges-active window must equal the synchronous fused
+            consensus bit-identically, tiny Poisson+link-failure run with
+            staleness telemetry, window-consensus sweep; emits
+            BENCH_gossip.json
 """
 from __future__ import annotations
 
@@ -32,6 +37,7 @@ import traceback
 
 from benchmarks import (
     bench_consensus,
+    bench_gossip,
     calibration,
     fig1_linreg,
     fig2_star_centrality,
@@ -113,10 +119,12 @@ def api_smoke() -> None:
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument(
-        "cmd", nargs="?", choices=["figures", "bench", "api-smoke"],
+        "cmd", nargs="?",
+        choices=["figures", "bench", "api-smoke", "gossip-smoke"],
         default="figures",
         help="figures (default): paper figures; bench: consensus perf "
-        "sweep; api-smoke: declarative-API smoke",
+        "sweep; api-smoke: declarative-API smoke; gossip-smoke: async "
+        "gossip runtime smoke (all-active equivalence + Poisson run)",
     )
     ap.add_argument("--only", nargs="*", choices=list(ALL), default=None)
     ap.add_argument(
@@ -132,6 +140,9 @@ def main(argv=None) -> None:
 
     if args.cmd == "api-smoke":
         api_smoke()
+        return
+    if args.cmd == "gossip-smoke":
+        bench_gossip.run(json_out=args.json_out or bench_gossip.DEFAULT_JSON)
         return
     if args.cmd == "bench":
         bench_consensus.run(

@@ -27,7 +27,11 @@ it eagerly and returns an engine-backed ``Session``:
 Engines: ``RunSpec.engine="simulated"`` (flat vmap runtime, default) or
 ``"launch"`` (production ``launch.steps`` on the flat posterior); the
 conjugate linear-regression family of paper Example 1 is selected by
-``InferenceSpec(method="conjugate_linreg")``.
+``InferenceSpec(method="conjugate_linreg")``; a
+``TopologySpec(kind="gossip", clock=...)`` selects the event-driven
+asynchronous ``GossipEngine`` (``repro.gossip``) — one Poisson/trace event
+window per round, active-edge masked consensus, staleness telemetry in
+``Session.evaluate``.
 """
 from repro.api.data import DataBundle, build_data
 from repro.api.engines import (
@@ -38,6 +42,7 @@ from repro.api.engines import (
 )
 from repro.api.models import MODELS, ModelFns, build_model, mlp_init, mlp_logits, mlp_nll
 from repro.api.session import Session, build_session
+from repro.gossip.engine import GossipEngine
 from repro.api.spec import (
     DataSpec,
     ExperimentSpec,
@@ -52,6 +57,7 @@ __all__ = [
     "DataSpec",
     "Engine",
     "ExperimentSpec",
+    "GossipEngine",
     "InferenceSpec",
     "LaunchEngine",
     "MODELS",

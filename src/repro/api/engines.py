@@ -15,6 +15,11 @@ numerical precision — enforced by the engine-equivalence test:
   the launch path" item).  Same math, production step functions.
 * ``ConjugateLinregEngine`` — paper Example 1: exact conjugate
   full-covariance updates + eq.-(6) full-covariance consensus.
+* ``repro.gossip.engine.GossipEngine`` — the event-driven asynchronous
+  runtime (selected by ``TopologySpec(kind="gossip")``): one event window
+  per round, masked active-edge consensus, staleness telemetry.  An engine
+  may additionally expose ``telemetry(state) -> dict``; ``Session.evaluate``
+  merges it into its result.
 """
 from __future__ import annotations
 

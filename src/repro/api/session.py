@@ -42,6 +42,7 @@ from repro.api.engines import (
 from repro.api.models import ModelFns, build_model
 from repro.api.spec import ExperimentSpec
 from repro.core.simulated import as_w_schedule
+from repro.gossip.engine import GossipEngine
 from repro.vi.bayes_by_backprop import mc_predict
 
 
@@ -62,11 +63,15 @@ def build_session(spec: ExperimentSpec) -> "Session":
             hidden=spec.inference.hidden,
             depth=spec.inference.depth,
         )
-        engine = (
-            LaunchEngine(spec, model, n_agents)
-            if spec.run.engine == "launch"
-            else SimulatedEngine(spec, model, n_agents)
-        )
+        if spec.topology.kind == "gossip":
+            # a gossip topology IS an execution model: one event window per
+            # round on the GossipEngine (validate() already rejected other
+            # explicit engine choices)
+            engine = GossipEngine(spec, model, n_agents)
+        elif spec.run.engine == "launch":
+            engine = LaunchEngine(spec, model, n_agents)
+        else:
+            engine = SimulatedEngine(spec, model, n_agents)
 
     key = jax.random.key(spec.run.seed)
     key, k_init = jax.random.split(key)
@@ -118,7 +123,11 @@ class Session:
             self.state, batches, jnp.asarray(W), k_round
         )
         self.round_idx = r + 1
-        return {"round": self.round_idx, "loss": float(jnp.mean(losses))}
+        # engines whose per-agent losses use NaN as a "did not train this
+        # round" sentinel (gossip wake-on-event) opt into nanmean; for the
+        # synchronous engines a NaN loss stays a loud NaN (divergence signal)
+        agg = jnp.nanmean if getattr(self.engine, "loss_nan_is_sentinel", False) else jnp.mean
+        return {"round": self.round_idx, "loss": float(agg(losses))}
 
     def run(
         self,
@@ -190,7 +199,16 @@ class Session:
 
     def evaluate(self, n_mc: int = 4, key=None) -> dict:
         """Held-out test metrics per agent: MC-predictive accuracy for
-        classification, global-test MSE for linreg."""
+        classification, global-test MSE for linreg.  Engines exposing a
+        ``telemetry(state)`` hook (the gossip runtime: staleness percentiles,
+        merge counts) have it merged into the result."""
+        out = self._evaluate_metrics(n_mc=n_mc, key=key)
+        telemetry = getattr(self.engine, "telemetry", None)
+        if telemetry is not None:
+            out.update(telemetry(self.state))
+        return out
+
+    def _evaluate_metrics(self, n_mc: int = 4, key=None) -> dict:
         if self.data.kind == "linreg":
             phi_t, y_t = self.data.test_phi, self.data.test_y
             mean = np.asarray(self.posterior().mean)

@@ -51,9 +51,15 @@ class TopologySpec:
       erdos`` (named static builders, parameterized by ``params``),
       ``explicit`` (``w`` holds the [N, N] matrix), ``schedule`` (``schedule``
       holds a list of W's cycled over rounds), ``time_varying_star`` (paper
-      Sec 1.4.3, ``params`` = n_agents/n_active/a), or ``callable``
+      Sec 1.4.3, ``params`` = n_agents/n_active/a), ``callable``
       (``schedule`` holds a ``Callable[[int], W]``; requires ``agents`` and
-      is not checkpoint-embeddable).
+      is not checkpoint-embeddable), or ``gossip`` (event-driven
+      asynchronous runtime: ``params`` names the base graph —
+      ``{"base": <named kind>, "base_params": {...}}`` or
+      ``{"base": "explicit", "w": [[...]]}`` — and ``clock`` is the plain-
+      dict activation-clock description of ``repro.gossip.clocks
+      .build_clock``; selects the ``GossipEngine``, one event window per
+      round).
     """
 
     kind: str = "complete"
@@ -61,6 +67,7 @@ class TopologySpec:
     w: Any = None
     schedule: Any = None
     agents: int | None = None  # only needed for kind="callable"
+    clock: dict | None = None  # only for kind="gossip"
 
     # -- conveniences --------------------------------------------------------
 
@@ -95,7 +102,96 @@ class TopologySpec:
     def from_callable(cls, fn: Callable[[int], Any], n_agents: int) -> "TopologySpec":
         return cls(kind="callable", schedule=fn, agents=n_agents)
 
+    @classmethod
+    def gossip(
+        cls,
+        base: str,
+        base_params: dict | None = None,
+        clock: dict | None = None,
+        w=None,
+    ) -> "TopologySpec":
+        """Event-driven gossip on a base graph: ``base`` names a builder
+        (``ring | grid | ...``) parameterized by ``base_params``, or
+        ``base="explicit"`` with ``w``; ``clock`` is the activation-clock
+        dict (default: unit-rate Poisson).  Fully checkpoint-embeddable."""
+        if w is not None and base != "explicit":
+            raise ValueError(
+                f"gossip(w=...) requires base='explicit'; base={base!r} "
+                "would silently ignore the provided matrix"
+            )
+        params: dict = {"base": base, "base_params": dict(base_params or {})}
+        if w is not None:
+            params["w"] = np.asarray(w, np.float64).tolist()
+        return cls(
+            kind="gossip",
+            params=params,
+            clock=dict(clock) if clock else {"kind": "poisson", "rate": 1.0},
+        )
+
+    @classmethod
+    def gossip_from_schedule(
+        cls, mats: Sequence, clock_extra: dict | None = None
+    ) -> "TopologySpec":
+        """Re-express a W schedule (e.g. ``time_varying_star_schedule``) as a
+        gossip trace: the schedule's per-slot active edges become per-window
+        activation events over the shared weight table.  The resulting spec
+        runs on the ``GossipEngine`` and reproduces the scheduled runs."""
+        from repro.gossip.clocks import trace_from_schedule
+
+        table, trace = trace_from_schedule([np.asarray(m) for m in mats])
+        clock = {
+            "kind": "trace",
+            "trace": [[[int(i), int(j)] for i, j in slot] for slot in trace],
+            "rule": "table",
+        }
+        clock.update(clock_extra or {})
+        return cls(
+            kind="gossip",
+            params={"base": "explicit", "w": table.tolist()},
+            clock=clock,
+        )
+
     # -- materialization -----------------------------------------------------
+
+    def base_w(self) -> np.ndarray:
+        """kind="gossip": the base graph / weight table the clock fires on."""
+        if self.kind != "gossip":
+            raise ValueError("base_w() is only defined for kind='gossip'")
+        base = self.params.get("base")
+        if base is None:
+            raise ValueError(
+                "TopologySpec(kind='gossip') requires params={'base': ...}"
+            )
+        if base == "explicit":
+            if self.params.get("w") is None:
+                raise ValueError("gossip base='explicit' requires params['w']")
+            return np.asarray(self.params["w"], np.float64)
+        if base not in _NAMED_TOPOLOGIES:
+            raise ValueError(
+                f"unknown gossip base {base!r}; known: "
+                f"{sorted(_NAMED_TOPOLOGIES) + ['explicit']}"
+            )
+        try:
+            return _NAMED_TOPOLOGIES[base](**_freeze(self.params.get("base_params")))
+        except TypeError as e:
+            raise ValueError(f"gossip base={base!r} params mismatch: {e}") from e
+
+    def gossip_clock(self):
+        """kind="gossip": build the activation clock from the spec dicts.
+
+        Memoized on the (frozen) spec: construction eagerly validates every
+        distinct trace window, so ``validate()`` and ``w_schedule()`` must
+        not each pay it again."""
+        cached = getattr(self, "_clock_cache", None)
+        if cached is not None:
+            return cached
+        from repro.gossip.clocks import build_clock
+
+        if self.clock is None:
+            raise ValueError("TopologySpec(kind='gossip') requires a clock dict")
+        clock = build_clock(self.clock, self.base_w())
+        object.__setattr__(self, "_clock_cache", clock)
+        return clock
 
     def _static_list(self) -> list | None:
         """The full W list for non-callable kinds (None for ``callable``)."""
@@ -116,17 +212,23 @@ class TopologySpec:
             return [np.asarray(m, np.float64) for m in self.schedule]
         if self.kind == "time_varying_star":
             return graphs.time_varying_star_schedule(**_freeze(self.params))
-        if self.kind == "callable":
+        if self.kind in ("callable", "gossip"):
             return None
         raise ValueError(
             f"unknown topology kind {self.kind!r}; known: "
-            f"{sorted(_NAMED_TOPOLOGIES) + ['explicit', 'schedule', 'time_varying_star', 'callable']}"
+            f"{sorted(_NAMED_TOPOLOGIES) + ['explicit', 'schedule', 'time_varying_star', 'callable', 'gossip']}"
         )
 
     def w_schedule(self) -> Callable[[int], np.ndarray]:
-        """Round-indexed ``Callable[[int], W]`` (the canonical form)."""
+        """Round-indexed ``Callable[[int], W]`` (the canonical form).  For
+        kind="gossip" this is the clock's window stream: round r's matrix is
+        window r's effective W-tilde (a pure function of the clock seed and
+        r, so resumed sessions regenerate the identical event stream)."""
         if self.kind == "callable":
             return self.schedule
+        if self.kind == "gossip":
+            clock = self.gossip_clock()
+            return lambda r: clock.window(r).w_eff
         mats = self._static_list()
         return lambda r: mats[r % len(mats)]
 
@@ -138,6 +240,8 @@ class TopologySpec:
                     "``agents`` count (the schedule length is unknowable)"
                 )
             return self.agents
+        if self.kind == "gossip":
+            return int(self.base_w().shape[0])
         return int(np.asarray(self._static_list()[0]).shape[0])
 
     def validate(self) -> None:
@@ -148,7 +252,13 @@ class TopologySpec:
         over the schedule strongly connected (the time-varying relaxation).
         Callable: round-0 W checked without the connectivity requirement
         (the union over an unbounded schedule cannot be enumerated).
+        Gossip: the clock is built eagerly (per-kind parameter/feasibility
+        checks) and the expected activation-graph UNION must be strongly
+        connected (the time-varying relaxation of Assumption 1).
         """
+        if self.kind == "gossip":
+            self.gossip_clock().validate()
+            return
         if self.kind == "callable":
             W0 = np.asarray(self.schedule(0), np.float64)
             graphs.check_w(W0, require_connected=False)
@@ -240,12 +350,12 @@ class RunSpec:
 
     n_rounds: int = 20
     seed: int = 0
-    engine: str = "simulated"  # simulated | launch
+    engine: str = "simulated"  # simulated | launch | gossip
     eval_every: int = 0
     jit: bool = True
 
     def validate(self) -> None:
-        if self.engine not in ("simulated", "launch"):
+        if self.engine not in ("simulated", "launch", "gossip"):
             raise ValueError(f"unknown engine {self.engine!r}")
         if self.n_rounds < 0:
             raise ValueError("n_rounds must be nonnegative")
@@ -270,6 +380,22 @@ class ExperimentSpec:
             raise ValueError("dataset='linreg' requires method='conjugate_linreg'")
         if self.inference.method == "conjugate_linreg" and self.run.engine == "launch":
             raise ValueError("the launch engine backs Bayes-by-Backprop inference only")
+        if self.topology.kind == "gossip":
+            if self.run.engine == "launch":
+                raise ValueError(
+                    "a gossip topology runs on the GossipEngine (engine="
+                    "'gossip' or the 'simulated' default, auto-upgraded); "
+                    "the launch engine is synchronous"
+                )
+            if self.inference.method == "conjugate_linreg":
+                raise ValueError(
+                    "the gossip runtime backs Bayes-by-Backprop inference only"
+                )
+        elif self.run.engine == "gossip":
+            raise ValueError(
+                "engine='gossip' requires a TopologySpec(kind='gossip') "
+                "(the event windows come from its activation clock)"
+            )
         self.topology.validate()
 
     # -- checkpoint doc (msgpack-able plain data) ----------------------------

@@ -293,7 +293,11 @@ def _eq6_block(W, mean, rho):
 
 
 def consensus_flat_reference(
-    mean: jax.Array, rho: jax.Array, W: jax.Array, block: int = XLA_BLOCK
+    mean: jax.Array,
+    rho: jax.Array,
+    W: jax.Array,
+    block: int = XLA_BLOCK,
+    active: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Eq. (6) on the flat [N, P] buffers — the reference semantics for the
     Pallas kernels and the fast non-TPU path.
@@ -305,10 +309,23 @@ def consensus_flat_reference(
     to DRAM and measures ~2x slower, and a ``concatenate`` assembly costs
     more than the whole computation (measured on XLA:CPU; see
     BENCH_consensus.json).  Math is bitwise identical per block.
+
+    ``active`` (the gossip event-window form, see
+    ``consensus_flat_masked_reference``) selects per block between the
+    computed row (active agents) and the ORIGINAL (mean, rho) row
+    (inactive agents pass through bitwise); ``None`` adds no select at all.
     """
+    act = None if active is None else (active > 0)[:, None]
+
+    def blk(m_in, r_in):
+        m_o, r_o = _eq6_block(W, m_in, r_in)
+        if act is None:
+            return m_o, r_o
+        return jnp.where(act, m_o, m_in), jnp.where(act, r_o, r_in)
+
     n, p = mean.shape
     if p <= block:
-        return _eq6_block(W, mean, rho)
+        return blk(mean, rho)
     n_blocks = -(-p // block)
     if n_blocks > _MAX_UNROLL:
         block = -(-p // _MAX_UNROLL)
@@ -316,7 +333,7 @@ def consensus_flat_reference(
     rho_out = jnp.empty_like(rho)
     for s in range(0, p, block):
         e = min(s + block, p)
-        m_o, r_o = _eq6_block(W, mean[:, s:e], rho[:, s:e])
+        m_o, r_o = blk(mean[:, s:e], rho[:, s:e])
         mean_out = jax.lax.dynamic_update_slice(mean_out, m_o, (0, s))
         rho_out = jax.lax.dynamic_update_slice(rho_out, r_o, (0, s))
     return mean_out, rho_out
@@ -357,6 +374,98 @@ def consensus_flat(
     return FlatPosterior(mean=mean, rho=rho, layout=posts.layout)
 
 
+def consensus_flat_masked_reference(
+    mean: jax.Array,
+    rho: jax.Array,
+    W: jax.Array,
+    active: jax.Array,
+    block: int = XLA_BLOCK,
+) -> tuple[jax.Array, jax.Array]:
+    """Masked (event-window) eq. (6) on the flat buffers — reference
+    semantics for ``consensus_fused_masked`` and the fast non-TPU path.
+
+    The shared blocked loop of ``consensus_flat_reference`` with the
+    activity select: active agents get the computed row, inactive ones
+    their ORIGINAL (mean, rho) row.  With ``active`` all-true the select is
+    the identity on the computed values, so the output is bit-identical to
+    the unmasked reference (the gossip/synchronous equivalence contract).
+    """
+    return consensus_flat_reference(mean, rho, W, block=block, active=active)
+
+
+def consensus_flat_masked(
+    posts: FlatPosterior,
+    W: jax.Array,
+    active: jax.Array,
+    *,
+    mode: str | None = None,
+    block: int | None = None,
+) -> FlatPosterior:
+    """Masked network-wide consensus for one gossip event window.
+
+    ``W`` is the window's effective W-tilde and ``active`` its [N] activity
+    mask (``repro.gossip.clocks.EventWindow``).  Active agents merge per
+    eq. (6); inactive agents pass through bit-identically (no softplus
+    round trip — an idle agent's posterior is bit-stable across windows).
+    Same mode semantics as ``consensus_flat``.
+    """
+    from repro.kernels.consensus import DEFAULT_BLOCK, consensus_fused_masked
+
+    if mode is None:
+        mode = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if mode == "xla":
+        mean, rho = consensus_flat_masked_reference(
+            posts.mean, posts.rho, W, active,
+            block=(XLA_BLOCK if block is None else block),
+        )
+    elif mode in ("pallas", "interpret"):
+        mean, rho = consensus_fused_masked(
+            W, active, posts.mean, posts.rho,
+            block=(DEFAULT_BLOCK if block is None else block),
+            interpret=(True if mode == "interpret" else None),
+        )
+    else:
+        raise ValueError(f"unknown consensus_flat_masked mode {mode!r}")
+    return FlatPosterior(mean=mean, rho=rho, layout=posts.layout)
+
+
+def consensus_flat_masked_sparse(
+    posts: FlatPosterior,
+    neighbors: jax.Array,
+    weights: jax.Array,
+    active: jax.Array,
+    *,
+    mode: str | None = None,
+    block: int | None = None,
+) -> FlatPosterior:
+    """Active-edge window consensus on CSR tables of the window's W-tilde
+    (``neighbor_tables(window.w_eff)``): active agents read only their
+    fired-neighbor rows, inactive agents copy their own row.  The "xla"
+    path rebuilds the tiny dense W-tilde (reference semantics); the
+    active-edge HBM saving exists on the Pallas path."""
+    from repro.kernels.consensus import (
+        DEFAULT_BLOCK,
+        consensus_fused_masked_sparse,
+    )
+
+    if mode is None:
+        mode = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if mode == "xla":
+        mean, rho = _sparse_reference(
+            posts.mean, posts.rho, neighbors, weights,
+            block=(XLA_BLOCK if block is None else block), active=active,
+        )
+    elif mode in ("pallas", "interpret"):
+        mean, rho = consensus_fused_masked_sparse(
+            neighbors, weights, active, posts.mean, posts.rho,
+            block=(DEFAULT_BLOCK if block is None else block),
+            interpret=(True if mode == "interpret" else None),
+        )
+    else:
+        raise ValueError(f"unknown consensus_flat_masked_sparse mode {mode!r}")
+    return FlatPosterior(mean=mean, rho=rho, layout=posts.layout)
+
+
 def neighbor_tables(W: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
     """CSR-style padded neighbor tables for ``consensus_fused_sparse``.
 
@@ -378,17 +487,20 @@ def neighbor_tables(W: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
     return neighbors, weights
 
 
-def _sparse_reference(mean, rho, neighbors, weights, block: int = XLA_BLOCK):
+def _sparse_reference(mean, rho, neighbors, weights, block: int = XLA_BLOCK,
+                      active=None):
     """Sparse reference path: rebuild the (tiny, [N, N]) dense W from the
     neighbor tables and reuse the blocked dense path.  Bitwise-identical
     semantics (zero-weight entries contribute nothing; self-padded slots
     scatter-add 0.0 onto the diagonal), and far faster than row-gathers on
     XLA:CPU, whose gather lowers to a scalar loop.  The true deg(i)-tile
-    HBM saving only exists on the Pallas path (mode="pallas" on TPU)."""
+    HBM saving only exists on the Pallas path (mode="pallas" on TPU).
+    ``active`` is the gossip event-window mask (see
+    ``consensus_flat_reference``)."""
     n = mean.shape[0]
     rows = jnp.broadcast_to(jnp.arange(n, dtype=neighbors.dtype)[:, None], neighbors.shape)
     W = jnp.zeros((n, n), COMPUTE_DTYPE).at[rows, neighbors].add(weights)
-    return consensus_flat_reference(mean, rho, W, block=block)
+    return consensus_flat_reference(mean, rho, W, block=block, active=active)
 
 
 def consensus_flat_sparse(

@@ -103,6 +103,48 @@ def init_network(
     )
 
 
+def network_local_steps(
+    posterior,
+    prior,
+    opt: Optimizer,
+    opt_state,
+    nll,
+    batches,
+    key: jax.Array,
+    lr,
+    step: jax.Array,
+    n_samples: int = 1,
+    kl_scale: float = 1.0,
+):
+    """The network-wide local phase: per-agent key split + ``local_vi_steps``
+    under ``vmap`` — SHARED by the synchronous round (``make_round_fn``) and
+    the gossip event window (``repro.gossip.engine``).  The two runtimes'
+    bit-identity in the all-edges-active case hangs on sharing this exact
+    key/step derivation, so extend it here rather than copying it.
+
+    Returns (posterior', opt_state', per-agent mean losses [N]).
+    """
+    n_agents = step.shape[0]
+    keys = jax.random.split(key, n_agents)
+
+    def local(post_i, prior_i, opt_i, batches_i, key_i, step_i):
+        return local_vi_steps(
+            post_i,
+            prior_i,
+            opt,
+            opt_i,
+            nll,
+            batches_i,
+            key_i,
+            lr,
+            step_i,
+            n_samples=n_samples,
+            kl_scale=kl_scale,
+        )
+
+    return jax.vmap(local)(posterior, prior, opt_state, batches, keys, step)
+
+
 def make_round_fn(
     nll_fn: NllFn,
     opt: Optimizer,
@@ -133,28 +175,11 @@ def make_round_fn(
         nll = nll_fn
         if param_layout is None and isinstance(state.posterior, FlatPosterior):
             nll = make_flat_nll(nll_fn, state.posterior.layout)
-        n_agents = state.step.shape[0]
-        keys = jax.random.split(key, n_agents)
         lr = lr_schedule(state.round)
         prior = state.posterior  # q_i^{(n-1)}: consensus result of last round
-
-        def local(post_i, prior_i, opt_i, batches_i, key_i, step_i):
-            return local_vi_steps(
-                post_i,
-                prior_i,
-                opt,
-                opt_i,
-                nll,
-                batches_i,
-                key_i,
-                lr,
-                step_i,
-                n_samples=n_mc_samples,
-                kl_scale=kl_scale,
-            )
-
-        post, opt_state, losses = jax.vmap(local)(
-            state.posterior, prior, state.opt_state, batches, keys, state.step
+        post, opt_state, losses = network_local_steps(
+            state.posterior, prior, opt, state.opt_state, nll, batches, key,
+            lr, state.step, n_samples=n_mc_samples, kl_scale=kl_scale,
         )
         u = jax.tree.leaves(batches)[0].shape[1]
         if consensus == "gaussian":

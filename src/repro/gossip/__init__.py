@@ -1,0 +1,52 @@
+"""``repro.gossip`` — event-driven asynchronous gossip runtime.
+
+The paper's communication model is *asynchronous*: each agent updates its
+posterior from local data plus asynchronous aggregation with 1-hop
+neighbors.  This package closes the gap between that model and the
+synchronous lockstep rounds of the simulated/launch runtimes:
+
+* ``clocks`` — per-edge activation clocks (``poisson | round_robin |
+  trace | failure_injected``) that discretize continuous-time gossip into
+  fixed-size **event windows**: each window is a padded ``[E_max, 2]`` edge
+  list + per-agent activity mask + effective row-stochastic W-tilde, so a
+  whole window jit-compiles with static shapes (no per-event Python
+  dispatch).
+* ``engine`` — ``GossipEngine``, the ``repro.api`` Engine-protocol runtime
+  that executes one event window per ``run_round`` call as ONE jitted
+  program: local VI steps, active-edge consensus
+  (``kernels.consensus.consensus_fused_masked``; inactive agents pass
+  through bit-identically), and per-agent staleness telemetry.
+
+A gossip experiment is declared like any other: ``TopologySpec.gossip(...)``
+inside an ``ExperimentSpec`` — ``build_session`` validates the activation
+union against Assumption 1 and ``Session.evaluate`` reports staleness
+percentiles.
+"""
+from repro.gossip.clocks import (
+    EventWindow,
+    FailureInjectedClock,
+    GossipClock,
+    PoissonClock,
+    RoundRobinClock,
+    TraceClock,
+    all_edges_trace,
+    build_clock,
+    trace_from_schedule,
+    window_from_events,
+)
+from repro.gossip.engine import GossipEngine, GossipState
+
+__all__ = [
+    "EventWindow",
+    "FailureInjectedClock",
+    "GossipClock",
+    "GossipEngine",
+    "GossipState",
+    "PoissonClock",
+    "RoundRobinClock",
+    "TraceClock",
+    "all_edges_trace",
+    "build_clock",
+    "trace_from_schedule",
+    "window_from_events",
+]

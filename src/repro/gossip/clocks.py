@@ -1,0 +1,419 @@
+"""Activation clocks: continuous-time gossip discretized into event windows.
+
+The asynchronous model (paper Sec 1/2; BayGo, Lalitha et al. 2019) lets each
+directed edge (i <- j) of the communication graph fire on its own clock.  A
+naive simulation dispatches Python per event — unjittable and orders of
+magnitude too slow.  Instead a clock discretizes time into **event
+windows**: all edge activations inside one window are applied as one masked
+consensus over the flat [N, P] posterior, so every window is the SAME jitted
+program (static shapes) and the runtime does zero per-event dispatch.
+
+An ``EventWindow`` carries
+
+* ``edges [E_max, 2]`` int32 — the window's directed activation events
+  ``(dst, src)`` (dst merges src's posterior), zero-padded to the clock's
+  static ``e_max``;
+* ``weights [E_max]`` — the base mixing weight of each event edge (0.0 on
+  pad slots);
+* ``active [N]`` bool — agents with at least one incoming event (only these
+  merge; everyone else passes through the window untouched);
+* ``w_eff [N, N]`` — the window's effective row-stochastic W-tilde (see
+  below), the matrix handed to ``Session``/``Engine.run_round``.
+
+W-tilde construction, two rules:
+
+* ``"conserve"`` (default; requires a row-stochastic base W): an active
+  row keeps the base weight on each fired in-edge and moves every
+  non-fired in-edge's weight onto SELF —
+  ``w_eff[i,i] = W[i,i] + sum_{j not fired} W[i,j]``.  With ALL edges
+  fired, ``w_eff == W`` exactly (bitwise), which is what makes the
+  all-active gossip window reproduce the synchronous fused consensus
+  bit-identically.
+* ``"table"`` (for weight-table traces, e.g. a re-expressed
+  ``time_varying_star_schedule`` whose base rows need not sum to 1):
+  ``w_eff[i,i] = 1 - sum_{j fired} W[i,j]``.
+
+Rows with no event are EXACTLY ``e_i`` (diag 1.0) either way — the engine
+derives the activity mask as ``diag(w_eff) < 1`` and the masked consensus
+kernel passes those rows through without touching them.
+
+Determinism contract: ``window(r)`` is a pure function of ``(seed, r)``
+(fresh ``np.random.default_rng([seed, r])`` per window), so a resumed
+session regenerates the identical event stream from any round index.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import graphs
+
+
+@dataclasses.dataclass(frozen=True)
+class EventWindow:
+    """One jit-ready event window (see module docstring)."""
+
+    index: int
+    edges: np.ndarray  # [E_max, 2] int32 (dst, src), zero-padded
+    weights: np.ndarray  # [E_max] float32, 0.0 on pad slots
+    active: np.ndarray  # [N] bool
+    w_eff: np.ndarray  # [N, N] float64 row-stochastic
+    n_events: int  # real events before padding
+
+    @property
+    def n_agents(self) -> int:
+        return self.w_eff.shape[0]
+
+    @property
+    def active_fraction(self) -> float:
+        return float(self.active.mean())
+
+    def participating(self) -> np.ndarray:
+        """[N] bool: agents touched by any event (as dst or src) — the rows a
+        traffic-optimal window kernel must read (see
+        ``launch.costmodel.gossip_window_roofline``)."""
+        part = self.active.copy()
+        if self.n_events:
+            part[self.edges[: self.n_events, 1]] = True
+        return part
+
+
+def window_from_events(
+    W_base: np.ndarray,
+    events: Sequence[tuple[int, int]],
+    e_max: int,
+    index: int = 0,
+    rule: str = "conserve",
+) -> EventWindow:
+    """Build one ``EventWindow`` from a list of fired ``(dst, src)`` edges.
+
+    Events must be edges of the base support (``W_base[dst, src] > 0``,
+    ``dst != src``); duplicates within a window collapse to one merge.
+    """
+    Wb = np.asarray(W_base, np.float64)
+    n = Wb.shape[0]
+    uniq: list[tuple[int, int]] = []
+    seen = set()
+    for i, j in events:
+        i, j = int(i), int(j)
+        if i == j:
+            raise ValueError(f"self-event ({i}, {j}): self-loops are implicit")
+        if Wb[i, j] <= 0:
+            raise ValueError(f"event ({i}, {j}) is not an edge of the base graph")
+        if (i, j) not in seen:
+            seen.add((i, j))
+            uniq.append((i, j))
+    if len(uniq) > e_max:
+        raise ValueError(f"{len(uniq)} events exceed the clock's e_max={e_max}")
+    if rule not in ("conserve", "table"):
+        raise ValueError(f"unknown w_eff rule {rule!r}")
+
+    active = np.zeros((n,), bool)
+    w_eff = np.eye(n)
+    for i, j in uniq:
+        active[i] = True
+    for i in np.nonzero(active)[0]:
+        fired = [j for (d, j) in uniq if d == i]
+        if rule == "conserve":
+            # base weight on fired edges; every NON-fired in-edge's weight
+            # moves onto self -> all-fired reproduces the base row bitwise
+            support = [j for j in np.nonzero(Wb[i])[0] if j != i]
+            idle = [j for j in support if j not in fired]
+            w_eff[i, i] = Wb[i, i] + sum(Wb[i, j] for j in idle)
+        else:  # "table": leftover mass on self (weight-table traces)
+            w_eff[i, i] = 1.0 - sum(Wb[i, j] for j in fired)
+        for j in fired:
+            w_eff[i, j] = Wb[i, j]
+        if w_eff[i, i] <= 0:
+            raise ValueError(
+                f"window row {i}: fired in-weights sum to "
+                f"{1.0 - w_eff[i, i]:.6f} >= 1 (weight table not row-feasible)"
+            )
+
+    edges = np.zeros((max(e_max, 1), 2), np.int32)
+    weights = np.zeros((max(e_max, 1),), np.float32)
+    for k, (i, j) in enumerate(uniq):
+        edges[k] = (i, j)
+        weights[k] = Wb[i, j]
+    return EventWindow(
+        index=index, edges=edges, weights=weights, active=active,
+        w_eff=w_eff, n_events=len(uniq),
+    )
+
+
+def _directed_edges(W_base: np.ndarray) -> list[tuple[int, int]]:
+    """Non-self directed edges (dst, src) of the base support, fixed order."""
+    Wb = np.asarray(W_base)
+    return [
+        (i, j)
+        for i in range(Wb.shape[0])
+        for j in np.nonzero(Wb[i])[0]
+        if i != int(j)
+    ]
+
+
+class GossipClock:
+    """Base class: a deterministic stream of fixed-shape event windows.
+
+    Subclasses implement ``_events(r, rng) -> list[(dst, src)]``; everything
+    else (padding, w_eff, union validation) is shared.  ``e_max`` is the
+    static per-window edge capacity — identical across windows so one jit
+    trace serves the whole run.
+    """
+
+    rule = "conserve"
+
+    def __init__(self, W_base: np.ndarray, seed: int = 0):
+        self.W_base = np.asarray(W_base, np.float64)
+        self.n_agents = self.W_base.shape[0]
+        self.seed = int(seed)
+        self.e_max = max(len(_directed_edges(self.W_base)), 1)
+
+    # -- subclass hook -------------------------------------------------------
+
+    def _events(self, r: int, rng: np.random.Generator) -> list[tuple[int, int]]:
+        raise NotImplementedError
+
+    # -- shared machinery ----------------------------------------------------
+
+    def window(self, r: int) -> EventWindow:
+        rng = np.random.default_rng([self.seed, int(r)])
+        return window_from_events(
+            self.W_base, self._events(int(r), rng), self.e_max,
+            index=int(r), rule=self.rule,
+        )
+
+    def windows(self, n: int) -> list[EventWindow]:
+        return [self.window(r) for r in range(n)]
+
+    def union_support(self) -> np.ndarray:
+        """[N, N] 0/1 adjacency of every edge that can EVER activate (self
+        loops included) — the graph Assumption 1 is checked against."""
+        return (self.W_base > 0).astype(float) + np.eye(self.n_agents)
+
+    def validate(self) -> None:
+        """Eager Assumption-1 check on the activation union (the
+        time-varying relaxation: each window need not be connected, the
+        union must be strongly connected)."""
+        graphs.check_schedule_union([self.union_support()])
+
+
+class PoissonClock(GossipClock):
+    """Independent Poisson clock per directed edge (the classic asynchronous
+    gossip model): edge (i <- j) fires ~ Poisson(rate * window_len) per
+    window; >= 1 firing activates the edge for that window (multiple firings
+    within one window collapse — the discretization this module trades for
+    jittability).  Base W must be row-stochastic (``rule="conserve"``)."""
+
+    def __init__(
+        self,
+        W_base: np.ndarray,
+        rate: float = 1.0,
+        window_len: float = 1.0,
+        seed: int = 0,
+    ):
+        super().__init__(W_base, seed)
+        graphs.check_w(self.W_base, require_connected=False)
+        if rate <= 0 or window_len <= 0:
+            raise ValueError("rate and window_len must be positive")
+        self.rate = float(rate)
+        self.window_len = float(window_len)
+        self._edges = _directed_edges(self.W_base)
+
+    def _events(self, r, rng):
+        fire = rng.poisson(self.rate * self.window_len, size=len(self._edges)) >= 1
+        return [e for e, f in zip(self._edges, fire) if f]
+
+
+class RoundRobinClock(GossipClock):
+    """Deterministic cyclic activation: ``edges_per_window`` consecutive
+    edges of the base support fire each window, cycling in fixed order.  The
+    union over one full cycle is the whole base graph — the minimal
+    scheduled-gossip baseline (and a deterministic stand-in for Poisson in
+    tests)."""
+
+    def __init__(self, W_base: np.ndarray, edges_per_window: int = 1, seed: int = 0):
+        super().__init__(W_base, seed)
+        graphs.check_w(self.W_base, require_connected=False)
+        if edges_per_window <= 0:
+            raise ValueError("edges_per_window must be positive")
+        self._edges = _directed_edges(self.W_base)
+        self.edges_per_window = int(min(edges_per_window, len(self._edges)))
+        self.e_max = self.edges_per_window
+
+    def _events(self, r, rng):
+        del rng  # deterministic
+        k, m = self.edges_per_window, len(self._edges)
+        start = (r * k) % m
+        return [self._edges[(start + t) % m] for t in range(k)]
+
+
+class TraceClock(GossipClock):
+    """Explicit per-window edge lists, cycled over rounds — the replay /
+    re-expression form (e.g. ``trace_from_schedule`` turns the paper's
+    ``time_varying_star_schedule`` into a gossip trace).  ``rule="table"``
+    accepts weight-table bases whose rows need not sum to 1; every distinct
+    window is validated eagerly at construction."""
+
+    def __init__(
+        self,
+        W_base: np.ndarray,
+        trace: Sequence[Sequence[tuple[int, int]]],
+        rule: str = "conserve",
+        seed: int = 0,
+    ):
+        super().__init__(W_base, seed)
+        if not trace:
+            raise ValueError("TraceClock requires a non-empty trace")
+        if rule == "conserve":
+            # the conserve rule moves idle in-edge mass onto self, which is
+            # only weight-conserving for a row-stochastic base; weight
+            # tables (rows may exceed 1) must use rule="table"
+            graphs.check_w(self.W_base, require_connected=False)
+        self.rule = rule
+        self.trace = [[(int(i), int(j)) for i, j in slot] for slot in trace]
+        self.e_max = max(max((len(s) for s in self.trace), default=1), 1)
+        for k, slot in enumerate(self.trace):  # eager per-window feasibility
+            window_from_events(self.W_base, slot, self.e_max, index=k, rule=rule)
+
+    def _events(self, r, rng):
+        del rng
+        return self.trace[r % len(self.trace)]
+
+    def union_support(self) -> np.ndarray:
+        adj = np.eye(self.n_agents)
+        for slot in self.trace:
+            for i, j in slot:
+                adj[i, j] = 1.0
+        return adj
+
+
+class FailureInjectedClock(GossipClock):
+    """Wrap any clock and drop each of its fired edges i.i.d. with
+    probability ``drop_rate`` — the unreliable-link scenario.  The
+    activation UNION is unchanged (every edge still fires infinitely often
+    a.s. for drop_rate < 1), so Assumption 1 validation delegates to the
+    inner clock."""
+
+    def __init__(self, inner: GossipClock, drop_rate: float, seed: int = 0):
+        if not 0.0 <= drop_rate < 1.0:
+            raise ValueError("drop_rate must be in [0, 1)")
+        super().__init__(inner.W_base, seed)
+        self.inner = inner
+        self.drop_rate = float(drop_rate)
+        self.rule = inner.rule
+        self.e_max = inner.e_max
+
+    def _events(self, r, rng):
+        del rng  # the shared [seed, r] stream family collides with the
+        #          inner clock's when both seeds are equal (the default),
+        #          which would make drops a deterministic function of the
+        #          firings; salt the drop stream with a distinct word
+        events = self.inner._events(r, np.random.default_rng([self.inner.seed, r]))
+        drop_rng = np.random.default_rng([self.seed, 0xFA11ED, r])
+        keep = drop_rng.random(len(events)) >= self.drop_rate
+        return [e for e, k in zip(events, keep) if k]
+
+    def union_support(self) -> np.ndarray:
+        return self.inner.union_support()
+
+
+# ---------------------------------------------------------------------------
+# trace builders
+# ---------------------------------------------------------------------------
+
+
+def all_edges_trace(W_base: np.ndarray) -> TraceClock:
+    """The degenerate trace where EVERY base edge fires EVERY window — each
+    window's w_eff equals the base W bitwise (``rule="conserve"``), so the
+    gossip runtime reproduces the synchronous fused consensus bit-identically
+    (the equivalence property the tests pin)."""
+    return TraceClock(W_base, [_directed_edges(W_base)], rule="conserve")
+
+
+def trace_from_schedule(mats: Sequence[np.ndarray]) -> tuple[np.ndarray, list]:
+    """Re-express a W schedule (e.g. ``graphs.time_varying_star_schedule``)
+    as (weight table, per-window edge list) for a ``TraceClock(rule="table")``.
+
+    Requires each directed edge to carry the SAME weight in every slot where
+    it is active (true for the paper's time-varying star); the table's row
+    sums may exceed 1 — only the per-window fired subsets must be feasible.
+    """
+    mats = [np.asarray(m, np.float64) for m in mats]
+    n = mats[0].shape[0]
+    table = np.zeros((n, n))
+    np.fill_diagonal(table, 1.0)  # placeholder; diag comes from the rule
+    trace = []
+    for W in mats:
+        slot = []
+        for i in range(n):
+            for j in np.nonzero(W[i])[0]:
+                j = int(j)
+                if i == j:
+                    continue
+                if table[i, j] != 0.0 and not np.isclose(table[i, j], W[i, j]):
+                    raise ValueError(
+                        f"edge ({i}, {j}) has inconsistent weights across "
+                        f"slots: {table[i, j]} vs {W[i, j]}"
+                    )
+                table[i, j] = W[i, j]
+                slot.append((i, j))
+        trace.append(slot)
+    return table, trace
+
+
+# ---------------------------------------------------------------------------
+# spec-dict registry (checkpoint-embeddable clock descriptions)
+# ---------------------------------------------------------------------------
+
+
+def build_clock(doc: dict, W_base: np.ndarray) -> GossipClock:
+    """Build a clock from a plain dict (the ``TopologySpec.clock`` form that
+    rides in session checkpoints).  Keys beyond the per-kind parameters
+    (e.g. ``local_policy``, consumed by the engine) are ignored here.
+
+    kinds:
+      ``poisson``           rate, window_len, seed
+      ``round_robin``       edges_per_window, seed
+      ``trace``             trace=[[[dst, src], ...], ...], rule, seed
+      ``failure_injected``  inner=<clock doc>, drop_rate, seed
+    """
+    if not isinstance(doc, dict) or "kind" not in doc:
+        raise ValueError("clock must be a dict with a 'kind' key")
+    kind = doc["kind"]
+    if kind == "poisson":
+        return PoissonClock(
+            W_base,
+            rate=doc.get("rate", 1.0),
+            window_len=doc.get("window_len", 1.0),
+            seed=doc.get("seed", 0),
+        )
+    if kind == "round_robin":
+        return RoundRobinClock(
+            W_base,
+            edges_per_window=doc.get("edges_per_window", 1),
+            seed=doc.get("seed", 0),
+        )
+    if kind == "trace":
+        if "trace" not in doc:
+            raise ValueError("clock kind='trace' requires a 'trace' list")
+        return TraceClock(
+            W_base,
+            trace=[[(e[0], e[1]) for e in slot] for slot in doc["trace"]],
+            rule=doc.get("rule", "conserve"),
+            seed=doc.get("seed", 0),
+        )
+    if kind == "failure_injected":
+        if "inner" not in doc:
+            raise ValueError("clock kind='failure_injected' requires 'inner'")
+        return FailureInjectedClock(
+            build_clock(doc["inner"], W_base),
+            drop_rate=doc.get("drop_rate", 0.1),
+            seed=doc.get("seed", 0),
+        )
+    raise ValueError(
+        f"unknown clock kind {kind!r}; known: "
+        "poisson | round_robin | trace | failure_injected"
+    )

@@ -1,0 +1,220 @@
+"""``GossipEngine`` — the event-driven asynchronous runtime behind
+``api.Session``.
+
+One ``run_round`` call executes one EVENT WINDOW (``gossip.clocks``) as ONE
+jitted program: per-agent local Bayes-by-Backprop steps, then the masked
+active-edge consensus (``core.flat.consensus_flat_masked`` — Pallas
+``consensus_fused_masked`` on TPU, masked fused XLA elsewhere).  The
+``Engine`` protocol is unchanged — the Session hands the engine the
+window's effective W-tilde exactly as it hands the synchronous engines a
+scheduled W — so specs, checkpoints, and the round loop all work
+untouched.  The activity mask is recovered from W-tilde itself: an agent
+is active iff its row is not ``e_i`` (``diag(W) < 1``), which the clock
+construction guarantees exactly.
+
+Two local-step policies (``TopologySpec.clock["local_policy"]``):
+
+* ``"all"`` (default) — every agent trains locally every window and only
+  the MERGES are event-driven (the paper's time-varying model: idle agents
+  keep learning on local data; ``time_varying_star_schedule`` re-expressed
+  as a gossip trace reproduces the table3 runs).
+* ``"active"`` — wake-on-event: agents without an incoming activation
+  sleep the whole window (posterior, optimizer state and step counter all
+  pass through bit-identically) — the fully asynchronous regime where
+  staleness is visible in the *local* state too.
+
+Staleness telemetry rides in the state: per-agent window index of the last
+merge and total merge count; ``Session.evaluate`` surfaces the percentiles
+via ``telemetry``.
+
+Equivalence contract (pinned by tests/test_gossip.py): with an
+``all_edges_trace`` clock every window's W-tilde equals the base W bitwise
+and every agent is active, so the GossipEngine's posterior trajectory is
+BIT-IDENTICAL to ``SimulatedEngine`` on the same spec — the synchronous
+runtime is literally the all-edges special case of this one.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.flat import (
+    FlatPosterior,
+    consensus_flat_masked,
+    make_flat_nll,
+)
+from repro.core.simulated import init_network, network_local_steps
+
+PyTree = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class GossipState:
+    """Network state + per-agent gossip telemetry (all leaves agent-leading,
+    checkpointed leaf-wise like every engine state)."""
+
+    posterior: FlatPosterior
+    opt_state: Any
+    step: jax.Array  # [N] per-agent local step counter
+    round: jax.Array  # scalar int32 window counter
+    last_merge: jax.Array  # [N] int32 window index of last merge (-1 = never)
+    n_merges: jax.Array  # [N] int32 total merges per agent
+
+
+def _agent_select(active: jax.Array, new: PyTree, old: PyTree) -> PyTree:
+    """Per-leaf ``where`` over agent-leading leaves (wake-on-event policy)."""
+
+    def sel(a, b):
+        mask = active.reshape((-1,) + (1,) * (a.ndim - 1))
+        return jnp.where(mask, a, b)
+
+    return jax.tree.map(sel, new, old)
+
+
+class GossipEngine:
+    """Event-driven gossip runtime behind the Engine protocol.
+
+    The per-window transition is traced ONCE (all windows share static
+    shapes: [E_max] edge capacity -> fixed [N, N] W-tilde + [N] mask);
+    ``n_traces`` counts retraces so tests can pin the one-jitted-call-per-
+    window contract.
+    """
+
+    name = "gossip"
+    # wake-on-event windows report NaN losses for sleeping agents;
+    # Session.round aggregates with nanmean for engines that set this
+    loss_nan_is_sentinel = True
+
+    def __init__(self, spec, model, n_agents: int):
+        from repro.api.engines import build_optimizer, build_schedule
+
+        inf = spec.inference
+        self.n_agents = n_agents
+        self.model = model
+        self.opt = build_optimizer(inf.optimizer)
+        self.init_sigma = inf.init_sigma
+        self.shared_init = inf.shared_init
+        self.consensus_mode = inf.consensus
+        clock_doc = spec.topology.clock or {}
+        self.local_policy = clock_doc.get("local_policy", "all")
+        if self.local_policy not in ("all", "active"):
+            raise ValueError(
+                f"unknown gossip local_policy {self.local_policy!r}; "
+                "known: all | active"
+            )
+        lr_schedule = build_schedule(inf.lr, inf.lr_decay)
+        nll_fn = model.nll_fn
+        n_mc, kl_scale = inf.n_mc_samples, inf.kl_scale
+        opt = self.opt
+        policy, consensus_mode = self.local_policy, self.consensus_mode
+        self.n_traces = 0
+
+        def window_fn(state: GossipState, batches, W, key):
+            self.n_traces += 1  # trace-time side effect: retrace telemetry
+            nll = make_flat_nll(nll_fn, state.posterior.layout)
+            # clock contract: inactive rows of W-tilde are EXACTLY e_i
+            active = jnp.diagonal(W) < 1.0
+            lr = lr_schedule(state.round)
+            prior = state.posterior
+            # the SHARED local phase (simulated.network_local_steps): the
+            # all-edges-active window is bit-identical to the synchronous
+            # round because both runtimes run this exact derivation
+            post, opt_state, losses = network_local_steps(
+                state.posterior, prior, opt, state.opt_state, nll, batches,
+                key, lr, state.step, n_samples=n_mc, kl_scale=kl_scale,
+            )
+            u = jax.tree.leaves(batches)[0].shape[1]
+            if policy == "active":
+                # wake-on-event: sleeping agents' local state passes through,
+                # and their (discarded) phantom losses must not pollute the
+                # loss telemetry — NaN marks "did not train this window"
+                # (Session.round aggregates with nanmean)
+                post = _agent_select(active, post, state.posterior)
+                opt_state = _agent_select(active, opt_state, state.opt_state)
+                step = jnp.where(active, state.step + u, state.step)
+                losses = jnp.where(active, losses, jnp.nan)
+            else:
+                step = state.step + u
+            if consensus_mode == "gaussian":
+                post = consensus_flat_masked(post, W, active)
+            elif consensus_mode == "mean_only":
+                act = active[:, None]
+                post = dataclasses.replace(
+                    post,
+                    mean=jnp.where(act, W @ post.mean, post.mean),
+                    rho=jnp.where(act, W @ post.rho, post.rho),
+                )
+            merged = active if consensus_mode != "none" else jnp.zeros_like(active)
+            new_state = GossipState(
+                posterior=post,
+                opt_state=opt_state,
+                step=step,
+                round=state.round + 1,
+                last_merge=jnp.where(merged, state.round, state.last_merge),
+                n_merges=state.n_merges + merged.astype(jnp.int32),
+            )
+            return new_state, losses
+
+        self._window = jax.jit(window_fn) if spec.run.jit else window_fn
+
+    # -- Engine protocol -----------------------------------------------------
+
+    def init(self, key: jax.Array) -> GossipState:
+        ns = init_network(
+            key,
+            self.n_agents,
+            self.model.init_fn,
+            self.opt,
+            init_sigma=self.init_sigma,
+            shared_init=self.shared_init,
+            flat=True,
+        )
+        return GossipState(
+            posterior=ns.posterior,
+            opt_state=ns.opt_state,
+            step=ns.step,
+            round=ns.round,
+            last_merge=jnp.full((self.n_agents,), -1, jnp.int32),
+            n_merges=jnp.zeros((self.n_agents,), jnp.int32),
+        )
+
+    def run_round(self, state, batches, W, key):
+        return self._window(state, batches, jnp.asarray(W), key)
+
+    def posterior(self, state) -> FlatPosterior:
+        return state.posterior
+
+    # -- telemetry -----------------------------------------------------------
+
+    def staleness(self, state) -> np.ndarray:
+        """[N] windows since each agent's last merge (never merged = age of
+        the whole run) — the per-agent posterior age the async analyses
+        (BayGo; Lalitha et al. 2019) bound."""
+        n = int(state.round)
+        last = np.asarray(state.last_merge)
+        return np.where(last >= 0, (n - 1) - last, n).astype(np.int64)
+
+    def telemetry(self, state) -> dict:
+        """Merged into ``Session.evaluate`` output: staleness percentiles +
+        merge counts over the run so far."""
+        age = self.staleness(state)
+        merges = np.asarray(state.n_merges)
+        return {
+            "staleness": {
+                "p50": float(np.percentile(age, 50)),
+                "p90": float(np.percentile(age, 90)),
+                "max": int(age.max()),
+                "mean": float(age.mean()),
+            },
+            "merges": {
+                "per_agent_mean": float(merges.mean()),
+                "min": int(merges.min()),
+                "total": int(merges.sum()),
+            },
+            "windows": int(state.round),
+        }

@@ -19,6 +19,17 @@ Three kernels, all computing
   topologies (ring/grid/star): grid ``(N, P // BLOCK, D)`` with the neighbor
   ids scalar-prefetched so each agent reads only its deg(i) <= D neighbor
   tiles instead of all N rows.
+* ``consensus_fused_masked``   — the gossip event-window form (repro.gossip):
+  the network kernel plus a per-agent activity mask.  ACTIVE rows run the
+  identical MXU math as ``consensus_fused_network`` (bitwise: the all-active
+  window reproduces the synchronous kernel exactly); INACTIVE rows pass
+  their (mean, rho) through UNTOUCHED — no softplus/softplus^-1 round trip,
+  so an idle agent's posterior is bit-stable across any number of windows.
+* ``consensus_fused_masked_sparse`` — CSR + activity mask: active agents
+  read only their deg(i) fired-neighbor tiles, inactive agents copy their
+  own row (the self-padded tables guarantee the last gathered tile IS the
+  agent's own row), giving HBM traffic proportional to the window's
+  active-edge fraction (``launch.costmodel.gossip_window_roofline``).
 
 Flat-buffer layout contract (shared with ``core.flat.FlatPosterior``):
   * axis 0 is the agent axis (N rows), axis 1 the flattened parameter axis
@@ -172,6 +183,71 @@ def consensus_fused_network(
     return mean_out[:, :p], rho_out[:, :p]
 
 
+def _consensus_masked_kernel(
+    w_ref, act_ref, mean_ref, rho_ref, mean_out_ref, rho_out_ref
+):
+    w = w_ref[...]  # [N, N] effective window W-tilde, resident in VMEM
+    act = act_ref[...]  # [N, 1] activity mask (1.0 = merges this window)
+    mean = mean_ref[...]  # [N, BLOCK]
+    rho = rho_ref[...]  # [N, BLOCK]
+    sigma = jax.nn.softplus(rho)
+    prec = 1.0 / (sigma * sigma)
+    # identical op sequence to _consensus_network_kernel -> active rows are
+    # bitwise-equal to the synchronous fused kernel
+    new_prec = jnp.dot(w, prec, preferred_element_type=jnp.float32)
+    new_pm = jnp.dot(w, prec * mean, preferred_element_type=jnp.float32)
+    mean_out_ref[...] = jnp.where(act > 0, new_pm / new_prec, mean)
+    rho_out_ref[...] = jnp.where(
+        act > 0, softplus_inv(jax.lax.rsqrt(new_prec)), rho
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def consensus_fused_masked(
+    W: jax.Array,  # [N, N] effective window W-tilde (inactive rows = e_i)
+    active: jax.Array,  # [N] bool/int/float activity mask
+    mean: jax.Array,  # [N, P]
+    rho: jax.Array,  # [N, P]
+    *,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Event-window eq. (6): masked network-wide consensus in ONE
+    ``pallas_call``.
+
+    Active rows compute the exact ``consensus_fused_network`` math on the
+    window's W-tilde; inactive rows pass (mean, rho) through untouched.
+    With ``active`` all-true and the same W this is bit-identical to
+    ``consensus_fused_network`` — the gossip/synchronous equivalence the
+    tests pin.  Same layout/padding contract as the other kernels.
+    """
+    interpret = _auto_interpret(interpret)
+    n, p = mean.shape
+    mean, rho, pp = _pad_lanes(mean, rho, block)
+    act = active.astype(jnp.float32)[:, None]
+    grid = (pp // block,)
+    mean_out, rho_out = pl.pallas_call(
+        _consensus_masked_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, n), lambda i: (0, 0)),  # W resident across tiles
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),  # mask resident too
+            pl.BlockSpec((n, block), lambda i: (0, i)),
+            pl.BlockSpec((n, block), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n, block), lambda i: (0, i)),
+            pl.BlockSpec((n, block), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, pp), mean.dtype),
+            jax.ShapeDtypeStruct((n, pp), rho.dtype),
+        ],
+        interpret=interpret,
+    )(W.astype(jnp.float32), act, mean, rho)
+    return mean_out[:, :p], rho_out[:, :p]
+
+
 def _consensus_sparse_kernel(
     nbr_ref,  # scalar-prefetch [N, D] int32 neighbor ids (self-padded)
     wts_ref,  # scalar-prefetch [N, D] fp32 neighbor weights (0-padded)
@@ -252,4 +328,103 @@ def consensus_fused_sparse(
         ],
         interpret=interpret,
     )(neighbors.astype(jnp.int32), weights.astype(jnp.float32), mean, rho)
+    return mean_out[:, :p], rho_out[:, :p]
+
+
+def _consensus_masked_sparse_kernel(
+    nbr_ref,  # scalar-prefetch [N, D] int32 neighbor ids (self-padded)
+    wts_ref,  # scalar-prefetch [N, D] fp32 weights (0-padded)
+    act_ref,  # scalar-prefetch [N] int32 activity mask
+    mean_ref,  # [1, BLOCK] — row nbr[i, d], column tile j
+    rho_ref,  # [1, BLOCK]
+    mean_out_ref,  # [1, BLOCK] — row i, column tile j
+    rho_out_ref,  # [1, BLOCK]
+    acc_prec,  # VMEM scratch [1, BLOCK]
+    acc_pm,  # VMEM scratch [1, BLOCK]
+):
+    i = pl.program_id(0)
+    d = pl.program_id(2)
+    w = wts_ref[i, d]
+
+    @pl.when(d == 0)
+    def _init():
+        acc_prec[...] = jnp.zeros_like(acc_prec)
+        acc_pm[...] = jnp.zeros_like(acc_pm)
+
+    sigma = jax.nn.softplus(rho_ref[...])
+    wp = w / (sigma * sigma)
+    acc_prec[...] += wp
+    acc_pm[...] += wp * mean_ref[...]
+
+    @pl.when(d == pl.num_programs(2) - 1)
+    def _finish():
+        # inactive rows are all-self in the tables (w_eff row == e_i), so the
+        # tile currently in (mean_ref, rho_ref) IS the agent's own row — the
+        # passthrough never touches anyone else's data
+        passthrough = act_ref[i] == 0
+        prec_out = acc_prec[...]
+        mean_out_ref[...] = jnp.where(
+            passthrough, mean_ref[...], acc_pm[...] / prec_out
+        )
+        rho_out_ref[...] = jnp.where(
+            passthrough, rho_ref[...], softplus_inv(jax.lax.rsqrt(prec_out))
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def consensus_fused_masked_sparse(
+    neighbors: jax.Array,  # [N, D] int32 window neighbor ids (self-padded)
+    weights: jax.Array,  # [N, D] fp32 w_eff[i, neighbors[i]] (0-padded)
+    active: jax.Array,  # [N] activity mask
+    mean: jax.Array,  # [N, P]
+    rho: jax.Array,  # [N, P]
+    *,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Active-edge eq. (6): CSR neighbor tables of the window's W-tilde
+    (``core.flat.neighbor_tables(w_eff)``) + per-agent activity mask.
+
+    Active agents accumulate only their deg(i) <= D fired-neighbor tiles;
+    inactive agents copy their own (mean, rho) row bit-identically (their
+    table rows are all-self, so no foreign tile is ever gathered).  HBM
+    traffic scales with the window's active-edge fraction instead of N —
+    see ``launch.costmodel.gossip_window_roofline``.
+    """
+    interpret = _auto_interpret(interpret)
+    n, p = mean.shape
+    d = neighbors.shape[1]
+    mean, rho, pp = _pad_lanes(mean, rho, block)
+    grid = (n, pp // block, d)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i, j, k, nbr, wts, act: (nbr[i, k], j)),
+            pl.BlockSpec((1, block), lambda i, j, k, nbr, wts, act: (nbr[i, k], j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda i, j, k, nbr, wts, act: (i, j)),
+            pl.BlockSpec((1, block), lambda i, j, k, nbr, wts, act: (i, j)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, block), jnp.float32),
+            pltpu.VMEM((1, block), jnp.float32),
+        ],
+    )
+    mean_out, rho_out = pl.pallas_call(
+        _consensus_masked_sparse_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n, pp), mean.dtype),
+            jax.ShapeDtypeStruct((n, pp), rho.dtype),
+        ],
+        interpret=interpret,
+    )(
+        neighbors.astype(jnp.int32),
+        weights.astype(jnp.float32),
+        active.astype(jnp.int32),
+        mean,
+        rho,
+    )
     return mean_out[:, :p], rho_out[:, :p]

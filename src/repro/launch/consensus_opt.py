@@ -27,6 +27,11 @@ from jax.sharding import PartitionSpec as P
 from repro.core.flat import FlatPosterior
 from repro.core.posterior import GaussianPosterior, softplus, softplus_inv
 
+try:  # jax >= 0.5 exports shard_map at the top level
+    _shard_map = jax.shard_map
+except AttributeError:  # 0.4.x: experimental home
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 
 def consensus_einsum(posts: GaussianPosterior, W: jax.Array,
                      wire_dtype=jnp.float32) -> GaussianPosterior:
@@ -88,16 +93,38 @@ def consensus_ppermute_ring_flat(
     axis: str,
     self_weight: float = 1.0 / 3.0,
     wire_dtype=jnp.float32,
+    W: jax.Array | None = None,
 ) -> FlatPosterior:
     """Bidirectional-ring eq. (6) on the flat buffers: one ``shard_map`` over
     the two [N, P] arrays (the pytree version below issues one shard_map per
-    leaf).  Wire bytes per agent: 2 x P (both neighbor directions)."""
+    leaf).  Wire bytes per agent: 2 x P (both neighbor directions).
+
+    ``W=None`` uses the uniform ring weights from ``self_weight``;
+    passing the [N, N] ring matrix reads each shard's (self, prev, next)
+    weights from its own row via ``axis_index`` — the form
+    ``make_train_round_step(consensus_impl="ppermute")`` routes flat
+    posteriors through (non-ring entries of W are ignored; for n == 2 the
+    two neighbor directions coincide and only the fwd direction is mixed,
+    exactly like ``consensus_ppermute_pod``).
+    """
     n = mesh.shape[axis]
-    w_self, w_prev, w_next = ring_weights(n, self_weight)
     fwd = [(i, (i + 1) % n) for i in range(n)]  # receive from i-1
     bwd = [(i, (i - 1) % n) for i in range(n)]  # receive from i+1
+    if W is None:
+        w_static = ring_weights(n, self_weight)
+        Wd = None
+    else:
+        w_static = None
+        Wd = jnp.asarray(W, jnp.float32)
 
     def shard_fn(mean, rho):
+        if Wd is None:
+            w_self, w_prev, w_next = w_static
+        else:
+            i = jax.lax.axis_index(axis)
+            w_self = Wd[i, i]
+            w_prev = Wd[i, (i - 1) % n]
+            w_next = Wd[i, (i + 1) % n] if n > 2 else jnp.asarray(0.0)
         prec = 1.0 / jnp.square(softplus(rho))
         pm = (prec * mean).astype(wire_dtype)
         pw = prec.astype(wire_dtype)
@@ -118,7 +145,7 @@ def consensus_ppermute_ring_flat(
         return new_pm / new_prec, softplus_inv(jnp.sqrt(1.0 / new_prec))
 
     spec = P(axis, None)
-    fn = jax.shard_map(
+    fn = _shard_map(
         shard_fn, mesh=mesh, in_specs=(spec, spec), out_specs=(spec, spec)
     )
     mean, rho = fn(posts.mean, posts.rho)
@@ -176,7 +203,7 @@ def consensus_ppermute_pod(
     outs = []
     for m, r, s in zip(flat_mean, flat_rho, flat_shard):
         spec = s.spec if hasattr(s, "spec") else s
-        fn = jax.shard_map(
+        fn = _shard_map(
             shard_fn, mesh=mesh, in_specs=(spec, spec), out_specs=(spec, spec)
         )
         outs.append(fn(m, r))
@@ -240,7 +267,7 @@ def consensus_ppermute_ring(
     outs = []
     for m, r in zip(flat_mean, flat_rho):
         spec = leaf_spec(m)
-        fn = jax.shard_map(
+        fn = _shard_map(
             shard_fn, mesh=mesh, in_specs=(spec, spec), out_specs=(spec, spec)
         )
         outs.append(fn(m, r))

@@ -90,6 +90,67 @@ def consensus_roofline(
     return out
 
 
+def gossip_window_roofline(
+    n_agents: int,
+    n_params: int,
+    n_participating: int,
+    n_merging: int | None = None,
+    bytes_per_el: int = 4,
+) -> dict[str, Any]:
+    """Analytic HBM traffic of ONE gossip event window (repro.gossip), for
+    the active-edge masked consensus (``consensus_fused_masked_sparse``).
+
+    Only agents PARTICIPATING in the window's events (source or target of a
+    fired edge) have their (mean, rho) rows read, and only MERGING agents
+    (>= 1 incoming event) are written; untouched agents cost nothing (their
+    rows pass through in place — a donated-buffer window update never
+    streams them).  With every agent participating this degenerates to the
+    dense fused number (``consensus_roofline``'s ``flat_fused``: 4 network
+    passes' worth of touches), which the monotonicity unit test pins:
+    window bytes are monotone in the active fraction and bounded above by
+    the dense fused bytes.
+
+    ``n_participating`` / ``n_merging`` come straight from an
+    ``EventWindow`` (``window.participating().sum()`` /
+    ``window.active.sum()``); ``n_merging`` defaults to
+    ``n_participating``.
+    """
+    if n_merging is None:
+        n_merging = n_participating
+    if not 0 <= n_merging <= n_participating <= n_agents:
+        raise ValueError(
+            "expected 0 <= n_merging <= n_participating <= n_agents, got "
+            f"{n_merging} / {n_participating} / {n_agents}"
+        )
+    row_bytes = n_params * bytes_per_el
+    net_bytes = n_agents * row_bytes
+    # read mean+rho of participants, write mean+rho of merging agents
+    bytes_window = 2.0 * n_participating * row_bytes + 2.0 * n_merging * row_bytes
+    bytes_dense = 4.0 * net_bytes  # consensus_roofline flat_fused
+    return {
+        "n_agents": n_agents,
+        "n_params": n_params,
+        "n_participating": n_participating,
+        "n_merging": n_merging,
+        # NOT EventWindow.active_fraction (the merging-agent mean): this is
+        # the fraction of agents whose rows the window kernel must read
+        "participating_fraction": n_participating / n_agents if n_agents else 0.0,
+        "hbm_bytes": {"window_masked": bytes_window, "dense_fused": bytes_dense},
+        # fused-pass units: 1.0 == one read+write of both network buffers
+        "hbm_passes": {
+            "window_masked": bytes_window / bytes_dense if bytes_dense else 0.0,
+            "dense_fused": 1.0,
+        },
+        "roofline_seconds": {
+            "window_masked": bytes_window / HBM_BW,
+            "dense_fused": bytes_dense / HBM_BW,
+        },
+        "model_speedup_window_vs_dense": (
+            bytes_dense / bytes_window if bytes_window else float("inf")
+        ),
+    }
+
+
 def _layer_kind_counts(cfg) -> dict[str, int]:
     counts: dict[str, int] = {}
     for k in cfg.pattern:

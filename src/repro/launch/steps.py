@@ -115,18 +115,27 @@ def make_train_round_step(
         if consensus_impl == "none":
             prior = state.posterior  # pure local step (u>1 rounds / A-B test)
         elif consensus_impl == "ppermute":
-            from repro.launch.consensus_opt import consensus_ppermute_pod
+            if is_flat:
+                # flat posterior: ONE shard_map over the two [A, P] buffers
+                # (ROADMAP item closed by ISSUE 3) instead of the leaf-wise
+                # pod ppermute; the shard's W row supplies the ring weights
+                from repro.launch.consensus_opt import consensus_ppermute_ring_flat
 
-            out = consensus_ppermute_pod(
-                state.posterior, W, mesh, posterior_shardings,
-                wire_dtype=consensus_wire_dtype or jnp.bfloat16,
-            )
-            # ppermute math is leaf-wise, so it runs on the [A, P] buffers
-            # as-is; restore the flat container (and its static layout)
-            prior = (
-                dataclasses.replace(state.posterior, mean=out.mean, rho=out.rho)
-                if is_flat else out
-            )
+                mean_sh = getattr(posterior_shardings, "mean", None)
+                spec0 = getattr(mean_sh, "spec", None)
+                axis = (spec0[0] if spec0 and spec0[0] is not None else "pod")
+                prior = consensus_ppermute_ring_flat(
+                    state.posterior, mesh, axis,
+                    wire_dtype=consensus_wire_dtype or jnp.bfloat16,
+                    W=W,
+                )
+            else:
+                from repro.launch.consensus_opt import consensus_ppermute_pod
+
+                prior = consensus_ppermute_pod(
+                    state.posterior, W, mesh, posterior_shardings,
+                    wire_dtype=consensus_wire_dtype or jnp.bfloat16,
+                )
         elif consensus_wire_dtype is not None:
             from repro.launch.consensus_opt import (
                 consensus_einsum,

@@ -65,11 +65,9 @@ def test_consensus_einsum_sharded_matches_unsharded():
 
 
 @pytest.mark.slow
-@pytest.mark.xfail(
-    reason="pre-existing seed failure (numerical mismatch on the single-CPU-device substrate); identical at seed commit e353c71",
-    strict=False,
-)
 def test_consensus_ppermute_matches_einsum():
+    # seed xfail removed: the failure was jax.shard_map missing on jax 0.4.x;
+    # consensus_opt now falls back to jax.experimental.shard_map
     _run("""
     from repro.core.posterior import GaussianPosterior, consensus_all_agents
     from repro.launch.consensus_opt import consensus_ppermute_pod
@@ -96,6 +94,36 @@ def test_consensus_ppermute_matches_einsum():
             q, W, mesh, shardings, wire_dtype=jnp.float32))(posts)
     np.testing.assert_allclose(np.asarray(out32.mean["w"]), np.asarray(ref.mean["w"]),
                                rtol=1e-5, atol=1e-5)
+    print("OK")
+    """)
+
+
+@pytest.mark.slow
+def test_consensus_ppermute_ring_flat_matches_reference():
+    """The FLAT ppermute route (one shard_map over the [N, P] buffers, ring
+    weights read from W rows) == the fused flat consensus reference — the
+    path make_train_round_step(consensus_impl="ppermute") now takes for
+    FlatPosterior states (ROADMAP open item closed by ISSUE 3)."""
+    _run("""
+    from repro.core.flat import FlatLayout, FlatPosterior, consensus_flat
+    from repro.launch.consensus_opt import consensus_ppermute_ring_flat
+    a, p = 2, 2048
+    rng = np.random.default_rng(4)
+    mean = jnp.asarray(rng.normal(size=(a, p)), jnp.float32)
+    rho = jnp.asarray(rng.normal(size=(a, p)) * 0.3, jnp.float32)
+    W = jnp.asarray([[0.6, 0.4], [0.25, 0.75]], jnp.float32)
+    layout = FlatLayout.for_pytree({"w": jnp.zeros((p,))})
+    sh = NamedSharding(mesh, P("pod", None))
+    posts = FlatPosterior(mean=jax.device_put(mean, sh),
+                          rho=jax.device_put(rho, sh), layout=layout)
+    ref = consensus_flat(FlatPosterior(mean=mean, rho=rho, layout=layout), W)
+    with mesh:
+        out = jax.jit(lambda q: consensus_ppermute_ring_flat(
+            q, mesh, "pod", wire_dtype=jnp.float32, W=W))(posts)
+    np.testing.assert_allclose(np.asarray(out.mean), np.asarray(ref.mean),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out.rho), np.asarray(ref.rho),
+                               rtol=1e-4, atol=1e-4)
     print("OK")
     """)
 
