@@ -1,6 +1,6 @@
 """Gossip-runtime smoke benchmark (`benchmarks/run.py gossip-smoke`).
 
-Three parts, mirroring what the ROADMAP Async section promises:
+Five parts, mirroring what the ROADMAP Async section promises:
 
 1. **Equivalence probes** (correctness, not timed): the all-edges-active
    window must equal the synchronous fused consensus BIT-identically, at
@@ -9,11 +9,25 @@ Three parts, mirroring what the ROADMAP Async section promises:
    (all-edges TraceClock GossipEngine vs SimulatedEngine).
 2. **Tiny Poisson run**: a few event windows on a ring through the full
    ``repro.api`` surface — losses finite, staleness telemetry populated,
-   one jitted call per window (trace-count assertion).
+   one jitted call per window (trace-count assertion).  The first window
+   is warmed up BEFORE the timer starts and reported as ``compile_us``;
+   ``wall_us_total`` is the warm steady-state cost of the remaining
+   windows (the seed benchmark timed the jit compile inside the loop and
+   reported ~4 s for 5 tiny CPU windows).
 3. **Window-consensus sweep**: masked-consensus wall-clock vs the dense
    fused pass at several active fractions, next to the analytic
    ``gossip_window_roofline`` (on CPU the model numbers are load-bearing,
    as for BENCH_consensus.json).
+4. **Delay sweep**: the delivery-latency engine (``DelayedClock`` +
+   [K, N, P] history ring) at several delay depths — staleness grows with
+   depth while per-window wall time stays flat (one extra ring write), and
+   the roofline's history term tracks the depth.
+5. **Shard sweep**: the sharded window consensus
+   (``consensus_ppermute_window``) vs the dense masked pass for every
+   shard count the local device pool supports (CI runs this step under
+   ``--xla_force_host_platform_device_count=8``), asserting BIT-identity
+   per shard count and reporting the per-window cross-shard offset
+   schedule next to the ICI roofline.
 
 Output: ``BENCH_gossip.json`` + the harness's ``name,us_per_call,derived``
 CSV rows.
@@ -38,6 +52,10 @@ from repro.gossip.clocks import PoissonClock, _directed_edges
 from repro.kernels.consensus import (
     consensus_fused_masked,
     consensus_fused_network,
+)
+from repro.launch.consensus_opt import (
+    consensus_ppermute_window,
+    window_shard_offsets,
 )
 from repro.launch.costmodel import gossip_window_roofline
 
@@ -109,31 +127,44 @@ def _all_active_equivalence() -> dict:
     return {"kernel_max_err": kernel_err, "engine_max_err": engine_err}
 
 
-def _poisson_smoke() -> dict:
+def _smoke_spec(n: int, clock: dict, n_rounds: int = 5):
     from repro.api import (
         DataSpec, ExperimentSpec, InferenceSpec, RunSpec, TopologySpec,
-        build_session,
     )
 
-    n = 6
-    spec = ExperimentSpec(
-        topology=TopologySpec.gossip(
-            "bidirectional_ring", {"n": n},
-            clock={"kind": "failure_injected",
-                   "inner": {"kind": "poisson", "rate": 0.8, "seed": 1},
-                   "drop_rate": 0.1},
-        ),
+    return ExperimentSpec(
+        topology=TopologySpec.gossip("bidirectional_ring", {"n": n},
+                                     clock=clock),
         data=DataSpec(
             dataset_params=dict(n_classes=3, dim=8, n_train_per_class=30),
             partition="iid", partition_params=dict(n_agents=n),
             batch_size=4, local_updates=2,
         ),
         inference=InferenceSpec(hidden=8, depth=1, lr=1e-2),
-        run=RunSpec(n_rounds=5, seed=0),
+        run=RunSpec(n_rounds=n_rounds, seed=0),
+    )
+
+
+def _poisson_smoke() -> dict:
+    from repro.api import build_session
+
+    n, n_rounds = 6, 5
+    spec = _smoke_spec(
+        n,
+        clock={"kind": "failure_injected",
+               "inner": {"kind": "poisson", "rate": 0.8, "seed": 1},
+               "drop_rate": 0.1},
+        n_rounds=n_rounds,
     )
     s = build_session(spec)
+    # warm up ONE window before the timer: the first call pays the jit
+    # compile, which on tiny CPU shapes dwarfs the run (the seed benchmark's
+    # 4.09 s "wall" was ~all compile) — report it separately
     t0 = time.perf_counter()
-    hist = s.run(eval_every=5)
+    first = s.round()
+    compile_us = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    hist = s.run(n_rounds - 1, eval_every=n_rounds - 1)
     wall_us = (time.perf_counter() - t0) * 1e6
     tel = s.evaluate()
     assert np.isfinite(hist[-1]["loss"])
@@ -141,11 +172,15 @@ def _poisson_smoke() -> dict:
     return {
         "windows": tel["windows"],
         "loss": hist[-1]["loss"],
+        "n_trained": hist[-1]["n_trained"],
         "avg_acc": tel["avg_acc"],
         "staleness": tel["staleness"],
         "merges": tel["merges"],
         "n_traces": s.engine.n_traces,
-        "wall_us_total": wall_us,
+        "compile_us": compile_us,
+        "wall_us_total": wall_us,  # warm: windows 2..n_rounds only
+        "wall_us_per_window": wall_us / (n_rounds - 1),
+        "first_round_loss": first["loss"],
     }
 
 
@@ -185,28 +220,137 @@ def _window_sweep(n: int = 16, p: int = 1 << 15) -> list[dict]:
     return out
 
 
+def _delay_sweep() -> list[dict]:
+    """Delivery-latency depths: the [K, N, P] history ring costs one extra
+    network write per window; staleness telemetry grows with depth."""
+    from repro.api import build_session
+
+    n, n_rounds = 6, 6
+    out = []
+    for delay in (0, 1, 3):
+        clock = {"kind": "delayed",
+                 "inner": {"kind": "poisson", "rate": 0.8, "seed": 1},
+                 "latency": {"kind": "constant", "delay": delay}}
+        s = build_session(_smoke_spec(n, clock, n_rounds=n_rounds))
+        t0 = time.perf_counter()
+        s.round()
+        compile_us = (time.perf_counter() - t0) * 1e6
+        t0 = time.perf_counter()
+        hist = s.run(n_rounds - 1, eval_every=n_rounds - 1)
+        wall_us = (time.perf_counter() - t0) * 1e6
+        tel = s.evaluate()
+        assert s.engine.n_traces == 1, "delayed window retraced"
+        win = s.engine.clock.window(n_rounds - 1)
+        out.append({
+            "delay": delay,
+            "hist_slots": s.engine.hist_slots,
+            "loss": hist[-1]["loss"],
+            "staleness": tel["staleness"],
+            "merges_total": tel["merges"]["total"],
+            "compile_us": compile_us,
+            "wall_us_per_window": wall_us / (n_rounds - 1),
+            "roofline": gossip_window_roofline(
+                n, int(s.posterior().mean.shape[-1]),
+                n_participating=int(win.participating().sum()),
+                n_merging=int(win.active.sum()),
+                delay_depth=delay,
+                n_stale_events=win.n_events,
+            ),
+        })
+    return out
+
+
+def _shard_sweep(n: int = 8, p: int = 1 << 14) -> list[dict]:
+    """Sharded window consensus vs the dense masked pass, per shard count
+    the local device pool supports — bit-identity asserted at every S."""
+    ks = jax.random.split(jax.random.key(7), 2)
+    mean = jax.random.normal(ks[0], (n, p))
+    rho = jax.random.normal(ks[1], (n, p)) * 0.4 - 1.0
+    layout = FlatLayout.for_pytree({"w": jnp.zeros((p,))})
+    posts = FlatPosterior(mean=mean, rho=rho, layout=layout)
+    W_base = bidirectional_ring_w(n)
+    win = PoissonClock(W_base, rate=0.5, seed=9).window(0)
+    Wj = jnp.asarray(win.w_eff, jnp.float32)
+    act = jnp.asarray(win.active)
+    masked_fn = jax.jit(
+        lambda q, w, a: consensus_flat_masked(q, w, a).mean
+    )
+    us_masked = _time(masked_fn, (posts, Wj, act))
+    ref = consensus_flat_masked(posts, Wj, act)
+    devices = jax.devices()
+    out = []
+    for shards in (1, 2, 4, 8):
+        if shards > len(devices) or n % shards:
+            continue
+        mesh = jax.sharding.Mesh(np.asarray(devices[:shards]), ("agents",))
+        sharded = consensus_ppermute_window(posts, win, mesh, "agents")
+        bit_equal = bool(
+            jnp.all(sharded.mean == ref.mean) & jnp.all(sharded.rho == ref.rho)
+        )
+        assert bit_equal, f"sharded window != masked reference at S={shards}"
+        offsets = window_shard_offsets(win, shards)
+        out.append({
+            "n_shards": shards,
+            "n_cross_offsets": len(offsets),
+            "offsets": list(offsets),
+            "bit_identical_vs_masked": bit_equal,
+            "us": {
+                "window_masked": us_masked,
+                "window_ppermute": _time(
+                    lambda q: consensus_ppermute_window(
+                        q, win, mesh, "agents"
+                    ).mean,
+                    (posts,),
+                ),
+            },
+            "roofline": gossip_window_roofline(
+                n, p,
+                n_participating=int(win.participating().sum()),
+                n_merging=int(win.active.sum()),
+                n_shards=shards,
+                n_cross_offsets=len(offsets),
+            ),
+        })
+    return out
+
+
 def run(json_out: str | None = DEFAULT_JSON) -> dict:
     equiv = _all_active_equivalence()
     print(f"gossip_equivalence,0.0,"
           f"kernel_err={equiv['kernel_max_err']};"
           f"engine_err={equiv['engine_max_err']}")
     smoke = _poisson_smoke()
-    print(f"gossip_poisson_smoke,{smoke['wall_us_total']:.1f},"
+    print(f"gossip_poisson_smoke,{smoke['wall_us_per_window']:.1f},"
           f"windows={smoke['windows']};loss={smoke['loss']:.4f};"
           f"staleness_p90={smoke['staleness']['p90']};"
-          f"traces={smoke['n_traces']}")
+          f"traces={smoke['n_traces']};"
+          f"compile_us={smoke['compile_us']:.0f}")
     sweep = _window_sweep()
     for rec in sweep:
         print(f"gossip_window[f={rec['active_fraction']:.2f}],"
               f"{rec['us']['window_masked']:.1f},"
               f"model_passes="
               f"{rec['roofline']['hbm_passes']['window_masked']:.3f}")
+    delay = _delay_sweep()
+    for rec in delay:
+        print(f"gossip_delay[k={rec['delay']}],"
+              f"{rec['wall_us_per_window']:.1f},"
+              f"staleness_p90={rec['staleness']['p90']};"
+              f"hist_slots={rec['hist_slots']}")
+    shard = _shard_sweep()
+    for rec in shard:
+        print(f"gossip_shard[S={rec['n_shards']}],"
+              f"{rec['us']['window_ppermute']:.1f},"
+              f"offsets={rec['n_cross_offsets']};bitwise=1")
     doc = {
         "benchmark": "gossip_event_windows",
         "backend": jax.default_backend(),
+        "n_devices": len(jax.devices()),
         "equivalence": equiv,
         "poisson_smoke": smoke,
         "window_sweep": sweep,
+        "delay_sweep": delay,
+        "shard_sweep": shard,
     }
     if json_out:
         with open(json_out, "w") as f:

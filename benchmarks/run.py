@@ -25,8 +25,12 @@ Subcommands:
   run.py gossip-smoke [--json-out F]             event-driven gossip runtime
             smoke: all-edges-active window must equal the synchronous fused
             consensus bit-identically, tiny Poisson+link-failure run with
-            staleness telemetry, window-consensus sweep; emits
-            BENCH_gossip.json
+            staleness telemetry (compile_us split from the warm wall time),
+            window-consensus / delivery-latency / shard-count sweeps (the
+            shard sweep asserts consensus_ppermute_window bit-identity per
+            shard count — run under
+            XLA_FLAGS=--xla_force_host_platform_device_count=8 to cover
+            S>1); emits BENCH_gossip.json
 """
 from __future__ import annotations
 

@@ -112,8 +112,17 @@ class Session:
 
     def round(self, W=None) -> dict:
         """One communication round (u local steps + consensus).  Returns
-        ``{"round", "loss"}``; ``W`` overrides the spec topology for this
-        round only (ad-hoc time-varying experiments)."""
+        ``{"round", "loss", "n_trained"}``; ``W`` overrides the spec
+        topology for this round only (ad-hoc time-varying experiments).
+
+        ``n_trained`` counts agents reporting a finite loss.  Engines whose
+        per-agent losses use NaN as a "did not train this round" sentinel
+        (gossip wake-on-event) aggregate over the trained agents only, and
+        an ALL-IDLE window (a zero-event window under
+        ``local_policy="active"``) reports ``loss=None`` / ``n_trained=0``
+        instead of silently writing NaN into the history; for the
+        synchronous engines a NaN loss stays a loud NaN (divergence
+        signal)."""
         r = self.round_idx
         if W is None:
             W = self._spec_w_schedule()(r)
@@ -123,11 +132,13 @@ class Session:
             self.state, batches, jnp.asarray(W), k_round
         )
         self.round_idx = r + 1
-        # engines whose per-agent losses use NaN as a "did not train this
-        # round" sentinel (gossip wake-on-event) opt into nanmean; for the
-        # synchronous engines a NaN loss stays a loud NaN (divergence signal)
-        agg = jnp.nanmean if getattr(self.engine, "loss_nan_is_sentinel", False) else jnp.mean
-        return {"round": self.round_idx, "loss": float(agg(losses))}
+        losses = np.asarray(losses)
+        n_trained = int(np.isfinite(losses).sum())
+        if getattr(self.engine, "loss_nan_is_sentinel", False):
+            loss = float(np.nanmean(losses)) if n_trained else None
+        else:
+            loss = float(losses.mean())
+        return {"round": self.round_idx, "loss": loss, "n_trained": n_trained}
 
     def run(
         self,

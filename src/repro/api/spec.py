@@ -319,6 +319,17 @@ class InferenceSpec:
     from the registry (``api.models``) — the NN experiments.
     method="conjugate_linreg": the exact conjugate full-covariance update of
     Example 1 (eq. 2); model/optimizer fields are ignored.
+
+    ``consensus_impl`` picks the EXECUTION of the (gossip) consensus, not
+    its math — every impl is bit-identical by test:
+      ``auto``      the dense masked window kernel (default);
+      ``masked``    force the dense masked kernel;
+      ``ppermute``  shard the agent axis over the local devices and execute
+                    each event window as one ``shard_map`` that ppermutes
+                    only the window's fired shard offsets
+                    (``launch.consensus_opt.consensus_ppermute_window``);
+                    ``consensus_shards`` caps/pins the shard count (None =
+                    the largest divisor of n_agents <= local device count).
     """
 
     method: str = "bbb"
@@ -333,6 +344,8 @@ class InferenceSpec:
     kl_scale: float = 1e-3
     n_mc_samples: int = 1
     consensus: str = "gaussian"  # gaussian | mean_only | none
+    consensus_impl: str = "auto"  # auto | masked | ppermute (gossip runtime)
+    consensus_shards: int | None = None  # ppermute only; None = auto
     prior_var: float = 0.5  # conjugate_linreg prior N(0, prior_var I)
 
     def validate(self) -> None:
@@ -342,6 +355,21 @@ class InferenceSpec:
             raise ValueError(f"unknown optimizer {self.optimizer!r}")
         if self.consensus not in ("gaussian", "mean_only", "none"):
             raise ValueError(f"unknown consensus mode {self.consensus!r}")
+        if self.consensus_impl not in ("auto", "masked", "ppermute"):
+            raise ValueError(
+                f"unknown consensus_impl {self.consensus_impl!r}; known: "
+                "auto | masked | ppermute"
+            )
+        if self.consensus_shards is not None:
+            if self.consensus_shards <= 0:
+                raise ValueError(
+                    "consensus_shards must be a positive int or None"
+                )
+            if self.consensus_impl != "ppermute":
+                raise ValueError(
+                    "consensus_shards only applies to consensus_impl="
+                    "'ppermute' (it would be silently ignored otherwise)"
+                )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -396,6 +424,19 @@ class ExperimentSpec:
                 "engine='gossip' requires a TopologySpec(kind='gossip') "
                 "(the event windows come from its activation clock)"
             )
+        if self.inference.consensus_impl != "auto":
+            if self.topology.kind != "gossip":
+                raise ValueError(
+                    "consensus_impl selects the gossip window execution and "
+                    "requires a TopologySpec(kind='gossip'); the synchronous "
+                    "engines dispatch via core.posterior.consensus_all_agents"
+                )
+            if (self.inference.consensus_impl == "ppermute"
+                    and self.inference.consensus != "gaussian"):
+                raise ValueError(
+                    "consensus_impl='ppermute' shards the gaussian eq.-(6) "
+                    "window; mean_only/none consensus run the dense path"
+                )
         self.topology.validate()
 
     # -- checkpoint doc (msgpack-able plain data) ----------------------------

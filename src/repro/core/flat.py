@@ -400,6 +400,9 @@ def consensus_flat_masked(
     *,
     mode: str | None = None,
     block: int | None = None,
+    mesh: Any = None,
+    axis: str = "agents",
+    window: Any = None,
 ) -> FlatPosterior:
     """Masked network-wide consensus for one gossip event window.
 
@@ -407,10 +410,29 @@ def consensus_flat_masked(
     mask (``repro.gossip.clocks.EventWindow``).  Active agents merge per
     eq. (6); inactive agents pass through bit-identically (no softplus
     round trip — an idle agent's posterior is bit-stable across windows).
-    Same mode semantics as ``consensus_flat``.
+    Same mode semantics as ``consensus_flat``, plus the mesh-aware form:
+
+      "ppermute"  execute the window SHARDED over the agent axis of ``mesh``
+                  (``launch.consensus_opt.consensus_ppermute_window``): one
+                  ``shard_map`` over the [N, P] buffers that ppermutes only
+                  the window's fired shard offsets.  Requires ``mesh`` and
+                  the ``window`` (its static edge list IS the permutation
+                  schedule); bit-identical to the "xla" path by test.
     """
     from repro.kernels.consensus import DEFAULT_BLOCK, consensus_fused_masked
 
+    if mode == "ppermute":
+        from repro.launch.consensus_opt import consensus_ppermute_window
+
+        if mesh is None or window is None:
+            raise ValueError(
+                "consensus_flat_masked(mode='ppermute') needs mesh= and "
+                "window= (the EventWindow's edges are the static "
+                "permutation schedule)"
+            )
+        return consensus_ppermute_window(
+            posts, window, mesh, axis, block=(XLA_BLOCK if block is None else block)
+        )
     if mode is None:
         mode = "pallas" if jax.default_backend() == "tpu" else "xla"
     if mode == "xla":
@@ -427,6 +449,54 @@ def consensus_flat_masked(
     else:
         raise ValueError(f"unknown consensus_flat_masked mode {mode!r}")
     return FlatPosterior(mean=mean, rho=rho, layout=posts.layout)
+
+
+def consensus_flat_delayed(
+    posts: FlatPosterior,
+    W: jax.Array,
+    active: jax.Array,
+    edges: jax.Array,
+    weights: jax.Array,
+    lags: jax.Array,
+    hist_mean: jax.Array,
+    hist_rho: jax.Array,
+    round_idx: jax.Array,
+) -> FlatPosterior:
+    """Delivery-latency eq. (6): one gossip window whose events merge STALE
+    source posteriors (``repro.gossip.clocks.DelayedClock``).
+
+    Event k = ``(dst, src) = edges[k]`` with mixing weight ``weights[k]``
+    delivers src's posterior as of fire time — window ``round_idx -
+    lags[k]`` — read from the [K, N, P] history ring buffer (slot ``r mod
+    K``; the engine writes each window's post-local-step, pre-merge
+    posterior into its slot BEFORE calling this, so a lag-0 event reads the
+    current posterior and the all-lags-zero window reproduces the instant-
+    delivery semantics).  Per eq. (6) each active dst accumulates
+
+        prec_out[dst] = W[dst,dst] * prec_now[dst]
+                        + sum_k w_k * prec(hist[slot_k, src_k])
+
+    via a segment scatter-add over the static [E_max] event list (pad slots
+    carry weight 0.0 and contribute exactly nothing); inactive rows pass
+    through bitwise as in ``consensus_flat_masked``.
+    """
+    k_slots = hist_mean.shape[0]
+    slot = jnp.mod(round_idx - lags, k_slots)  # [E]
+    dst, src = edges[:, 0], edges[:, 1]
+    h_mean = hist_mean[slot, src]  # [E, P] stale source rows
+    h_rho = hist_rho[slot, src]
+    prec_e = 1.0 / jnp.square(softplus(h_rho))
+    w_e = weights[:, None].astype(COMPUTE_DTYPE)
+    prec_now = 1.0 / jnp.square(softplus(posts.rho))
+    diag = jnp.diagonal(W)[:, None].astype(COMPUTE_DTYPE)
+    acc_prec = (diag * prec_now).at[dst].add(w_e * prec_e)
+    acc_pm = (diag * prec_now * posts.mean).at[dst].add(w_e * prec_e * h_mean)
+    act = (active > 0)[:, None]
+    mean_out = jnp.where(act, acc_pm / acc_prec, posts.mean)
+    rho_out = jnp.where(
+        act, softplus_inv(jax.lax.rsqrt(acc_prec)), posts.rho
+    )
+    return FlatPosterior(mean=mean_out, rho=rho_out, layout=posts.layout)
 
 
 def consensus_flat_masked_sparse(

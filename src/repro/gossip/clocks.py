@@ -18,7 +18,13 @@ An ``EventWindow`` carries
 * ``active [N]`` bool — agents with at least one incoming event (only these
   merge; everyone else passes through the window untouched);
 * ``w_eff [N, N]`` — the window's effective row-stochastic W-tilde (see
-  below), the matrix handed to ``Session``/``Engine.run_round``.
+  below), the matrix handed to ``Session``/``Engine.run_round``;
+* ``delays [E_max]`` int32 — per-event delivery lag in windows (0 = the
+  classic instant-delivery model).  A lag-k event delivers the SRC POSTERIOR
+  AS OF FIRE TIME: the engine merges src's post-local-step (pre-merge)
+  posterior of window ``index - k``, read from a bounded [K, N, P] history
+  ring buffer (``repro.gossip.engine``).  Only ``DelayedClock`` emits
+  nonzero lags.
 
 W-tilde construction, two rules:
 
@@ -61,6 +67,13 @@ class EventWindow:
     active: np.ndarray  # [N] bool
     w_eff: np.ndarray  # [N, N] float64 row-stochastic
     n_events: int  # real events before padding
+    delays: np.ndarray = None  # [E_max] int32 delivery lag, 0 on pad slots
+
+    def __post_init__(self):
+        if self.delays is None:
+            object.__setattr__(
+                self, "delays", np.zeros((self.edges.shape[0],), np.int32)
+            )
 
     @property
     def n_agents(self) -> int:
@@ -69,6 +82,13 @@ class EventWindow:
     @property
     def active_fraction(self) -> float:
         return float(self.active.mean())
+
+    @property
+    def max_lag(self) -> int:
+        """Largest delivery lag carried by a real (non-pad) event."""
+        if not self.n_events:
+            return 0
+        return int(self.delays[: self.n_events].max())
 
     def participating(self) -> np.ndarray:
         """[N] bool: agents touched by any event (as dst or src) — the rows a
@@ -86,25 +106,39 @@ def window_from_events(
     e_max: int,
     index: int = 0,
     rule: str = "conserve",
+    delays: Sequence[int] | None = None,
 ) -> EventWindow:
     """Build one ``EventWindow`` from a list of fired ``(dst, src)`` edges.
 
     Events must be edges of the base support (``W_base[dst, src] > 0``,
-    ``dst != src``); duplicates within a window collapse to one merge.
+    ``dst != src``); duplicates within a window collapse to one merge (the
+    FIRST occurrence wins, including its delay — callers wanting a different
+    collapse rule, e.g. ``DelayedClock``'s most-recent-firing, dedup before
+    calling).  ``delays`` (parallel to ``events``) records each delivery's
+    lag in windows; ``None`` means instant delivery (all zeros).
     """
     Wb = np.asarray(W_base, np.float64)
     n = Wb.shape[0]
+    lag_of = list(delays) if delays is not None else [0] * len(events)
+    if len(lag_of) != len(events):
+        raise ValueError(
+            f"{len(lag_of)} delays for {len(events)} events — must be parallel"
+        )
     uniq: list[tuple[int, int]] = []
+    uniq_lags: list[int] = []
     seen = set()
-    for i, j in events:
-        i, j = int(i), int(j)
+    for (i, j), lag in zip(events, lag_of):
+        i, j, lag = int(i), int(j), int(lag)
         if i == j:
             raise ValueError(f"self-event ({i}, {j}): self-loops are implicit")
         if Wb[i, j] <= 0:
             raise ValueError(f"event ({i}, {j}) is not an edge of the base graph")
+        if lag < 0:
+            raise ValueError(f"event ({i}, {j}) has negative delivery lag {lag}")
         if (i, j) not in seen:
             seen.add((i, j))
             uniq.append((i, j))
+            uniq_lags.append(lag)
     if len(uniq) > e_max:
         raise ValueError(f"{len(uniq)} events exceed the clock's e_max={e_max}")
     if rule not in ("conserve", "table"):
@@ -134,12 +168,14 @@ def window_from_events(
 
     edges = np.zeros((max(e_max, 1), 2), np.int32)
     weights = np.zeros((max(e_max, 1),), np.float32)
+    lags = np.zeros((max(e_max, 1),), np.int32)
     for k, (i, j) in enumerate(uniq):
         edges[k] = (i, j)
         weights[k] = Wb[i, j]
+        lags[k] = uniq_lags[k]
     return EventWindow(
         index=index, edges=edges, weights=weights, active=active,
-        w_eff=w_eff, n_events=len(uniq),
+        w_eff=w_eff, n_events=len(uniq), delays=lags,
     )
 
 
@@ -179,10 +215,22 @@ class GossipClock:
     # -- shared machinery ----------------------------------------------------
 
     def window(self, r: int) -> EventWindow:
-        rng = np.random.default_rng([self.seed, int(r)])
+        # one-slot memo: the Session builds window r for its W-tilde and the
+        # engine's delayed/sharded paths immediately ask for the same window
+        # again — don't pay the (DelayedClock: K+1 inner scans) construction
+        # twice per round
+        cached = getattr(self, "_last_window", None)
+        if cached is not None and cached[0] == int(r):
+            return cached[1]
+        win = self._build_window(int(r))
+        self._last_window = (int(r), win)
+        return win
+
+    def _build_window(self, r: int) -> EventWindow:
+        rng = np.random.default_rng([self.seed, r])
         return window_from_events(
-            self.W_base, self._events(int(r), rng), self.e_max,
-            index=int(r), rule=self.rule,
+            self.W_base, self._events(r, rng), self.e_max,
+            index=r, rule=self.rule,
         )
 
     def windows(self, n: int) -> list[EventWindow]:
@@ -300,6 +348,7 @@ class FailureInjectedClock(GossipClock):
     def __init__(self, inner: GossipClock, drop_rate: float, seed: int = 0):
         if not 0.0 <= drop_rate < 1.0:
             raise ValueError("drop_rate must be in [0, 1)")
+        _reject_wrapped_delay(inner, "failure_injected")
         super().__init__(inner.W_base, seed)
         self.inner = inner
         self.drop_rate = float(drop_rate)
@@ -315,6 +364,191 @@ class FailureInjectedClock(GossipClock):
         drop_rng = np.random.default_rng([self.seed, 0xFA11ED, r])
         keep = drop_rng.random(len(events)) >= self.drop_rate
         return [e for e, k in zip(events, keep) if k]
+
+    def union_support(self) -> np.ndarray:
+        return self.inner.union_support()
+
+
+def _reject_wrapped_delay(inner: GossipClock, outer_kind: str) -> None:
+    """Delivery latency must be the OUTERMOST wrapper: every wrapper reaches
+    its inner clock through ``_events``, which carries only the delivered
+    edges — a ``DelayedClock`` buried inside another wrapper would have its
+    lags silently stripped (the engine sees no ``max_delay`` on the outer
+    clock and runs the instant path on time-shifted events: neither model).
+    Reject the composition loudly instead."""
+    if getattr(inner, "max_delay", 0) > 0:
+        raise ValueError(
+            f"a delayed clock cannot be wrapped inside {outer_kind!r}: the "
+            "wrapper would silently drop its delivery lags.  Make 'delayed' "
+            "the OUTERMOST wrapper (e.g. delayed(failure_injected(poisson)))"
+        )
+
+
+# salt word for the delivery-latency stream — like FailureInjectedClock's
+# 0xFA11ED drop salt, it keeps the delay draws independent of the inner
+# clock's firing draws even when both use the same (default) seed
+DELAY_SALT = 0xDE1A7
+
+
+class DelayedClock(GossipClock):
+    """Wrap any clock with per-event DELIVERY LATENCY: an edge fired at
+    window r is delivered (merged) at window ``r + d``, with d drawn from the
+    latency model.  The delivered merge uses the SRC POSTERIOR AS OF FIRE
+    TIME — src's post-local-step, pre-merge posterior of window r — which the
+    engine reads from a bounded ``[K, N, P]`` history ring buffer
+    (K = ``max_delay + 1`` slots).  This is the staleness regime the async
+    analyses (BayGo arXiv:2011.04345; Lalitha et al. arXiv:1901.11173)
+    bound: consensus mixes k-window-old information.
+
+    latency models (checkpoint-embeddable plain dicts):
+
+    * ``{"kind": "constant", "delay": k}`` — every message takes exactly k
+      windows; k=0 reduces BITWISE to the inner clock (and the engine to the
+      instant-delivery path).
+    * ``{"kind": "geometric", "p": q, "max": k}`` — i.i.d. truncated
+      geometric per event (support 0..k): memoryless per-hop retransmission.
+    * ``{"kind": "per_edge", "delays": [[...]]}`` — an [N, N] int matrix of
+      constant per-directed-edge lags (heterogeneous interconnect: slow WAN
+      links next to fast local ones).
+
+    Delay draws come from the salted stream ``[seed, DELAY_SALT, r_fire]``
+    so they are deterministic per (seed, fire window) and independent of the
+    inner clock's firing draws.  If one edge's firings from several windows
+    pile up into the same delivery window, the MOST RECENT firing wins (one
+    merge per in-edge per window keeps W-tilde row-feasible).  The
+    activation UNION is the inner clock's — every fired edge still delivers
+    within ``max_delay`` windows — so Assumption-1 validation delegates.
+    Must be the OUTERMOST wrapper (``delayed(failure_injected(...))``, never
+    the reverse): wrappers reach their inner clock through ``_events``,
+    which strips lags — the inverted composition is rejected eagerly.
+    """
+
+    def __init__(self, inner: GossipClock, latency: dict, seed: int = 0):
+        _reject_wrapped_delay(inner, "delayed")  # lags do not compose
+        super().__init__(inner.W_base, seed)
+        self.inner = inner
+        self.rule = inner.rule
+        if not isinstance(latency, dict) or "kind" not in latency:
+            raise ValueError("latency must be a dict with a 'kind' key")
+        self.latency = dict(latency)
+        kind = self.latency["kind"]
+        if kind == "constant":
+            self.max_delay = int(self.latency.get("delay", 1))
+            if self.max_delay < 0:
+                raise ValueError("constant latency delay must be >= 0")
+        elif kind == "geometric":
+            p = float(self.latency.get("p", 0.5))
+            if not 0.0 < p <= 1.0:
+                raise ValueError("geometric latency p must be in (0, 1]")
+            self.max_delay = int(self.latency.get("max", 4))
+            if self.max_delay < 0:
+                raise ValueError("geometric latency max must be >= 0")
+        elif kind == "per_edge":
+            mat = np.asarray(self.latency.get("delays"), np.int64)
+            if mat.shape != self.W_base.shape:
+                raise ValueError(
+                    f"per_edge latency matrix shape {mat.shape} != base W "
+                    f"shape {self.W_base.shape}"
+                )
+            if (mat < 0).any():
+                raise ValueError("per_edge latency delays must be >= 0")
+            self._delay_matrix = mat
+            support = (self.W_base > 0) & ~np.eye(self.n_agents, dtype=bool)
+            self.max_delay = int(mat[support].max()) if support.any() else 0
+        else:
+            raise ValueError(
+                f"unknown latency kind {kind!r}; known: "
+                "constant | geometric | per_edge"
+            )
+        # deliveries dedup to one merge per directed edge per window, so the
+        # base-graph edge count bounds every window regardless of pile-up
+        # (GossipClock.__init__ already set e_max to exactly that)
+
+        # A lag-MIXING latency (geometric, or per_edge with unequal lags
+        # WITHIN one row's in-edges) can re-combine individually-feasible
+        # fire windows into one delivery window; under rule="table" the
+        # combined in-weights could reach >= 1 and crash mid-run AFTER
+        # eager validation.  Check the worst case (a row's whole in-edge
+        # support delivered together) eagerly, per row.  Constant/uniform
+        # latency never mixes lags — deliveries are exactly one
+        # (already-validated) inner window — so it needs no check, and
+        # rule="conserve" rows are feasible under ANY subset (in-weights
+        # sum to 1 - W[i,i] < 1 by row-stochasticity).
+        if self.rule == "table":
+            off_diag = self.W_base * (1.0 - np.eye(self.n_agents))
+            worst = off_diag.sum(axis=1)
+            bad = np.nonzero(self._row_mixes_lags() & (worst >= 1.0))[0]
+            if bad.size:
+                raise ValueError(
+                    f"delaying this weight-table trace with a lag-mixing "
+                    f"latency ({kind!r}) can co-deliver row "
+                    f"{int(bad[0])}'s in-edges (combined weight "
+                    f"{worst[bad[0]]:.6f} >= 1); use a constant delay, or "
+                    "a table whose rows stay feasible under simultaneous "
+                    "delivery"
+                )
+
+    def _row_mixes_lags(self) -> np.ndarray:
+        """[N] bool: rows whose deliveries within one window can come from
+        DIFFERENT fire windows (the re-combination hazard the table-rule
+        eager check guards against).  Per row: a row whose own in-edges all
+        share one lag only ever receives one shifted fire window, no matter
+        what lags the rest of the graph carries."""
+        kind = self.latency["kind"]
+        n = self.n_agents
+        if kind == "geometric":
+            return np.full((n,), self.max_delay > 0)
+        if kind == "constant":
+            return np.zeros((n,), bool)
+        support = (self.W_base > 0) & ~np.eye(n, dtype=bool)
+        out = np.zeros((n,), bool)
+        for i in range(n):
+            lags = self._delay_matrix[i, support[i]]
+            out[i] = lags.size > 1 and int(lags.min()) != int(lags.max())
+        return out
+
+    def _fire_delays(self, r_fire: int, events: list) -> np.ndarray:
+        """Per-event delivery lag for the firings of window ``r_fire``."""
+        kind = self.latency["kind"]
+        if kind == "constant":
+            return np.full((len(events),), self.max_delay, np.int64)
+        if kind == "per_edge":
+            return np.asarray(
+                [self._delay_matrix[i, j] for i, j in events], np.int64
+            )
+        rng = np.random.default_rng([self.seed, DELAY_SALT, r_fire])
+        p = float(self.latency.get("p", 0.5))
+        return np.minimum(
+            rng.geometric(p, size=len(events)) - 1, self.max_delay
+        )
+
+    def _events(self, r, rng):
+        del rng
+        return [e for e, _ in self._deliveries(int(r))]
+
+    def _deliveries(self, r: int) -> list[tuple[tuple[int, int], int]]:
+        """[(edge, lag)] delivered at window r, most-recent firing per edge."""
+        latest: dict[tuple[int, int], int] = {}
+        for r_fire in range(max(0, r - self.max_delay), r + 1):
+            fired = self.inner._events(
+                r_fire, np.random.default_rng([self.inner.seed, r_fire])
+            )
+            lags = self._fire_delays(r_fire, fired)
+            for e, d in zip(fired, lags):
+                if r_fire + int(d) == r:
+                    latest[(int(e[0]), int(e[1]))] = r - r_fire
+        return [(e, lag) for e, lag in latest.items()]
+
+    def _build_window(self, r: int) -> EventWindow:
+        deliveries = self._deliveries(r)
+        return window_from_events(
+            self.W_base,
+            [e for e, _ in deliveries],
+            self.e_max,
+            index=r,
+            rule=self.rule,
+            delays=[lag for _, lag in deliveries],
+        )
 
     def union_support(self) -> np.ndarray:
         return self.inner.union_support()
@@ -379,6 +613,9 @@ def build_clock(doc: dict, W_base: np.ndarray) -> GossipClock:
       ``round_robin``       edges_per_window, seed
       ``trace``             trace=[[[dst, src], ...], ...], rule, seed
       ``failure_injected``  inner=<clock doc>, drop_rate, seed
+      ``delayed``           inner=<clock doc>, latency=<latency doc>, seed
+                            (latency: constant | geometric | per_edge —
+                            see ``DelayedClock``)
     """
     if not isinstance(doc, dict) or "kind" not in doc:
         raise ValueError("clock must be a dict with a 'kind' key")
@@ -413,7 +650,15 @@ def build_clock(doc: dict, W_base: np.ndarray) -> GossipClock:
             drop_rate=doc.get("drop_rate", 0.1),
             seed=doc.get("seed", 0),
         )
+    if kind == "delayed":
+        if "inner" not in doc:
+            raise ValueError("clock kind='delayed' requires 'inner'")
+        return DelayedClock(
+            build_clock(doc["inner"], W_base),
+            latency=doc.get("latency", {"kind": "constant", "delay": 1}),
+            seed=doc.get("seed", 0),
+        )
     raise ValueError(
         f"unknown clock kind {kind!r}; known: "
-        "poisson | round_robin | trace | failure_injected"
+        "poisson | round_robin | trace | failure_injected | delayed"
     )

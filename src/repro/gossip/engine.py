@@ -12,6 +12,29 @@ untouched.  The activity mask is recovered from W-tilde itself: an agent
 is active iff its row is not ``e_i`` (``diag(W) < 1``), which the clock
 construction guarantees exactly.
 
+Three window EXECUTIONS, all the same eq.-(6) math (the equivalence
+ladder pinned by tests/test_gossip.py — synchronous == instant gossip ==
+sharded gossip, bitwise):
+
+* dense masked (default, ``InferenceSpec.consensus_impl="auto"|"masked"``)
+  — the whole window inside one jitted call;
+* sharded ppermute (``consensus_impl="ppermute"``) — the flat [N, P]
+  buffers are block-sharded over the local devices on an ``("agents",)``
+  mesh and each window executes as one ``shard_map`` that ppermutes only
+  the window's fired shard offsets
+  (``launch.consensus_opt.consensus_ppermute_window``; the static
+  per-window permutation schedule derives from ``EventWindow.edges``, so
+  the local phase still traces once and each distinct window support
+  compiles one cached consensus program);
+* delivery latency (a ``DelayedClock`` in the spec) — events merge the SRC
+  POSTERIOR AS OF FIRE TIME from a bounded ``[K, N, P]`` posterior history
+  ring buffer carried in ``GossipState`` (K = max_delay + 1; slot
+  ``r mod K`` holds window r's post-local-step, pre-merge posterior, so a
+  lag-0 event reads the current value and latency 0 reduces BITWISE to the
+  instant-delivery engine).  The consensus is the event-gather
+  ``core.flat.consensus_flat_delayed``; the window's static [E_max] event
+  arrays ride as traced arguments, so the whole run still traces once.
+
 Two local-step policies (``TopologySpec.clock["local_policy"]``):
 
 * ``"all"`` (default) — every agent trains locally every window and only
@@ -44,6 +67,7 @@ import numpy as np
 
 from repro.core.flat import (
     FlatPosterior,
+    consensus_flat_delayed,
     consensus_flat_masked,
     make_flat_nll,
 )
@@ -56,7 +80,13 @@ PyTree = Any
 @dataclasses.dataclass
 class GossipState:
     """Network state + per-agent gossip telemetry (all leaves agent-leading,
-    checkpointed leaf-wise like every engine state)."""
+    checkpointed leaf-wise like every engine state).
+
+    ``hist_mean`` / ``hist_rho`` are the delivery-latency history ring
+    buffers ([K, N, P]; slot ``r mod K`` = window r's post-local-step,
+    pre-merge posterior).  Instant-delivery clocks carry ``None`` — an
+    EMPTY pytree subtree, so their state flattens to exactly the pre-
+    latency leaf structure and old gossip checkpoints keep loading."""
 
     posterior: FlatPosterior
     opt_state: Any
@@ -64,6 +94,8 @@ class GossipState:
     round: jax.Array  # scalar int32 window counter
     last_merge: jax.Array  # [N] int32 window index of last merge (-1 = never)
     n_merges: jax.Array  # [N] int32 total merges per agent
+    hist_mean: Any  # [K, N, P] stale-posterior ring buffer; None if instant
+    hist_rho: Any  # [K, N, P] or None
 
 
 def _agent_select(active: jax.Array, new: PyTree, old: PyTree) -> PyTree:
@@ -76,18 +108,27 @@ def _agent_select(active: jax.Array, new: PyTree, old: PyTree) -> PyTree:
     return jax.tree.map(sel, new, old)
 
 
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    for s in range(min(n, cap), 0, -1):
+        if n % s == 0:
+            return s
+    return 1
+
+
 class GossipEngine:
     """Event-driven gossip runtime behind the Engine protocol.
 
     The per-window transition is traced ONCE (all windows share static
-    shapes: [E_max] edge capacity -> fixed [N, N] W-tilde + [N] mask);
-    ``n_traces`` counts retraces so tests can pin the one-jitted-call-per-
-    window contract.
+    shapes: [E_max] edge capacity -> fixed [N, N] W-tilde + [N] mask + the
+    delayed path's [E_max] event arrays); ``n_traces`` counts retraces so
+    tests can pin the one-jitted-call-per-window contract.  (The sharded
+    ppermute consensus additionally compiles one cached program per
+    distinct window support — see ``consensus_ppermute_window``.)
     """
 
     name = "gossip"
     # wake-on-event windows report NaN losses for sleeping agents;
-    # Session.round aggregates with nanmean for engines that set this
+    # Session.round aggregates NaN-safely for engines that set this
     loss_nan_is_sentinel = True
 
     def __init__(self, spec, model, n_agents: int):
@@ -107,14 +148,55 @@ class GossipEngine:
                 f"unknown gossip local_policy {self.local_policy!r}; "
                 "known: all | active"
             )
+        self.clock = spec.topology.gossip_clock()
+        self.max_delay = int(getattr(self.clock, "max_delay", 0))
+        self.hist_slots = self.max_delay + 1 if self.max_delay > 0 else 0
+        if self.max_delay > 0 and self.consensus_mode == "mean_only":
+            raise ValueError(
+                "delivery-latency gossip implements gaussian/none consensus; "
+                "mean_only (the FedAvg baseline) runs on instant delivery"
+            )
+        impl = inf.consensus_impl
+        self.consensus_impl = "masked" if impl == "auto" else impl
+        self._mesh = None
+        if self.consensus_impl == "ppermute":
+            if self.max_delay > 0:
+                raise ValueError(
+                    "consensus_impl='ppermute' implements instant delivery; "
+                    "a DelayedClock runs the history-gather path (drop the "
+                    "latency wrapper or use consensus_impl='masked')"
+                )
+            devices = jax.devices()
+            shards = inf.consensus_shards
+            if shards is None:
+                shards = _largest_divisor_leq(n_agents, len(devices))
+            if shards > len(devices):
+                raise ValueError(
+                    f"consensus_shards={shards} exceeds the {len(devices)} "
+                    "local devices"
+                )
+            if n_agents % shards:
+                raise ValueError(
+                    f"consensus_shards={shards} must divide "
+                    f"n_agents={n_agents}"
+                )
+            self.n_shards = shards
+            self._mesh = jax.sharding.Mesh(
+                np.asarray(devices[:shards]), ("agents",)
+            )
         lr_schedule = build_schedule(inf.lr, inf.lr_decay)
         nll_fn = model.nll_fn
         n_mc, kl_scale = inf.n_mc_samples, inf.kl_scale
         opt = self.opt
         policy, consensus_mode = self.local_policy, self.consensus_mode
+        hist_slots = self.hist_slots
+        merge_in_jit = self.consensus_impl != "ppermute"
         self.n_traces = 0
 
-        def window_fn(state: GossipState, batches, W, key):
+        def local_phase(state: GossipState, batches, W, key):
+            """Shared pre-consensus window phase: per-agent local VI steps +
+            the wake-on-event policy select + staleness bookkeeping inputs.
+            Identical (bitwise) across all three window executions."""
             self.n_traces += 1  # trace-time side effect: retrace telemetry
             nll = make_flat_nll(nll_fn, state.posterior.layout)
             # clock contract: inactive rows of W-tilde are EXACTLY e_i
@@ -133,14 +215,32 @@ class GossipEngine:
                 # wake-on-event: sleeping agents' local state passes through,
                 # and their (discarded) phantom losses must not pollute the
                 # loss telemetry — NaN marks "did not train this window"
-                # (Session.round aggregates with nanmean)
+                # (Session.round aggregates NaN-safely and reports n_trained)
                 post = _agent_select(active, post, state.posterior)
                 opt_state = _agent_select(active, opt_state, state.opt_state)
                 step = jnp.where(active, state.step + u, state.step)
                 losses = jnp.where(active, losses, jnp.nan)
             else:
                 step = state.step + u
-            if consensus_mode == "gaussian":
+            return post, opt_state, step, active, losses
+
+        def finish(state, post, opt_state, step, active):
+            merged = active if consensus_mode != "none" else jnp.zeros_like(active)
+            return dataclasses.replace(
+                state,
+                posterior=post,
+                opt_state=opt_state,
+                step=step,
+                round=state.round + 1,
+                last_merge=jnp.where(merged, state.round, state.last_merge),
+                n_merges=state.n_merges + merged.astype(jnp.int32),
+            )
+
+        def window_fn(state: GossipState, batches, W, key):
+            post, opt_state, step, active, losses = local_phase(
+                state, batches, W, key
+            )
+            if consensus_mode == "gaussian" and merge_in_jit:
                 post = consensus_flat_masked(post, W, active)
             elif consensus_mode == "mean_only":
                 act = active[:, None]
@@ -149,18 +249,36 @@ class GossipEngine:
                     mean=jnp.where(act, W @ post.mean, post.mean),
                     rho=jnp.where(act, W @ post.rho, post.rho),
                 )
-            merged = active if consensus_mode != "none" else jnp.zeros_like(active)
-            new_state = GossipState(
-                posterior=post,
-                opt_state=opt_state,
-                step=step,
-                round=state.round + 1,
-                last_merge=jnp.where(merged, state.round, state.last_merge),
-                n_merges=state.n_merges + merged.astype(jnp.int32),
-            )
-            return new_state, losses
+            return finish(state, post, opt_state, step, active), losses
 
-        self._window = jax.jit(window_fn) if spec.run.jit else window_fn
+        def window_fn_delayed(
+            state: GossipState, batches, W, key, edges, weights, lags
+        ):
+            post, opt_state, step, active, losses = local_phase(
+                state, batches, W, key
+            )
+            # record this window's post-local, PRE-merge posterior in its
+            # ring slot FIRST: a lag-0 event then gathers the current value,
+            # which is exactly what instant delivery merges
+            slot = jnp.mod(state.round, hist_slots)
+            hist_mean = jax.lax.dynamic_update_index_in_dim(
+                state.hist_mean, post.mean, slot, 0
+            )
+            hist_rho = jax.lax.dynamic_update_index_in_dim(
+                state.hist_rho, post.rho, slot, 0
+            )
+            if consensus_mode == "gaussian":
+                post = consensus_flat_delayed(
+                    post, W, active, edges, weights, lags,
+                    hist_mean, hist_rho, state.round,
+                )
+            new_state = finish(state, post, opt_state, step, active)
+            return dataclasses.replace(
+                new_state, hist_mean=hist_mean, hist_rho=hist_rho
+            ), losses
+
+        fn = window_fn_delayed if self.hist_slots else window_fn
+        self._window = jax.jit(fn) if spec.run.jit else fn
 
     # -- Engine protocol -----------------------------------------------------
 
@@ -174,6 +292,7 @@ class GossipEngine:
             shared_init=self.shared_init,
             flat=True,
         )
+        hist_shape = (self.hist_slots,) + tuple(ns.posterior.mean.shape)
         return GossipState(
             posterior=ns.posterior,
             opt_state=ns.opt_state,
@@ -181,10 +300,54 @@ class GossipEngine:
             round=ns.round,
             last_merge=jnp.full((self.n_agents,), -1, jnp.int32),
             n_merges=jnp.zeros((self.n_agents,), jnp.int32),
+            # zero-init is safe — never read before their window is written
+            # (window r only gathers slots of windows >= max(0, r -
+            # max_delay)); None (empty subtree) when there is no latency so
+            # the leaf structure matches pre-latency gossip checkpoints
+            hist_mean=(jnp.zeros(hist_shape, ns.posterior.mean.dtype)
+                       if self.hist_slots else None),
+            hist_rho=(jnp.zeros(hist_shape, ns.posterior.rho.dtype)
+                      if self.hist_slots else None),
         )
 
+    def _window_for(self, state, W):
+        """The engine-side EventWindow for this round — the delayed and
+        sharded paths need the static event/edge structure, which the
+        Session's W-tilde alone does not carry.  Regenerated from the spec
+        clock (windows are pure functions of (seed, round), so this matches
+        the Session's stream bitwise — verified here), which also means
+        per-round ``W`` overrides cannot be used with these paths."""
+        r = int(state.round)
+        win = self.clock.window(r)
+        if not np.array_equal(
+            np.asarray(W, np.float32), win.w_eff.astype(np.float32)
+        ):
+            raise ValueError(
+                "delayed/sharded gossip windows come from the spec clock; "
+                f"the W passed for window {r} does not match its stream "
+                "(per-round w_schedule overrides are unsupported on these "
+                "paths)"
+            )
+        return win
+
     def run_round(self, state, batches, W, key):
-        return self._window(state, batches, jnp.asarray(W), key)
+        W = jnp.asarray(W)
+        if self.hist_slots:
+            win = self._window_for(state, W)
+            return self._window(
+                state, batches, W, key,
+                jnp.asarray(win.edges), jnp.asarray(win.weights),
+                jnp.asarray(win.delays),
+            )
+        if self.consensus_impl == "ppermute" and self.consensus_mode == "gaussian":
+            win = self._window_for(state, W)
+            state, losses = self._window(state, batches, W, key)
+            post = consensus_flat_masked(
+                state.posterior, W, jnp.asarray(win.active),
+                mode="ppermute", mesh=self._mesh, axis="agents", window=win,
+            )
+            return dataclasses.replace(state, posterior=post), losses
+        return self._window(state, batches, W, key)
 
     def posterior(self, state) -> FlatPosterior:
         return state.posterior
@@ -201,10 +364,11 @@ class GossipEngine:
 
     def telemetry(self, state) -> dict:
         """Merged into ``Session.evaluate`` output: staleness percentiles +
-        merge counts over the run so far."""
+        merge counts over the run so far (plus the delivery-latency depth
+        and shard count when those paths are active)."""
         age = self.staleness(state)
         merges = np.asarray(state.n_merges)
-        return {
+        out = {
             "staleness": {
                 "p50": float(np.percentile(age, 50)),
                 "p90": float(np.percentile(age, 90)),
@@ -218,3 +382,8 @@ class GossipEngine:
             },
             "windows": int(state.round),
         }
+        if self.max_delay:
+            out["max_delay"] = self.max_delay
+        if self._mesh is not None:
+            out["consensus_shards"] = self.n_shards
+        return out

@@ -11,8 +11,17 @@ bytes) on every consensus.  Two optimizations:
    (bitwise same math, different schedule).
 2. ``dtype`` compression — exchange (prec, prec*mu) in bf16: halves the
    wire bytes; approximate (documented, validated to ~1e-2 relative).
+3. ``consensus_ppermute_window`` — the SHARDED GOSSIP WINDOW (ROADMAP
+   "Gossip scale-out"): one ``shard_map`` over the flat [N, P] buffers,
+   sharded on the agent axis, that executes one ``gossip.clocks
+   .EventWindow`` by ppermuting ONLY the shard offsets its fired edges
+   cross.  Wire bytes scale with the window's active cross-shard offsets
+   (idle windows move zero bytes) instead of the dense all-gather's
+   N x params.  BIT-IDENTICAL to ``core.flat.consensus_flat_masked`` —
+   the equivalence ladder synchronous == instant gossip == sharded gossip
+   is enforced by tests/test_gossip.py.
 
-Both preserve the fixed point structure of eq. (6): weights stay
+All preserve the fixed point structure of eq. (6): weights stay
 row-stochastic, output precision remains a convex combination.
 """
 from __future__ import annotations
@@ -24,7 +33,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.flat import FlatPosterior
+from repro.core.flat import XLA_BLOCK, _MAX_UNROLL, FlatPosterior
 from repro.core.posterior import GaussianPosterior, softplus, softplus_inv
 
 try:  # jax >= 0.5 exports shard_map at the top level
@@ -211,6 +220,155 @@ def consensus_ppermute_pod(
         mean=jax.tree.unflatten(treedef, [m for m, _ in outs]),
         rho=jax.tree.unflatten(treedef, [r for _, r in outs]),
     )
+
+
+# ---------------------------------------------------------------------------
+# sharded gossip event windows (ROADMAP "Gossip scale-out")
+# ---------------------------------------------------------------------------
+
+
+def window_shard_offsets(window, n_shards: int) -> tuple[int, ...]:
+    """The static permutation schedule of one event window: the sorted set
+    of nonzero shard offsets ``(dst_shard - src_shard) mod n_shards`` crossed
+    by the window's fired edges (agents are block-sharded: agent a lives on
+    shard ``a // (N // n_shards)``).  One ``lax.ppermute`` rotation per
+    offset moves every cross-shard message of that offset at once;
+    intra-shard edges (offset 0) need no communication at all.  Derived
+    host-side from ``EventWindow.edges`` — the schedule is a pure function
+    of the window, so distinct window supports compile distinct (cached)
+    programs while repeated supports reuse them."""
+    per = window.n_agents // n_shards
+    ev = window.edges[: window.n_events]
+    return tuple(sorted(
+        {(int(d) // per - int(s) // per) % n_shards for d, s in ev} - {0}
+    ))
+
+
+@functools.lru_cache(maxsize=None)
+def _window_consensus_fn(mesh, axis, offsets, n, per, p, block):
+    """Build + cache the jitted shard_map program for one (mesh, schedule,
+    shape) signature.  The body mirrors ``core.flat
+    .consensus_flat_reference`` op for op (same elementwise chain, same
+    [*, N] x [N, cols] matmul contraction, same column blocking, same
+    activity select) so the sharded window is bit-identical to the masked
+    reference; only the data movement differs (buffers assembled from
+    neighbor-shard ppermutes instead of being resident)."""
+    n_shards = mesh.shape[axis]
+
+    def shard_fn(w_rows, act, mean_l, rho_l):
+        # w_rows [per, N]: this shard's rows of W-tilde; mean_l/rho_l
+        # [per, P]: this shard's agents
+        i = jax.lax.axis_index(axis)
+        prec = 1.0 / jnp.square(softplus(rho_l))
+        pm = prec * mean_l
+        # assemble the [N, P] sufficient-statistic buffers this shard's rows
+        # read: own block always (self loops + intra-shard edges), one
+        # ppermute rotation per fired cross-shard offset.  Rows of shards at
+        # un-fired offsets stay zero — their W-tilde entries are zero, so
+        # they contribute exactly 0.0 to the matmul (bit-stable).
+        buf_prec = jnp.zeros((n, prec.shape[-1]), prec.dtype)
+        buf_pm = jnp.zeros_like(buf_prec)
+        buf_prec = jax.lax.dynamic_update_slice(buf_prec, prec, (i * per, 0))
+        buf_pm = jax.lax.dynamic_update_slice(buf_pm, pm, (i * per, 0))
+        for d in offsets:
+            perm = [(s, (s + d) % n_shards) for s in range(n_shards)]
+            r_prec = jax.lax.ppermute(prec, axis, perm)
+            r_pm = jax.lax.ppermute(pm, axis, perm)
+            src0 = ((i - d) % n_shards) * per
+            buf_prec = jax.lax.dynamic_update_slice(buf_prec, r_prec, (src0, 0))
+            buf_pm = jax.lax.dynamic_update_slice(buf_pm, r_pm, (src0, 0))
+        a = (act > 0)[:, None]
+
+        def blk(s, e):
+            new_prec = jnp.matmul(
+                w_rows, buf_prec[:, s:e], preferred_element_type=jnp.float32
+            )
+            new_pm = jnp.matmul(
+                w_rows, buf_pm[:, s:e], preferred_element_type=jnp.float32
+            )
+            m_o = new_pm / new_prec
+            r_o = softplus_inv(jax.lax.rsqrt(new_prec))
+            return (
+                jnp.where(a, m_o, mean_l[:, s:e]),
+                jnp.where(a, r_o, rho_l[:, s:e]),
+            )
+
+        # identical column blocking to consensus_flat_reference (cache
+        # blocking + unroll cap) — required for large-P bit-identity
+        blk_cols = block
+        if p > blk_cols and -(-p // blk_cols) > _MAX_UNROLL:
+            blk_cols = -(-p // _MAX_UNROLL)
+        if p <= blk_cols:
+            return blk(0, p)
+        mean_out = jnp.empty_like(mean_l)
+        rho_out = jnp.empty_like(rho_l)
+        for s in range(0, p, blk_cols):
+            e = min(s + blk_cols, p)
+            m_o, r_o = blk(s, e)
+            mean_out = jax.lax.dynamic_update_slice(mean_out, m_o, (0, s))
+            rho_out = jax.lax.dynamic_update_slice(rho_out, r_o, (0, s))
+        return mean_out, rho_out
+
+    spec_np = P(axis, None)
+    return jax.jit(_shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=(spec_np, P(axis), spec_np, spec_np),
+        out_specs=(spec_np, spec_np),
+    ))
+
+
+def consensus_ppermute_window(
+    posts: FlatPosterior,
+    window,  # gossip.clocks.EventWindow
+    mesh: jax.sharding.Mesh,
+    axis: str = "agents",
+    *,
+    block: int | None = None,
+) -> FlatPosterior:
+    """Execute ONE gossip event window sharded over the agent axis.
+
+    The flat [N, P] posterior buffers are block-sharded on ``mesh``'s
+    ``axis`` (N must divide evenly); the window's static edge list is
+    lowered to a permutation schedule (``window_shard_offsets``) and the
+    whole window runs as one ``shard_map``: per fired cross-shard offset,
+    one ``ppermute`` rotation of the (prec, prec*mu) sufficient statistics,
+    then each shard reduces its own W-tilde rows locally.  Wire bytes per
+    window: ``n_offsets x 2 x N/S x P`` per shard — proportional to the
+    window's cross-shard activity, zero for an idle window — vs the dense
+    path's full all-gather (``launch.costmodel.gossip_window_roofline``).
+
+    Bit-identical to ``core.flat.consensus_flat_masked`` on the same
+    window (equivalence-ladder acceptance test in tests/test_gossip.py).
+    Instant-delivery windows only: delayed windows (``window.max_lag > 0``)
+    merge history slots and run the gather path in the engine.
+    """
+    n = window.n_agents
+    n_shards = mesh.shape[axis]
+    if n % n_shards:
+        raise ValueError(
+            f"agent axis ({n}) must divide evenly over the {n_shards}-shard "
+            f"mesh axis {axis!r}"
+        )
+    if window.max_lag > 0:
+        raise ValueError(
+            "consensus_ppermute_window implements instant delivery; delayed "
+            "windows (max_lag > 0) run the history-gather path "
+            "(core.flat.consensus_flat_delayed)"
+        )
+    per = n // n_shards
+    p = posts.mean.shape[-1]
+    fn = _window_consensus_fn(
+        mesh, axis, window_shard_offsets(window, n_shards), n, per, p,
+        XLA_BLOCK if block is None else block,
+    )
+    mean, rho = fn(
+        jnp.asarray(window.w_eff, jnp.float32),
+        jnp.asarray(window.active),
+        posts.mean,
+        posts.rho,
+    )
+    return dataclasses.replace(posts, mean=mean, rho=rho)
 
 
 def ring_weights(n: int, self_weight: float = 1.0 / 3.0) -> tuple[float, float, float]:

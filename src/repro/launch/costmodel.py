@@ -96,6 +96,11 @@ def gossip_window_roofline(
     n_participating: int,
     n_merging: int | None = None,
     bytes_per_el: int = 4,
+    *,
+    n_shards: int = 1,
+    n_cross_offsets: int = 0,
+    delay_depth: int = 0,
+    n_stale_events: int = 0,
 ) -> dict[str, Any]:
     """Analytic HBM traffic of ONE gossip event window (repro.gossip), for
     the active-edge masked consensus (``consensus_fused_masked_sparse``).
@@ -114,6 +119,25 @@ def gossip_window_roofline(
     ``EventWindow`` (``window.participating().sum()`` /
     ``window.active.sum()``); ``n_merging`` defaults to
     ``n_participating``.
+
+    INTERCONNECT term (``n_shards > 1`` — the sharded
+    ``consensus_ppermute_window`` execution): each of the window's
+    ``n_cross_offsets`` fired shard offsets
+    (``launch.consensus_opt.window_shard_offsets``) is one ppermute
+    rotation moving every shard's [N/S, P] (prec, prec*mu) block —
+    ``2 x N x P`` bytes globally per offset — vs the dense layout's
+    all-gather of both statistics (``2 x N x P x (S-1)``).  The ppermute
+    schedule wins whenever the window crosses fewer than S-1 offsets, and
+    an idle window moves ZERO bytes.
+
+    DELIVERY-LATENCY term (``delay_depth > 0`` — a ``DelayedClock``): the
+    engine writes each window's post-local (mean, rho) into the [K, N, P]
+    history ring (one extra network write, ``2 x N x P`` bytes) and the
+    gather consensus reads one stale (mean, rho) row pair per delivered
+    event (``n_stale_events``, i.e. ``EventWindow.n_events``).  The ring
+    buffer's RESIDENT footprint is ``hist_resident_bytes`` =
+    ``2 x (delay_depth + 1) x N x P`` — the capacity planner's number, not
+    a per-window traffic term.
     """
     if n_merging is None:
         n_merging = n_participating
@@ -122,12 +146,29 @@ def gossip_window_roofline(
             "expected 0 <= n_merging <= n_participating <= n_agents, got "
             f"{n_merging} / {n_participating} / {n_agents}"
         )
+    if n_shards < 1 or not 0 <= n_cross_offsets <= max(n_shards - 1, 0):
+        raise ValueError(
+            f"expected n_shards >= 1 and 0 <= n_cross_offsets <= n_shards - 1"
+            f", got {n_shards} / {n_cross_offsets}"
+        )
+    if delay_depth < 0 or n_stale_events < 0:
+        raise ValueError("delay_depth and n_stale_events must be >= 0")
     row_bytes = n_params * bytes_per_el
     net_bytes = n_agents * row_bytes
     # read mean+rho of participants, write mean+rho of merging agents
     bytes_window = 2.0 * n_participating * row_bytes + 2.0 * n_merging * row_bytes
     bytes_dense = 4.0 * net_bytes  # consensus_roofline flat_fused
-    return {
+    # history ring: one (mean, rho) network write per window + one stale row
+    # pair read per delivered event
+    bytes_history = (
+        2.0 * net_bytes + 2.0 * n_stale_events * row_bytes
+        if delay_depth > 0 else 0.0
+    )
+    # interconnect: ppermute rotations vs the dense all-gather of both
+    # sufficient statistics over the agent axis (global bytes)
+    ici_ppermute = n_cross_offsets * 2.0 * net_bytes
+    ici_allgather = 2.0 * net_bytes * (n_shards - 1)
+    out = {
         "n_agents": n_agents,
         "n_params": n_params,
         "n_participating": n_participating,
@@ -149,6 +190,24 @@ def gossip_window_roofline(
             bytes_dense / bytes_window if bytes_window else float("inf")
         ),
     }
+    if delay_depth > 0:
+        out["delay_depth"] = delay_depth
+        out["hbm_bytes"]["history"] = bytes_history
+        out["hist_resident_bytes"] = 2.0 * (delay_depth + 1) * net_bytes
+        out["roofline_seconds"]["history"] = bytes_history / HBM_BW
+    if n_shards > 1:
+        out["n_shards"] = n_shards
+        out["n_cross_offsets"] = n_cross_offsets
+        out["ici_bytes"] = {
+            "window_ppermute": ici_ppermute,
+            "dense_allgather": ici_allgather,
+        }
+        out["roofline_seconds"]["ici_window_ppermute"] = ici_ppermute / ICI_BW
+        out["roofline_seconds"]["ici_dense_allgather"] = ici_allgather / ICI_BW
+        out["model_ici_saving_ppermute_vs_allgather"] = (
+            ici_allgather / ici_ppermute if ici_ppermute else float("inf")
+        )
+    return out
 
 
 def _layer_kind_counts(cfg) -> dict[str, int]:

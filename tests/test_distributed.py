@@ -9,8 +9,6 @@ the same numbers as the unsharded reference:
 * the bf16 ppermute consensus == f32 einsum consensus up to bf16 rounding
 * one fused train round on the mini-mesh == the same round on one device
 """
-import subprocess
-import sys
 import textwrap
 
 import pytest
@@ -25,17 +23,9 @@ mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
 
 
 def _run(body: str) -> None:
-    code = _PRELUDE + textwrap.dedent(body)
-    proc = subprocess.run(
-        [sys.executable, "-c", code],
-        capture_output=True,
-        text=True,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "JAX_PLATFORMS": "cpu",
-             "HOME": "/root"},
-        cwd="/root/repo",
-        timeout=420,
-    )
-    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    from conftest import run_multidevice_subprocess
+
+    run_multidevice_subprocess(_PRELUDE + textwrap.dedent(body))
 
 
 @pytest.mark.slow

@@ -2,10 +2,13 @@
 Assumption-1 validation, the masked active-edge consensus kernels
 (bit-identical all-active equivalence + bit-stable passthrough), the
 GossipEngine on the Engine protocol (one jitted call per window, resume,
-staleness telemetry), the time_varying_star re-expression, and the
-gossip-window roofline satellite."""
+staleness telemetry), the time_varying_star re-expression, the
+delivery-latency runtime (DelayedClock + [K, N, P] history ring), the
+sharded window consensus (consensus_ppermute_window equivalence ladder,
+8-virtual-device subprocess), and the gossip-window roofline satellite."""
 import dataclasses
 import os
+import textwrap
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +35,9 @@ from repro.core.graphs import (
     complete_w,
     time_varying_star_schedule,
 )
+from repro.core.numerics import softplus, softplus_inv
 from repro.gossip.clocks import (
+    DelayedClock,
     FailureInjectedClock,
     PoissonClock,
     RoundRobinClock,
@@ -506,6 +511,630 @@ def test_gossip_window_roofline_monotone_vs_dense():
     assert half["hbm_bytes"]["window_masked"] < dense
     with pytest.raises(ValueError, match="n_merging"):
         gossip_window_roofline(n, p, n_participating=2, n_merging=3)
+
+
+def test_gossip_window_roofline_latency_and_interconnect_terms():
+    """Satellite: the sharded/delayed extensions — ICI bytes are monotone in
+    the fired-offset count, ppermute never exceeds the dense all-gather,
+    and the history term appears exactly when delay_depth > 0 (its resident
+    footprint scaling with the ring depth)."""
+    n, p = 16, 1 << 14
+    base = gossip_window_roofline(n, p, n_participating=8)
+    assert "ici_bytes" not in base and "history" not in base["hbm_bytes"]
+
+    s = 8
+    allgather = gossip_window_roofline(
+        n, p, n_participating=8, n_shards=s, n_cross_offsets=s - 1
+    )["ici_bytes"]["dense_allgather"]
+    prev = -1.0
+    for k in range(s):
+        rec = gossip_window_roofline(
+            n, p, n_participating=8, n_shards=s, n_cross_offsets=k
+        )
+        ici = rec["ici_bytes"]["window_ppermute"]
+        assert ici >= prev  # monotone in the fired-offset schedule
+        assert ici <= allgather  # never worse than the dense layout
+        # HBM terms are untouched by the interconnect extension
+        assert rec["hbm_bytes"] == base["hbm_bytes"]
+        prev = ici
+    idle = gossip_window_roofline(
+        n, p, n_participating=0, n_shards=s, n_cross_offsets=0
+    )
+    assert idle["ici_bytes"]["window_ppermute"] == 0.0  # idle windows: no wire
+
+    d1 = gossip_window_roofline(
+        n, p, n_participating=8, delay_depth=1, n_stale_events=4
+    )
+    d3 = gossip_window_roofline(
+        n, p, n_participating=8, delay_depth=3, n_stale_events=4
+    )
+    assert d1["hbm_bytes"]["history"] == d3["hbm_bytes"]["history"] > 0
+    assert d3["hist_resident_bytes"] == 2.0 * d1["hist_resident_bytes"]
+    assert d1["hbm_bytes"]["window_masked"] == base["hbm_bytes"]["window_masked"]
+
+    with pytest.raises(ValueError, match="n_cross_offsets"):
+        gossip_window_roofline(n, p, n_participating=2, n_shards=4,
+                               n_cross_offsets=4)
+    with pytest.raises(ValueError, match=">= 0"):
+        gossip_window_roofline(n, p, n_participating=2, delay_depth=-1)
+
+
+# ---------------------------------------------------------------------------
+# delivery latency: DelayedClock + history-ring engine
+# ---------------------------------------------------------------------------
+
+
+def _delayed_clock_doc(delay, inner=None):
+    return {
+        "kind": "delayed",
+        "inner": inner or {"kind": "poisson", "rate": 0.8, "seed": 1},
+        "latency": {"kind": "constant", "delay": delay},
+    }
+
+
+def test_delayed_clock_latency_zero_matches_inner_windows():
+    """{"kind": "constant", "delay": 0} delivers every firing instantly:
+    every window's (w_eff, active, event set) equals the inner clock's and
+    all lags are 0."""
+    W = bidirectional_ring_w(6)
+    inner = PoissonClock(W, rate=0.8, seed=3)
+    c0 = DelayedClock(inner, {"kind": "constant", "delay": 0})
+    for r in range(6):
+        a, b = c0.window(r), inner.window(r)
+        np.testing.assert_array_equal(a.w_eff, b.w_eff)
+        np.testing.assert_array_equal(a.active, b.active)
+        assert a.max_lag == 0
+        assert (
+            set(map(tuple, a.edges[: a.n_events].tolist()))
+            == set(map(tuple, b.edges[: b.n_events].tolist()))
+        )
+
+
+def test_delayed_clock_constant_k_shifts_delivery():
+    """Constant latency k: window r delivers exactly the firings of window
+    r - k (each at lag k); the first k windows deliver nothing."""
+    W = bidirectional_ring_w(5)
+    inner = PoissonClock(W, rate=0.9, seed=7)
+    k = 2
+    c = DelayedClock(inner, {"kind": "constant", "delay": k})
+    assert c.max_delay == k
+    for r in range(k):
+        assert c.window(r).n_events == 0
+    for r in range(k, 7):
+        win, fired = c.window(r), inner.window(r - k)
+        assert (
+            set(map(tuple, win.edges[: win.n_events].tolist()))
+            == set(map(tuple, fired.edges[: fired.n_events].tolist()))
+        )
+        assert (win.delays[: win.n_events] == k).all()
+
+
+def test_delayed_clock_geometric_and_per_edge_models():
+    W = bidirectional_ring_w(6)
+    inner = PoissonClock(W, rate=1.2, seed=1)
+    cg = build_clock(
+        {"kind": "delayed", "inner": {"kind": "poisson", "rate": 1.2, "seed": 1},
+         "latency": {"kind": "geometric", "p": 0.4, "max": 3}, "seed": 5},
+        W,
+    )
+    lags = [cg.window(r).max_lag for r in range(12)]
+    assert max(lags) <= 3  # truncation bound
+    assert lags == [cg.window(r).max_lag for r in range(12)]  # deterministic
+    cg.validate()  # union delegates to the inner clock
+
+    mat = np.zeros((6, 6), int)
+    mat[0, 1] = 2
+    cp = DelayedClock(
+        PoissonClock(W, rate=50.0, seed=2),  # all edges fire ~every window
+        {"kind": "per_edge", "delays": mat.tolist()},
+    )
+    assert cp.max_delay == 2
+    win = cp.window(4)
+    ev = {tuple(e): int(d) for e, d in
+          zip(win.edges[: win.n_events].tolist(), win.delays[: win.n_events])}
+    assert ev[(0, 1)] == 2
+    assert all(d == 0 for e, d in ev.items() if e != (0, 1))
+
+    with pytest.raises(ValueError, match="latency"):
+        DelayedClock(inner, {"kind": "tachyonic"})
+    with pytest.raises(ValueError, match="shape"):
+        DelayedClock(inner, {"kind": "per_edge", "delays": [[0]]})
+    with pytest.raises(ValueError, match=">= 0"):
+        DelayedClock(inner, {"kind": "constant", "delay": -1})
+
+
+def _delayed_spec(clock, n=6, n_rounds=4, seed=0, **inf_kw):
+    return _gossip_spec(
+        TopologySpec.gossip("bidirectional_ring", {"n": n}, clock=clock),
+        n, n_rounds=n_rounds, seed=seed, **inf_kw,
+    )
+
+
+def test_delayed_latency_zero_reproduces_engine_bitwise():
+    """Acceptance: DelayedClock with latency 0 reproduces today's
+    GossipEngine run BITWISE from the same seed (the k=0 reduction)."""
+    inner = {"kind": "poisson", "rate": 0.8, "seed": 1}
+    s_plain = build_session(_delayed_spec(inner))
+    s_d0 = build_session(_delayed_spec(_delayed_clock_doc(0, inner)))
+    s_plain.run()
+    s_d0.run()
+    assert s_d0.engine.hist_slots == 0  # no ring buffer at depth 0
+    assert s_d0.state.hist_mean is None  # ... and no extra state leaves
+    np.testing.assert_array_equal(
+        np.asarray(s_plain.posterior().mean), np.asarray(s_d0.posterior().mean)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(s_plain.posterior().rho), np.asarray(s_d0.posterior().rho)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(s_plain.state.n_merges), np.asarray(s_d0.state.n_merges)
+    )
+    assert s_d0.engine.n_traces == 1
+
+
+def test_delayed_engine_merges_posterior_as_of_fire_time():
+    """The delivered merge uses the SRC posterior as of FIRE time, not as of
+    delivery: with lr=0 (locals are no-ops) and constant latency 1, agent
+    1's merge of the edge fired at window 1 must mix agent 0's INITIAL
+    posterior, even though agent 0 itself merged at window 1."""
+    n = 3
+    W = complete_w(n)
+    trace = [[[0, 2]], [[1, 0]], [[2, 1]]]  # union = 3-cycle: connected
+    clock = {"kind": "delayed",
+             "inner": {"kind": "trace", "trace": trace},
+             "latency": {"kind": "constant", "delay": 1}}
+    topo = TopologySpec.gossip("complete", {"n": n}, clock=clock)
+    spec = ExperimentSpec(
+        topology=topo,
+        data=_gossip_data(n),
+        # lr=0: local steps are bitwise no-ops, so posteriors change ONLY
+        # through merges; distinct inits make the stale merge observable
+        inference=InferenceSpec(hidden=8, depth=1, lr=0.0, shared_init=False),
+        run=RunSpec(n_rounds=3, seed=0),
+    )
+    s = build_session(spec)
+    post0 = s.posterior()
+    mean0 = np.asarray(post0.mean)
+    prec0 = np.asarray(1.0 / jnp.square(softplus(post0.rho)))
+    s.run()  # w0: no delivery; w1: (0,2)@lag1; w2: (1,0)@lag1
+    out = s.posterior()
+
+    # conserve-rule weights of a single fired in-edge (dst, src) on W
+    def merge(dst, src, mean_dst, prec_dst, mean_src, prec_src):
+        w_self = 1.0 - W[dst, src]
+        p = np.float32(w_self) * prec_dst + np.float32(W[dst, src]) * prec_src
+        m = (np.float32(w_self) * prec_dst * mean_dst
+             + np.float32(W[dst, src]) * prec_src * mean_src) / p
+        return m, p
+
+    # window 2: agent 1 merges agent 0 AS OF window 1 = initial (lr == 0,
+    # history holds the PRE-merge post-local value)
+    m1, p1 = merge(1, 0, mean0[1], prec0[1], mean0[0], prec0[0])
+    np.testing.assert_allclose(
+        np.asarray(out.mean)[1], m1, atol=1e-6, rtol=1e-6
+    )
+    rho1 = np.asarray(softplus_inv(jax.lax.rsqrt(jnp.asarray(p1))))
+    np.testing.assert_allclose(
+        np.asarray(out.rho)[1], rho1, atol=1e-6, rtol=1e-6
+    )
+    # counterfactual: merging agent 0 AS OF DELIVERY (its window-1-merged
+    # value) gives a DIFFERENT posterior — the staleness is real
+    m0w1, p0w1 = merge(0, 2, mean0[0], prec0[0], mean0[2], prec0[2])
+    np.testing.assert_allclose(np.asarray(out.mean)[0], m0w1, atol=1e-6,
+                               rtol=1e-6)
+    m1_fresh, _ = merge(1, 0, mean0[1], prec0[1], m0w1, p0w1)
+    assert float(np.abs(m1_fresh - m1).max()) > 1e-6
+
+
+def test_delayed_session_save_load_resume_bitwise(tmp_path):
+    """The history ring buffer rides in the checkpoint: a resumed delayed
+    session continues bit-identically (stale merges included)."""
+    clock = {"kind": "delayed",
+             "inner": {"kind": "poisson", "rate": 0.9, "seed": 2},
+             "latency": {"kind": "geometric", "p": 0.5, "max": 3}}
+    s = build_session(_delayed_spec(clock, n_rounds=6, seed=2))
+    assert s.engine.hist_slots == 4  # max_delay + 1 ring slots
+    s.run(3)
+    path = os.path.join(tmp_path, "delayed.ckpt")
+    s.save(path)
+    s2 = Session.load(path)
+    s.run(3)
+    s2.run(3)
+    np.testing.assert_array_equal(
+        np.asarray(s.posterior().mean), np.asarray(s2.posterior().mean)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(s.state.hist_mean), np.asarray(s2.state.hist_mean)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(s.state.last_merge), np.asarray(s2.state.last_merge)
+    )
+    assert s.engine.n_traces == s2.engine.n_traces == 1
+
+
+def test_instant_gossip_state_keeps_pre_latency_leaf_structure():
+    """Review regression (checkpoint back-compat): instant-delivery gossip
+    states carry ``None`` history leaves — an EMPTY pytree subtree — so
+    they flatten to exactly the pre-latency structure and gossip
+    checkpoints saved before the latency feature keep loading."""
+    s = build_session(_delayed_spec({"kind": "poisson", "rate": 0.8}))
+    st = s.state
+    assert st.hist_mean is None and st.hist_rho is None
+    n_core = (
+        len(jax.tree.leaves(st.posterior))
+        + len(jax.tree.leaves(st.opt_state))
+        + 4  # step, round, last_merge, n_merges
+    )
+    assert len(jax.tree.leaves(st)) == n_core  # no latency leaves
+    # a delayed engine's state DOES carry the two ring leaves
+    s_d = build_session(_delayed_spec(_delayed_clock_doc(1)))
+    assert len(jax.tree.leaves(s_d.state)) == n_core + 2
+
+
+def test_delayed_table_rule_lag_mixing_checked_eagerly():
+    """Review regression: a lag-MIXING latency over a weight-table trace can
+    co-deliver fire windows whose combined in-weights reach >= 1 — rejected
+    at DelayedClock construction instead of crashing mid-run; constant
+    latency (never mixes: each window is one shifted inner window) and
+    feasible tables stay accepted."""
+    table = np.array([
+        [1.0, 0.6, 0.6],
+        [0.5, 1.0, 0.0],
+        [0.5, 0.0, 1.0],
+    ])
+    trace = [[(0, 1)], [(0, 2)], [(1, 0)], [(2, 0)]]  # each window feasible
+    inner = TraceClock(table, trace, rule="table")
+    lags = np.zeros((3, 3), int)
+    lags[0, 1] = 1  # (0,1)@lag1 can land on (0,2)@lag0: 0.6 + 0.6 >= 1
+    with pytest.raises(ValueError, match="co-deliver"):
+        DelayedClock(inner, {"kind": "per_edge", "delays": lags.tolist()})
+    with pytest.raises(ValueError, match="co-deliver"):
+        DelayedClock(inner, {"kind": "geometric", "p": 0.5, "max": 2})
+    # constant latency only shifts inner windows — accepted, and runs
+    c = DelayedClock(inner, {"kind": "constant", "delay": 2})
+    for r in range(6):
+        c.window(r)
+    # the hazard is PER ROW: the heavy row's own in-edges sharing one lag
+    # can never co-deliver two fire windows, whatever the rest of the graph
+    # carries — accepted, and every window stays feasible
+    uniform_row = np.zeros((3, 3), int)
+    uniform_row[0, 1] = uniform_row[0, 2] = 1  # row 0 uniform; others lag 0
+    c_row = DelayedClock(inner, {"kind": "per_edge",
+                                 "delays": uniform_row.tolist()})
+    for r in range(8):
+        c_row.window(r)
+    # a feasible table (worst-case combined rows < 1) accepts mixing lags
+    feasible = TraceClock(
+        np.array([[1.0, 0.4, 0.4], [0.5, 1.0, 0.0], [0.5, 0.0, 1.0]]),
+        trace, rule="table",
+    )
+    DelayedClock(feasible, {"kind": "geometric", "p": 0.5, "max": 2})
+
+
+def test_delayed_clock_must_be_outermost_wrapper():
+    """Review regression: burying a DelayedClock inside another wrapper
+    would silently strip its lags (wrappers see only ``_events``) and run
+    the instant engine on time-shifted events — rejected eagerly, both
+    directly and via the doc registry."""
+    W = bidirectional_ring_w(4)
+    delayed = DelayedClock(
+        PoissonClock(W, rate=1.0), {"kind": "constant", "delay": 2}
+    )
+    with pytest.raises(ValueError, match="OUTERMOST"):
+        FailureInjectedClock(delayed, drop_rate=0.1)
+    with pytest.raises(ValueError, match="OUTERMOST"):
+        DelayedClock(delayed, {"kind": "constant", "delay": 1})
+    with pytest.raises(ValueError, match="OUTERMOST"):
+        build_clock(
+            {"kind": "failure_injected", "drop_rate": 0.1,
+             "inner": {"kind": "delayed",
+                       "inner": {"kind": "poisson", "rate": 1.0},
+                       "latency": {"kind": "constant", "delay": 2}}},
+            W,
+        )
+    # the supported order (delays outermost) still composes
+    ok = build_clock(
+        {"kind": "delayed",
+         "inner": {"kind": "failure_injected", "drop_rate": 0.1,
+                   "inner": {"kind": "poisson", "rate": 1.0}},
+         "latency": {"kind": "constant", "delay": 2}},
+        W,
+    )
+    assert ok.max_delay == 2
+    # delay 0 is not a delayed clock for composition purposes
+    zero = DelayedClock(PoissonClock(W, rate=1.0),
+                        {"kind": "constant", "delay": 0})
+    FailureInjectedClock(zero, drop_rate=0.1)
+
+
+def test_clock_window_memo_returns_identical_windows():
+    """Review regression: window(r) is memoized one round deep (Session and
+    engine both ask for the same window each round) and repeated calls stay
+    deterministic across the memo boundary."""
+    W = bidirectional_ring_w(5)
+    c = DelayedClock(PoissonClock(W, rate=0.8, seed=3),
+                     {"kind": "constant", "delay": 1})
+    w_a = c.window(4)
+    assert c.window(4) is w_a  # memo hit: no second construction
+    w_b = c.window(5)  # memo moves on ...
+    assert c.window(4) is not w_a  # ... old slot evicted
+    np.testing.assert_array_equal(c.window(4).edges, w_a.edges)
+    np.testing.assert_array_equal(c.window(4).w_eff, w_a.w_eff)
+    np.testing.assert_array_equal(c.window(5).edges, w_b.edges)
+
+
+def test_delayed_engine_rejects_w_override():
+    """Delayed windows carry static event structure the W matrix alone
+    cannot express — per-round W overrides are rejected loudly instead of
+    silently merging the wrong stream."""
+    s = build_session(_delayed_spec(_delayed_clock_doc(1)))
+    with pytest.raises(ValueError, match="spec clock"):
+        s.run(w_schedule=lambda r: complete_w(6))
+
+
+# ---------------------------------------------------------------------------
+# async edge cases: zero-event windows, drop-stream independence, table rule
+# ---------------------------------------------------------------------------
+
+
+def test_zero_event_window_is_bitwise_passthrough():
+    """A zero-event window under local_policy="active" leaves posterior,
+    optimizer state and step counters bit-untouched (trace count still 1),
+    and Session.round reports the all-idle window honestly instead of
+    writing NaN into the history (n_trained=0, loss=None)."""
+    n = 4
+    all_edges = [[int(i), int(j)]
+                 for i, j in _directed_edges(bidirectional_ring_w(n))]
+    topo = TopologySpec(
+        kind="gossip",
+        params={"base": "bidirectional_ring", "base_params": {"n": n}},
+        # window 0 fires everything (union: connected), window 1 is EMPTY
+        clock={"kind": "trace", "trace": [all_edges, []],
+               "local_policy": "active"},
+    )
+    s = build_session(_gossip_spec(topo, n, n_rounds=2))
+    rec0 = s.round()
+    assert rec0["n_trained"] == n and np.isfinite(rec0["loss"])
+    post1 = s.posterior()
+    opt1 = s.state.opt_state
+    step1 = np.asarray(s.state.step)
+    rec1 = s.round()  # the all-idle window
+    assert rec1["n_trained"] == 0
+    assert rec1["loss"] is None  # NOT a silent NaN
+    np.testing.assert_array_equal(
+        np.asarray(s.posterior().mean), np.asarray(post1.mean)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(s.posterior().rho), np.asarray(post1.rho)
+    )
+    for a, b in zip(jax.tree.leaves(s.state.opt_state), jax.tree.leaves(opt1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(s.state.step), step1)
+    assert int(s.state.round) == 2  # the window still counted
+    assert s.engine.n_traces == 1  # no retrace for the empty window
+    # history aggregation over the mixed run stays NaN-free
+    losses = [r["loss"] for r in (rec0, rec1) if r["n_trained"]]
+    assert np.isfinite(np.mean(losses))
+
+
+def test_failure_drop_stream_independent_of_inner_firings():
+    """Satellite regression for the 0xFA11ED salt: the drop decisions for
+    window r are a pure function of (outer seed, r) — swapping the INNER
+    clock (different seed and rate) leaves the kept/dropped prefix pattern
+    unchanged."""
+    W = complete_w(5)
+    drop = 0.5
+
+    def keep_mask(inner, r, n_events):
+        rng = np.random.default_rng([0, 0xFA11ED, r])
+        return rng.random(n_events) >= drop
+
+    inner_a = PoissonClock(W, rate=5.0, seed=1)
+    inner_b = PoissonClock(W, rate=2.0, seed=9)
+    c_a = FailureInjectedClock(inner_a, drop_rate=drop, seed=0)
+    c_b = FailureInjectedClock(inner_b, drop_rate=drop, seed=0)
+    for r in range(6):
+        ev_a, ev_b = inner_a.window(r), inner_b.window(r)
+        mask_a = keep_mask(inner_a, r, ev_a.n_events)
+        mask_b = keep_mask(inner_b, r, ev_b.n_events)
+        # the salted stream is shared: same prefix regardless of the inner
+        m = min(ev_a.n_events, ev_b.n_events)
+        np.testing.assert_array_equal(mask_a[:m], mask_b[:m])
+        # and each clock's output is exactly its inner events + that mask
+        kept_a = [tuple(e) for e, k in
+                  zip(ev_a.edges[: ev_a.n_events].tolist(), mask_a) if k]
+        win_a = c_a.window(r)
+        assert kept_a == [tuple(e) for e in
+                          win_a.edges[: win_a.n_events].tolist()]
+        kept_b = [tuple(e) for e, k in
+                  zip(ev_b.edges[: ev_b.n_events].tolist(), mask_b) if k]
+        win_b = c_b.window(r)
+        assert kept_b == [tuple(e) for e in
+                          win_b.edges[: win_b.n_events].tolist()]
+
+
+def test_trace_clock_table_rule_row_infeasibility_errors_eagerly():
+    """A weight-table trace whose fired in-weights sum to >= 1 on some row
+    is rejected at TraceClock CONSTRUCTION (eager per-window feasibility),
+    not midway through a run."""
+    table = np.array([
+        [1.0, 0.6, 0.6],
+        [0.5, 1.0, 0.0],
+        [0.5, 0.0, 1.0],
+    ])
+    # single fired in-edge per window: feasible
+    TraceClock(table, [[(0, 1)], [(0, 2)]], rule="table")
+    # both of row 0's in-edges in ONE window: 0.6 + 0.6 >= 1
+    with pytest.raises(ValueError, match="row-feasible"):
+        TraceClock(table, [[(0, 1), (0, 2)]], rule="table")
+    # the report names the offending window row
+    with pytest.raises(ValueError, match="window row 0"):
+        TraceClock(table, [[(0, 1)], [(0, 1), (0, 2)]], rule="table")
+
+
+# ---------------------------------------------------------------------------
+# sharded window consensus: the equivalence ladder under 8 virtual devices
+# ---------------------------------------------------------------------------
+
+_SHARD_PRELUDE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+"""
+
+
+def _run_sharded(body: str) -> None:
+    from conftest import run_multidevice_subprocess
+
+    run_multidevice_subprocess(_SHARD_PRELUDE + textwrap.dedent(body))
+
+
+@pytest.mark.slow
+def test_ppermute_window_bitwise_all_clocks_and_topologies():
+    """Acceptance: consensus_ppermute_window == consensus_flat_masked
+    BIT-identically for EVERY window of poisson / round_robin / trace
+    clocks on ring, torus and time-varying-star topologies, on an
+    8-virtual-device host mesh (several shard counts per topology)."""
+    _run_sharded("""
+    from repro.core.flat import FlatLayout, FlatPosterior, consensus_flat_masked
+    from repro.core.graphs import (bidirectional_ring_w, torus_w,
+                                   time_varying_star_schedule)
+    from repro.gossip.clocks import (PoissonClock, RoundRobinClock,
+                                     TraceClock, all_edges_trace,
+                                     trace_from_schedule)
+    from repro.launch.consensus_opt import consensus_ppermute_window
+
+    def clocks_for(W, row_stochastic):
+        if row_stochastic:
+            return [PoissonClock(W, rate=0.6, seed=1),
+                    RoundRobinClock(W, edges_per_window=3),
+                    all_edges_trace(W)]
+        table, trace = W
+        return [TraceClock(table, trace, rule="table")]
+
+    ring = bidirectional_ring_w(8)
+    torus = torus_w(2, 4)
+    tvs = trace_from_schedule(time_varying_star_schedule(4, 2, a=0.5))
+    cases = [("ring", ring, True, (2, 4, 8)),
+             ("torus", torus, True, (2, 8)),
+             ("time_varying_star", tvs, False, (5,))]  # 5 agents
+
+    p = 200
+    for name, W, rs, shard_counts in cases:
+        n = (W if rs else W[0]).shape[0]
+        ks = jax.random.split(jax.random.key(n), 2)
+        layout = FlatLayout.for_pytree({"w": jnp.zeros((p,))})
+        posts = FlatPosterior(
+            mean=jax.random.normal(ks[0], (n, p)),
+            rho=jax.random.normal(ks[1], (n, p)) * 0.4 - 1.0,
+            layout=layout,
+        )
+        for clock in clocks_for(W, rs):
+            for S in shard_counts:
+                mesh = jax.sharding.Mesh(
+                    np.asarray(jax.devices()[:S]), ("agents",))
+                for r in range(4):
+                    win = clock.window(r)
+                    ref = consensus_flat_masked(
+                        posts, jnp.asarray(win.w_eff, jnp.float32),
+                        jnp.asarray(win.active), mode="xla")
+                    out = consensus_ppermute_window(posts, win, mesh, "agents")
+                    assert bool(jnp.all(out.mean == ref.mean)), (name, S, r)
+                    assert bool(jnp.all(out.rho == ref.rho)), (name, S, r)
+        print(name, "ok")
+    print("OK")
+    """)
+
+
+@pytest.mark.slow
+def test_gossip_engine_ppermute_impl_bitwise_vs_masked():
+    """Acceptance (engine level): a gossip session on
+    InferenceSpec(consensus_impl="ppermute") over the 8-device agent mesh
+    produces the BIT-identical posterior trajectory to the default dense
+    masked execution — instant gossip and sharded gossip are the same
+    point on the equivalence ladder."""
+    _run_sharded("""
+    import dataclasses
+    from repro.api import (DataSpec, ExperimentSpec, InferenceSpec, RunSpec,
+                           TopologySpec, build_session)
+
+    n = 8
+    def spec(impl):
+        return ExperimentSpec(
+            topology=TopologySpec.gossip(
+                "bidirectional_ring", {"n": n},
+                clock={"kind": "poisson", "rate": 0.7, "seed": 3}),
+            data=DataSpec(
+                dataset_params=dict(n_classes=3, dim=8, n_train_per_class=30),
+                partition="iid", partition_params=dict(n_agents=n),
+                batch_size=4, local_updates=2),
+            inference=InferenceSpec(hidden=8, depth=1, lr=1e-2,
+                                    consensus_impl=impl),
+            run=RunSpec(n_rounds=3, seed=0),
+        )
+
+    s_m = build_session(spec("masked"))
+    s_p = build_session(spec("ppermute"))
+    s_m.run(); s_p.run()
+    assert s_p.engine.n_shards == 8
+    assert s_p.engine.n_traces == 1  # local phase still traces once
+    np.testing.assert_array_equal(np.asarray(s_m.posterior().mean),
+                                  np.asarray(s_p.posterior().mean))
+    np.testing.assert_array_equal(np.asarray(s_m.posterior().rho),
+                                  np.asarray(s_p.posterior().rho))
+    assert s_p.evaluate()["consensus_shards"] == 8
+    print("OK")
+    """)
+
+
+def test_consensus_impl_spec_validation():
+    """consensus_impl is a gossip-window execution choice: eager errors for
+    non-gossip topologies and for non-gaussian ppermute."""
+    topo = TopologySpec.gossip("bidirectional_ring", {"n": 4})
+    _gossip_spec(topo, 4, consensus_impl="ppermute").validate()
+    with pytest.raises(ValueError, match="gossip"):
+        ExperimentSpec(
+            topology=TopologySpec.complete(4),
+            data=_gossip_data(4),
+            inference=InferenceSpec(consensus_impl="ppermute"),
+        ).validate()
+    with pytest.raises(ValueError, match="ppermute"):
+        _gossip_spec(
+            topo, 4, consensus_impl="ppermute", consensus="mean_only"
+        ).validate()
+    with pytest.raises(ValueError, match="unknown consensus_impl"):
+        InferenceSpec(consensus_impl="carrier_pigeon").validate()
+    # consensus_shards without the ppermute impl would be silently ignored
+    with pytest.raises(ValueError, match="consensus_shards"):
+        InferenceSpec(consensus_shards=4).validate()
+    InferenceSpec(consensus_impl="ppermute", consensus_shards=4).validate()
+    # a delayed clock cannot take the instant-delivery sharded path
+    delayed = TopologySpec.gossip(
+        "bidirectional_ring", {"n": 4},
+        clock={"kind": "delayed", "inner": {"kind": "poisson", "rate": 1.0},
+               "latency": {"kind": "constant", "delay": 1}},
+    )
+    with pytest.raises(ValueError, match="instant delivery"):
+        build_session(_gossip_spec(delayed, 4, consensus_impl="ppermute"))
+
+
+def test_window_shard_offsets_schedule():
+    """The static permutation schedule: only offsets crossed by fired edges
+    appear; intra-shard edges contribute nothing; an idle window's schedule
+    is empty."""
+    from repro.launch.consensus_opt import window_shard_offsets
+
+    W = bidirectional_ring_w(8)
+    # ring edges cross adjacent shards only: offsets {1, S-1}
+    win = all_edges_trace(W).window(0)
+    assert window_shard_offsets(win, 4) == (1, 3)
+    assert window_shard_offsets(win, 8) == (1, 7)
+    assert window_shard_offsets(win, 1) == ()  # one shard: all local
+    # single intra-shard edge (agents 0 and 1 share shard 0 at S=4)
+    single = window_from_events(W, [(0, 1)], e_max=2)
+    assert window_shard_offsets(single, 4) == ()
+    empty = window_from_events(W, [], e_max=2)
+    assert window_shard_offsets(empty, 4) == ()
 
 
 def test_ppermute_flat_routes_through_single_shard_map(monkeypatch):
