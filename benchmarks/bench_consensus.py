@@ -18,6 +18,12 @@ whose wall-clock says nothing about TPU, so the HBM-pass model is the
 load-bearing number there — the interpreter run is kept only as a
 correctness probe (max |err| vs the fused XLA reference).
 
+Since the wire-dtype PR the doc also carries a ``wire`` block: the fused
+network consensus timed at each wire dtype (fp32 / bf16 exchange of the
+(prec, prec*mu) sufficient statistics, fp32 accumulate) next to the
+modeled collective bytes (``consensus_roofline``'s ``wire`` term — bf16
+halves them) and the measured max deviation vs the fp32 reference.
+
 Output: ``BENCH_consensus.json`` — see ROADMAP.md "Performance" for how to
 read it; the perf trajectory is tracked from this file PR-over-PR.
 """
@@ -157,6 +163,50 @@ def bench_one(
     return rec
 
 
+def wire_sweep(
+    n_agents: int = 8,
+    p: int = 1 << 15,
+    iters: int = 5,
+    seed: int = 2,
+) -> list[dict]:
+    """Fused network consensus per wire dtype: wall-clock, modeled
+    collective bytes, and max |err| vs the fp32 reference (which must be
+    EXACTLY 0.0 for the f32 wire — the structural no-op contract)."""
+    from repro.core.numerics import wire_error_bound
+
+    posts = _posts_for(jax.random.key(seed), n_agents, p, 16)
+    flat = flat_posterior_from_pytree(posts, leading_axes=1)
+    W = jnp.asarray(_topology("ring", n_agents), jnp.float32)
+    ref = consensus_flat(flat, W)
+    out = []
+    for wire in ("f32", "bf16"):
+        fn = jax.jit(
+            lambda fp, w, wd=wire: consensus_flat(fp, w, wire_dtype=wd).mean
+        )
+        got = consensus_flat(flat, W, wire_dtype=wire)
+        max_err = max(
+            float(jnp.max(jnp.abs(got.mean - ref.mean))),
+            float(jnp.max(jnp.abs(got.rho - ref.rho))),
+        )
+        if wire == "f32":
+            assert max_err == 0.0, f"f32 wire is not a structural no-op: {max_err}"
+        rec = {
+            "wire_dtype": wire,
+            "us_flat_fused": _time(fn, (flat, W), iters),
+            "max_err_vs_f32": max_err,
+            "error_bound_u": wire_error_bound(wire),
+            "roofline_wire": consensus_roofline(
+                n_agents, flat.layout.n_params, 16, wire_dtype=wire
+            )["wire"],
+        }
+        out.append(rec)
+    assert (
+        out[1]["roofline_wire"]["collective_bytes"]
+        == 0.5 * out[0]["roofline_wire"]["collective_bytes"]
+    )
+    return out
+
+
 # (n_agents, p, topology, n_leaves) — n_leaves is a first-class axis: the
 # leaf-loop baseline pays per-leaf dispatch, so shallow pytrees (few big
 # leaves) are its best case and deep-model pytrees (hundreds of leaves, the
@@ -195,11 +245,20 @@ def run(quick: bool = False, json_out: str | None = DEFAULT_JSON) -> dict:
             f"{rec['us']['flat_fused']:.1f},"
             f"speedup={rec['speedup_flat_vs_leaf_loop']:.2f}x"
         )
+    wire = wire_sweep(iters=3 if quick else 5)
+    for rec in wire:
+        print(
+            f"bench_consensus_wire[{rec['wire_dtype']}],"
+            f"{rec['us_flat_fused']:.1f},"
+            f"collective_bytes={rec['roofline_wire']['collective_bytes']:.0f};"
+            f"max_err={rec['max_err_vs_f32']:.2e}"
+        )
     doc = {
         "benchmark": "consensus_eq6",
         "backend": jax.default_backend(),
         "quick": quick,
         "results": results,
+        "wire": wire,
         "summary": {
             "max_speedup_flat_vs_leaf_loop": max(
                 r["speedup_flat_vs_leaf_loop"] for r in results

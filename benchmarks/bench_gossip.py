@@ -28,6 +28,12 @@ Five parts, mirroring what the ROADMAP Async section promises:
    ``--xla_force_host_platform_device_count=8``), asserting BIT-identity
    per shard count and reporting the per-window cross-shard offset
    schedule next to the ICI roofline.
+6. **Wire sweep**: the masked window and the sharded ppermute window per
+   wire dtype (fp32 vs bf16 exchange of (prec, prec*mu), fp32
+   accumulate): wall-clock, modeled ICI bytes (bf16 halves them), the
+   f32 wire asserted bitwise-identical to the no-wire baseline, and the
+   bf16 path asserted bitwise-consistent ACROSS executions (masked ==
+   ppermute — the equivalence ladder per wire dtype).
 
 Output: ``BENCH_gossip.json`` + the harness's ``name,us_per_call,derived``
 CSV rows.
@@ -314,6 +320,72 @@ def _shard_sweep(n: int = 8, p: int = 1 << 14) -> list[dict]:
     return out
 
 
+def _wire_sweep(n: int = 8, p: int = 1 << 14) -> list[dict]:
+    """fp32 vs bf16 wire: masked window + sharded ppermute window
+    wall-clock next to the modeled ICI bytes; f32 bitwise vs baseline and
+    masked==ppermute bitwise per wire dtype asserted."""
+    ks = jax.random.split(jax.random.key(11), 2)
+    mean = jax.random.normal(ks[0], (n, p))
+    rho = jax.random.normal(ks[1], (n, p)) * 0.4 - 1.0
+    layout = FlatLayout.for_pytree({"w": jnp.zeros((p,))})
+    posts = FlatPosterior(mean=mean, rho=rho, layout=layout)
+    W_base = bidirectional_ring_w(n)
+    win = PoissonClock(W_base, rate=0.7, seed=13).window(0)
+    Wj = jnp.asarray(win.w_eff, jnp.float32)
+    act = jnp.asarray(win.active)
+    baseline = consensus_flat_masked(posts, Wj, act)
+    devices = jax.devices()
+    shards = max(s for s in (1, 2, 4, 8) if s <= len(devices) and n % s == 0)
+    mesh = jax.sharding.Mesh(np.asarray(devices[:shards]), ("agents",))
+    offsets = window_shard_offsets(win, shards)
+    out = []
+    for wire in ("f32", "bf16"):
+        masked_fn = jax.jit(
+            lambda q, w, a, wd=wire: consensus_flat_masked(
+                q, w, a, wire_dtype=wd
+            ).mean
+        )
+        got = consensus_flat_masked(posts, Wj, act, wire_dtype=wire)
+        if wire == "f32":
+            assert bool(
+                jnp.all(got.mean == baseline.mean)
+                & jnp.all(got.rho == baseline.rho)
+            ), "f32 wire is not a structural no-op"
+        sharded = consensus_ppermute_window(
+            posts, win, mesh, "agents", wire_dtype=wire
+        )
+        assert bool(
+            jnp.all(sharded.mean == got.mean)
+            & jnp.all(sharded.rho == got.rho)
+        ), f"ppermute != masked at wire {wire}"
+        out.append({
+            "wire_dtype": wire,
+            "n_shards": shards,
+            "us": {
+                "window_masked": _time(masked_fn, (posts, Wj, act)),
+                "window_ppermute": _time(
+                    lambda q, wd=wire: consensus_ppermute_window(
+                        q, win, mesh, "agents", wire_dtype=wd
+                    ).mean,
+                    (posts,),
+                ),
+            },
+            "bitwise_masked_eq_ppermute": True,
+            "roofline": gossip_window_roofline(
+                n, p,
+                n_participating=int(win.participating().sum()),
+                n_merging=int(win.active.sum()),
+                n_shards=max(shards, 2),  # ici terms need >= 2 shards
+                n_cross_offsets=len(offsets) if shards > 1 else 1,
+                wire_dtype=wire,
+            ),
+        })
+    f32_ici = out[0]["roofline"]["ici_bytes"]["window_ppermute"]
+    bf16_ici = out[1]["roofline"]["ici_bytes"]["window_ppermute"]
+    assert bf16_ici == 0.5 * f32_ici, "bf16 wire must halve the ICI bytes"
+    return out
+
+
 def run(json_out: str | None = DEFAULT_JSON) -> dict:
     equiv = _all_active_equivalence()
     print(f"gossip_equivalence,0.0,"
@@ -342,6 +414,13 @@ def run(json_out: str | None = DEFAULT_JSON) -> dict:
         print(f"gossip_shard[S={rec['n_shards']}],"
               f"{rec['us']['window_ppermute']:.1f},"
               f"offsets={rec['n_cross_offsets']};bitwise=1")
+    wire = _wire_sweep()
+    for rec in wire:
+        print(f"gossip_wire[{rec['wire_dtype']}],"
+              f"{rec['us']['window_masked']:.1f},"
+              f"ici_bytes="
+              f"{rec['roofline']['ici_bytes']['window_ppermute']:.0f};"
+              f"bitwise_masked_eq_ppermute=1")
     doc = {
         "benchmark": "gossip_event_windows",
         "backend": jax.default_backend(),
@@ -351,6 +430,7 @@ def run(json_out: str | None = DEFAULT_JSON) -> dict:
         "window_sweep": sweep,
         "delay_sweep": delay,
         "shard_sweep": shard,
+        "wire_sweep": wire,
     }
     if json_out:
         with open(json_out, "w") as f:

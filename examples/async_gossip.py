@@ -21,6 +21,11 @@ Two more regimes ride the same declarative spec:
   (bit-identical to the dense path; wire bytes scale with cross-shard
   activity).  This script forces 4 virtual CPU devices so the demo is real
   on any host.
+* **Wire precision** — ``InferenceSpec(wire_dtype="bf16")`` exchanges the
+  consensus sufficient statistics (prec, prec*mu) in bfloat16 (cast at the
+  exchange boundary, accumulated fp32), halving every merge's wire bytes;
+  the posterior stays within the analytic bound of the fp32 run
+  (``core.numerics.wire_error_bound``; ROADMAP "Wire precision").
 
     PYTHONPATH=src python examples/async_gossip.py
 """
@@ -138,6 +143,38 @@ def main():
         f"{len(jax.devices())} devices, ppermute on fired offsets only): "
         f"avg_acc {s_hist[-1]['avg_acc']:.3f}, bit-identical to the dense "
         f"run: {bitwise}."
+    )
+
+    # -- bf16 wire: half the exchange bytes, error-bounded posterior --------
+    from repro.launch.costmodel import gossip_window_roofline
+
+    wire_spec = dataclasses.replace(
+        SPEC,
+        inference=dataclasses.replace(SPEC.inference, wire_dtype="bf16"),
+    )
+    wired = build_session(wire_spec)
+    w_hist = wired.run(eval_fn=lambda s: s.evaluate())
+    w_tel = wired.evaluate()
+    dev = float(
+        np.abs(
+            np.asarray(wired.posterior().mean)
+            - np.asarray(session.posterior().mean)
+        ).max()
+    )
+    n_params = int(wired.posterior().mean.shape[-1])
+    model = {
+        wd: gossip_window_roofline(
+            N_AGENTS, n_params, n_participating=N_AGENTS,
+            n_shards=4, n_cross_offsets=2, wire_dtype=wd,
+        )["ici_bytes"]["window_ppermute"]
+        for wd in ("f32", "bf16")
+    }
+    print(
+        f"bf16 wire ({w_tel['wire_dtype']} exchange, fp32 accumulate): "
+        f"avg_acc {w_hist[-1]['avg_acc']:.3f} vs fp32 "
+        f"{hist[-1]['avg_acc']:.3f}; max posterior deviation {dev:.2e}; "
+        f"modeled window wire bytes {model['f32']:.0f} -> {model['bf16']:.0f} "
+        f"({model['f32'] / model['bf16']:.0f}x fewer)."
     )
 
 

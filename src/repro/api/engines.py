@@ -95,6 +95,7 @@ class SimulatedEngine:
             n_mc_samples=inf.n_mc_samples,
             kl_scale=inf.kl_scale,
             consensus=inf.consensus,
+            wire_dtype=inf.wire_dtype,
         )
         self._round = jax.jit(round_fn) if spec.run.jit else round_fn
 
@@ -158,7 +159,10 @@ class LaunchEngine:
             nll_fn=model.nll_fn,
             n_mc_samples=inf.n_mc_samples,
         )
-        consensus = lambda post, W: make_consensus_step(None, W)(post)
+        wire_dtype = inf.wire_dtype
+        consensus = lambda post, W: make_consensus_step(
+            None, W, wire_dtype=wire_dtype
+        )(post)
         if spec.run.jit:
             local_step = jax.jit(local_step)
             consensus = jax.jit(consensus)

@@ -330,6 +330,18 @@ class InferenceSpec:
                     (``launch.consensus_opt.consensus_ppermute_window``);
                     ``consensus_shards`` caps/pins the shard count (None =
                     the largest divisor of n_agents <= local device count).
+
+    ``wire_dtype`` (``"f32" | "bf16" | "f16"``) picks the PRECISION of the
+    consensus exchange, orthogonal to ``consensus_impl``: the (prec,
+    prec*mu) sufficient statistics are cast to the wire dtype at the
+    exchange boundary and accumulated fp32 (ROADMAP "Wire precision") —
+    at bf16 the collective/ICI bytes halve.  ``"f32"`` (default) is
+    bitwise the uncompressed path on every impl; narrower dtypes agree
+    with it within the derived bound (``core.numerics.wire_error_bound``,
+    tests/test_wire_dtype.py).  ``history_dtype`` (None = fp32) optionally
+    stores the delivery-latency [K, N, P] posterior history ring in a
+    narrower resident dtype (halving its HBM footprint at bf16); only
+    meaningful with a delayed gossip clock.
     """
 
     method: str = "bbb"
@@ -346,6 +358,8 @@ class InferenceSpec:
     consensus: str = "gaussian"  # gaussian | mean_only | none
     consensus_impl: str = "auto"  # auto | masked | ppermute (gossip runtime)
     consensus_shards: int | None = None  # ppermute only; None = auto
+    wire_dtype: str = "f32"  # f32 | bf16 | f16: consensus exchange precision
+    history_dtype: str | None = None  # delayed gossip ring residency (None=f32)
     prior_var: float = 0.5  # conjugate_linreg prior N(0, prior_var I)
 
     def validate(self) -> None:
@@ -359,6 +373,28 @@ class InferenceSpec:
             raise ValueError(
                 f"unknown consensus_impl {self.consensus_impl!r}; known: "
                 "auto | masked | ppermute"
+            )
+        if self.wire_dtype not in ("f32", "bf16", "f16"):
+            raise ValueError(
+                f"unknown wire_dtype {self.wire_dtype!r}; known: "
+                "f32 | bf16 | f16"
+            )
+        if self.history_dtype not in (None, "f32", "bf16", "f16"):
+            raise ValueError(
+                f"unknown history_dtype {self.history_dtype!r}; known: "
+                "None | f32 | bf16 | f16"
+            )
+        if self.wire_dtype != "f32" and self.consensus != "gaussian":
+            raise ValueError(
+                "wire_dtype compresses the gaussian (prec, prec*mu) "
+                f"exchange; consensus={self.consensus!r} (mean_only has no "
+                "wire-compressed path, none exchanges nothing) would "
+                "silently ignore it"
+            )
+        if self.wire_dtype != "f32" and self.method == "conjugate_linreg":
+            raise ValueError(
+                "wire_dtype applies to the mean-field consensus exchange; "
+                "the conjugate_linreg engine would silently ignore it"
             )
         if self.consensus_shards is not None:
             if self.consensus_shards <= 0:
@@ -423,6 +459,14 @@ class ExperimentSpec:
             raise ValueError(
                 "engine='gossip' requires a TopologySpec(kind='gossip') "
                 "(the event windows come from its activation clock)"
+            )
+        if (self.inference.history_dtype is not None
+                and self.topology.kind != "gossip"):
+            raise ValueError(
+                "history_dtype controls the delayed-gossip posterior "
+                "history ring and requires a TopologySpec(kind='gossip') "
+                "with a delayed clock (it would be silently ignored "
+                "otherwise)"
             )
         if self.inference.consensus_impl != "auto":
             if self.topology.kind != "gossip":

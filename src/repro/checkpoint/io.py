@@ -60,9 +60,13 @@ def _decompress(comp: bytes) -> bytes:
 def _pack_leaf(leaf):
     if isinstance(leaf, (jax.Array, np.ndarray)):
         arr = np.asarray(leaf)
+        # extension dtypes (bfloat16 and friends) have a lossy numpy byte
+        # string ('<V2'): store the NAME, which jnp.dtype round-trips — the
+        # bf16-resident gossip history ring checkpoints through here
+        dt = arr.dtype
         return {
             _ARR: True,
-            "dtype": arr.dtype.str,
+            "dtype": dt.name if dt.kind == "V" else dt.str,
             "shape": list(arr.shape),
             "data": arr.tobytes(),
         }
@@ -71,9 +75,18 @@ def _pack_leaf(leaf):
     raise TypeError(f"unsupported checkpoint leaf type {type(leaf)}")
 
 
+def _leaf_dtype(tag: str) -> np.dtype:
+    """Decode a packed dtype tag: numpy byte strings directly, extension
+    dtype NAMES (e.g. 'bfloat16') through jnp.dtype."""
+    dt = np.dtype(tag) if not tag[:1].isalpha() else None
+    if dt is not None and dt.kind != "V":
+        return dt
+    return jnp.dtype(tag)
+
+
 def _unpack_leaf(doc):
     if isinstance(doc, dict) and doc.get(_ARR):
-        return np.frombuffer(doc["data"], dtype=np.dtype(doc["dtype"])).reshape(
+        return np.frombuffer(doc["data"], dtype=_leaf_dtype(doc["dtype"])).reshape(
             doc["shape"]
         )
     if isinstance(doc, dict) and doc.get(_SCALAR):

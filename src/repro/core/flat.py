@@ -41,9 +41,11 @@ import numpy as np
 
 from repro.core.numerics import (
     COMPUTE_DTYPE,
+    canonical_wire_dtype,
     softplus,
     softplus_inv,
     softplus_inv_py,
+    wire_roundtrip,
 )
 
 PyTree = Any
@@ -283,12 +285,15 @@ XLA_BLOCK = 16384  # CPU cache-blocking width (lanes) for the XLA path
 _MAX_UNROLL = 256  # cap on unrolled column blocks (graph-size guard)
 
 
-def _eq6_block(W, mean, rho):
+def _eq6_block(W, mean, rho, wire_dtype=jnp.float32):
     """Eq. (6) on one [N, BLOCK] column block (identical math to the Pallas
-    network kernel body)."""
+    network kernel body, including the exchange-boundary wire rounding —
+    ``wire_roundtrip`` is a structural no-op at f32)."""
     prec = 1.0 / jnp.square(softplus(rho))
-    new_prec = jnp.matmul(W, prec, preferred_element_type=COMPUTE_DTYPE)
-    new_pm = jnp.matmul(W, prec * mean, preferred_element_type=COMPUTE_DTYPE)
+    prec_x = wire_roundtrip(prec, wire_dtype)
+    pm_x = wire_roundtrip(prec * mean, wire_dtype)
+    new_prec = jnp.matmul(W, prec_x, preferred_element_type=COMPUTE_DTYPE)
+    new_pm = jnp.matmul(W, pm_x, preferred_element_type=COMPUTE_DTYPE)
     return new_pm / new_prec, softplus_inv(jax.lax.rsqrt(new_prec))
 
 
@@ -298,6 +303,7 @@ def consensus_flat_reference(
     W: jax.Array,
     block: int = XLA_BLOCK,
     active: jax.Array | None = None,
+    wire_dtype=None,
 ) -> tuple[jax.Array, jax.Array]:
     """Eq. (6) on the flat [N, P] buffers — the reference semantics for the
     Pallas kernels and the fast non-TPU path.
@@ -314,11 +320,15 @@ def consensus_flat_reference(
     ``consensus_flat_masked_reference``) selects per block between the
     computed row (active agents) and the ORIGINAL (mean, rho) row
     (inactive agents pass through bitwise); ``None`` adds no select at all.
+    ``wire_dtype`` rounds (prec, prec*mu) at the exchange boundary
+    (``kernels.consensus`` module docstring); f32/None is bitwise the
+    uncompressed path.
     """
+    wire_dtype = canonical_wire_dtype(wire_dtype)
     act = None if active is None else (active > 0)[:, None]
 
     def blk(m_in, r_in):
-        m_o, r_o = _eq6_block(W, m_in, r_in)
+        m_o, r_o = _eq6_block(W, m_in, r_in, wire_dtype)
         if act is None:
             return m_o, r_o
         return jnp.where(act, m_o, m_in), jnp.where(act, r_o, r_in)
@@ -345,6 +355,7 @@ def consensus_flat(
     *,
     mode: str | None = None,
     block: int | None = None,
+    wire_dtype=None,
 ) -> FlatPosterior:
     """Single fused network-wide consensus (eq. 6) on a ``FlatPosterior``.
 
@@ -354,6 +365,10 @@ def consensus_flat(
                   elsewhere — SLOW off-TPU, correctness checks only)
       "interpret" force the Pallas interpreter
       "xla"       force the fused XLA reference path
+
+    ``wire_dtype`` (``None`` | ``"f32"|"bf16"|"f16"`` | dtype) rounds the
+    exchanged (prec, prec*mu) through the wire dtype on every mode —
+    f32/None is bitwise the uncompressed path (ROADMAP "Wire precision").
     """
     from repro.kernels.consensus import DEFAULT_BLOCK, consensus_fused_network
 
@@ -361,13 +376,16 @@ def consensus_flat(
         mode = "pallas" if jax.default_backend() == "tpu" else "xla"
     if mode == "xla":
         mean, rho = consensus_flat_reference(
-            posts.mean, posts.rho, W, block=(XLA_BLOCK if block is None else block)
+            posts.mean, posts.rho, W,
+            block=(XLA_BLOCK if block is None else block),
+            wire_dtype=wire_dtype,
         )
     elif mode in ("pallas", "interpret"):
         mean, rho = consensus_fused_network(
             W, posts.mean, posts.rho,
             block=(DEFAULT_BLOCK if block is None else block),
             interpret=(True if mode == "interpret" else None),
+            wire_dtype=canonical_wire_dtype(wire_dtype),
         )
     else:
         raise ValueError(f"unknown consensus_flat mode {mode!r}")
@@ -380,6 +398,7 @@ def consensus_flat_masked_reference(
     W: jax.Array,
     active: jax.Array,
     block: int = XLA_BLOCK,
+    wire_dtype=None,
 ) -> tuple[jax.Array, jax.Array]:
     """Masked (event-window) eq. (6) on the flat buffers — reference
     semantics for ``consensus_fused_masked`` and the fast non-TPU path.
@@ -388,9 +407,13 @@ def consensus_flat_masked_reference(
     activity select: active agents get the computed row, inactive ones
     their ORIGINAL (mean, rho) row.  With ``active`` all-true the select is
     the identity on the computed values, so the output is bit-identical to
-    the unmasked reference (the gossip/synchronous equivalence contract).
+    the unmasked reference (the gossip/synchronous equivalence contract,
+    which ``wire_dtype`` preserves: both paths round at the same exchange
+    boundary).
     """
-    return consensus_flat_reference(mean, rho, W, block=block, active=active)
+    return consensus_flat_reference(
+        mean, rho, W, block=block, active=active, wire_dtype=wire_dtype
+    )
 
 
 def consensus_flat_masked(
@@ -403,6 +426,7 @@ def consensus_flat_masked(
     mesh: Any = None,
     axis: str = "agents",
     window: Any = None,
+    wire_dtype=None,
 ) -> FlatPosterior:
     """Masked network-wide consensus for one gossip event window.
 
@@ -418,6 +442,10 @@ def consensus_flat_masked(
                   the window's fired shard offsets.  Requires ``mesh`` and
                   the ``window`` (its static edge list IS the permutation
                   schedule); bit-identical to the "xla" path by test.
+
+    ``wire_dtype`` rounds the exchanged (prec, prec*mu) on every mode —
+    on the ppermute mode the rounded payload IS the ppermuted wire traffic
+    (halved ICI bytes at bf16); f32/None is bitwise uncompressed.
     """
     from repro.kernels.consensus import DEFAULT_BLOCK, consensus_fused_masked
 
@@ -431,7 +459,9 @@ def consensus_flat_masked(
                 "permutation schedule)"
             )
         return consensus_ppermute_window(
-            posts, window, mesh, axis, block=(XLA_BLOCK if block is None else block)
+            posts, window, mesh, axis,
+            block=(XLA_BLOCK if block is None else block),
+            wire_dtype=wire_dtype,
         )
     if mode is None:
         mode = "pallas" if jax.default_backend() == "tpu" else "xla"
@@ -439,12 +469,14 @@ def consensus_flat_masked(
         mean, rho = consensus_flat_masked_reference(
             posts.mean, posts.rho, W, active,
             block=(XLA_BLOCK if block is None else block),
+            wire_dtype=wire_dtype,
         )
     elif mode in ("pallas", "interpret"):
         mean, rho = consensus_fused_masked(
             W, active, posts.mean, posts.rho,
             block=(DEFAULT_BLOCK if block is None else block),
             interpret=(True if mode == "interpret" else None),
+            wire_dtype=canonical_wire_dtype(wire_dtype),
         )
     else:
         raise ValueError(f"unknown consensus_flat_masked mode {mode!r}")
@@ -461,6 +493,7 @@ def consensus_flat_delayed(
     hist_mean: jax.Array,
     hist_rho: jax.Array,
     round_idx: jax.Array,
+    wire_dtype=None,
 ) -> FlatPosterior:
     """Delivery-latency eq. (6): one gossip window whose events merge STALE
     source posteriors (``repro.gossip.clocks.DelayedClock``).
@@ -479,18 +512,38 @@ def consensus_flat_delayed(
     via a segment scatter-add over the static [E_max] event list (pad slots
     carry weight 0.0 and contribute exactly nothing); inactive rows pass
     through bitwise as in ``consensus_flat_masked``.
+
+    ``wire_dtype`` rounds every accumulated (prec, prec*mu) contribution —
+    the delivered stale statistics AND the self term, mirroring the dense
+    kernels where the whole buffer crosses the exchange boundary — and the
+    scatter-add accumulates fp32.  The history ring may be resident in a
+    narrower dtype (``GossipEngine`` ``history_dtype``); gathered rows are
+    decoded to fp32 before any math.  f32/None is bitwise uncompressed.
     """
+    wire_dtype = canonical_wire_dtype(wire_dtype)
     k_slots = hist_mean.shape[0]
     slot = jnp.mod(round_idx - lags, k_slots)  # [E]
     dst, src = edges[:, 0], edges[:, 1]
-    h_mean = hist_mean[slot, src]  # [E, P] stale source rows
-    h_rho = hist_rho[slot, src]
+    # decode from the (possibly bf16-resident) history ring; no-op at f32
+    h_mean = hist_mean[slot, src].astype(COMPUTE_DTYPE)  # [E, P] stale rows
+    h_rho = hist_rho[slot, src].astype(COMPUTE_DTYPE)
     prec_e = 1.0 / jnp.square(softplus(h_rho))
     w_e = weights[:, None].astype(COMPUTE_DTYPE)
     prec_now = 1.0 / jnp.square(softplus(posts.rho))
     diag = jnp.diagonal(W)[:, None].astype(COMPUTE_DTYPE)
-    acc_prec = (diag * prec_now).at[dst].add(w_e * prec_e)
-    acc_pm = (diag * prec_now * posts.mean).at[dst].add(w_e * prec_e * h_mean)
+    if wire_dtype == jnp.float32:
+        # pre-wire op order, verbatim — f32 stays bitwise identical
+        acc_prec = (diag * prec_now).at[dst].add(w_e * prec_e)
+        acc_pm = (diag * prec_now * posts.mean).at[dst].add(
+            w_e * prec_e * h_mean
+        )
+    else:
+        prec_now_x = wire_roundtrip(prec_now, wire_dtype)
+        pm_now_x = wire_roundtrip(prec_now * posts.mean, wire_dtype)
+        prec_e_x = wire_roundtrip(prec_e, wire_dtype)
+        pm_e_x = wire_roundtrip(prec_e * h_mean, wire_dtype)
+        acc_prec = (diag * prec_now_x).at[dst].add(w_e * prec_e_x)
+        acc_pm = (diag * pm_now_x).at[dst].add(w_e * pm_e_x)
     act = (active > 0)[:, None]
     mean_out = jnp.where(act, acc_pm / acc_prec, posts.mean)
     rho_out = jnp.where(
@@ -507,12 +560,14 @@ def consensus_flat_masked_sparse(
     *,
     mode: str | None = None,
     block: int | None = None,
+    wire_dtype=None,
 ) -> FlatPosterior:
     """Active-edge window consensus on CSR tables of the window's W-tilde
     (``neighbor_tables(window.w_eff)``): active agents read only their
     fired-neighbor rows, inactive agents copy their own row.  The "xla"
     path rebuilds the tiny dense W-tilde (reference semantics); the
-    active-edge HBM saving exists on the Pallas path."""
+    active-edge HBM saving exists on the Pallas path.  ``wire_dtype``
+    rounds the gathered (prec, prec*mu) at the exchange boundary."""
     from repro.kernels.consensus import (
         DEFAULT_BLOCK,
         consensus_fused_masked_sparse,
@@ -524,12 +579,14 @@ def consensus_flat_masked_sparse(
         mean, rho = _sparse_reference(
             posts.mean, posts.rho, neighbors, weights,
             block=(XLA_BLOCK if block is None else block), active=active,
+            wire_dtype=wire_dtype,
         )
     elif mode in ("pallas", "interpret"):
         mean, rho = consensus_fused_masked_sparse(
             neighbors, weights, active, posts.mean, posts.rho,
             block=(DEFAULT_BLOCK if block is None else block),
             interpret=(True if mode == "interpret" else None),
+            wire_dtype=canonical_wire_dtype(wire_dtype),
         )
     else:
         raise ValueError(f"unknown consensus_flat_masked_sparse mode {mode!r}")
@@ -558,7 +615,7 @@ def neighbor_tables(W: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
 
 
 def _sparse_reference(mean, rho, neighbors, weights, block: int = XLA_BLOCK,
-                      active=None):
+                      active=None, wire_dtype=None):
     """Sparse reference path: rebuild the (tiny, [N, N]) dense W from the
     neighbor tables and reuse the blocked dense path.  Bitwise-identical
     semantics (zero-weight entries contribute nothing; self-padded slots
@@ -570,7 +627,9 @@ def _sparse_reference(mean, rho, neighbors, weights, block: int = XLA_BLOCK,
     n = mean.shape[0]
     rows = jnp.broadcast_to(jnp.arange(n, dtype=neighbors.dtype)[:, None], neighbors.shape)
     W = jnp.zeros((n, n), COMPUTE_DTYPE).at[rows, neighbors].add(weights)
-    return consensus_flat_reference(mean, rho, W, block=block, active=active)
+    return consensus_flat_reference(
+        mean, rho, W, block=block, active=active, wire_dtype=wire_dtype
+    )
 
 
 def consensus_flat_sparse(
@@ -580,12 +639,14 @@ def consensus_flat_sparse(
     *,
     mode: str | None = None,
     block: int | None = None,
+    wire_dtype=None,
 ) -> FlatPosterior:
     """Sparse-neighborhood consensus: agents read only their deg(i) neighbor
-    rows (Pallas path).  Same mode/block semantics as ``consensus_flat``:
-    the block default is per-mode (XLA cache block vs kernel lane block);
-    the "xla" path rebuilds the tiny dense W (reference semantics — the
-    deg(i) traffic saving exists only on the Pallas path)."""
+    rows (Pallas path).  Same mode/block/wire_dtype semantics as
+    ``consensus_flat``: the block default is per-mode (XLA cache block vs
+    kernel lane block); the "xla" path rebuilds the tiny dense W (reference
+    semantics — the deg(i) traffic saving exists only on the Pallas
+    path)."""
     from repro.kernels.consensus import DEFAULT_BLOCK, consensus_fused_sparse
 
     if mode is None:
@@ -594,12 +655,14 @@ def consensus_flat_sparse(
         mean, rho = _sparse_reference(
             posts.mean, posts.rho, neighbors, weights,
             block=(XLA_BLOCK if block is None else block),
+            wire_dtype=wire_dtype,
         )
     elif mode in ("pallas", "interpret"):
         mean, rho = consensus_fused_sparse(
             neighbors, weights, posts.mean, posts.rho,
             block=(DEFAULT_BLOCK if block is None else block),
             interpret=(True if mode == "interpret" else None),
+            wire_dtype=canonical_wire_dtype(wire_dtype),
         )
     else:
         raise ValueError(f"unknown consensus_flat_sparse mode {mode!r}")

@@ -24,6 +24,102 @@ import jax.numpy as jnp
 # canonical compute dtype for flat posterior buffers and kernel wrappers
 COMPUTE_DTYPE = jnp.float32
 
+# -- wire-dtype compression (ROADMAP "Wire precision") ----------------------
+#
+# The consensus round exchanges the sufficient statistics (prec, prec*mu);
+# on the wire-bound paths those may travel compressed.  Contract: cast to
+# the wire dtype AT THE EXCHANGE BOUNDARY, accumulate in fp32.  "f32" is a
+# STRUCTURAL no-op — every helper below returns its input unchanged, so the
+# f32 path emits the identical computation graph (bitwise identity with the
+# pre-wire kernels, pinned by tests/test_wire_dtype.py).
+
+WIRE_DTYPES = {
+    "f32": jnp.float32,
+    "bf16": jnp.bfloat16,
+    "f16": jnp.float16,
+}
+
+# unit roundoff u = eps/2 of round-to-nearest into the wire dtype: one
+# cast perturbs each exchanged scalar by a relative error <= u.  The
+# analytic error bound of a wire-compressed consensus output derives from
+# u alone (tests/test_wire_dtype.py): new_prec is a convex combination of
+# positive rounded terms (relative error <= u), new_pm accumulates
+# |pm|-weighted roundoff, and the fp32 accumulation adds only O(eps_f32).
+WIRE_UNIT_ROUNDOFF = {
+    "f32": 0.0,
+    "bf16": 2.0 ** -8,  # bf16: 7 stored mantissa bits, eps = 2^-7
+    "f16": 2.0 ** -11,  # f16: 10 stored mantissa bits, eps = 2^-10
+}
+
+
+def canonical_wire_dtype(wire_dtype):
+    """Normalize a wire-dtype spec (``None`` | ``"f32"|"bf16"|"f16"`` | a
+    dtype-like) to the jnp dtype.  ``None`` means uncompressed (f32).
+    Dtype-likes outside the supported wire set are rejected exactly like
+    their string spellings (an int or f64 wire would silently corrupt the
+    exchanged statistics instead of compressing them)."""
+    if wire_dtype is None:
+        return jnp.float32
+    if isinstance(wire_dtype, str):
+        if wire_dtype not in WIRE_DTYPES:
+            raise ValueError(
+                f"unknown wire_dtype {wire_dtype!r}; known: "
+                f"{sorted(WIRE_DTYPES)}"
+            )
+        return WIRE_DTYPES[wire_dtype]
+    dt = jnp.dtype(wire_dtype)
+    for cand in WIRE_DTYPES.values():
+        if dt == jnp.dtype(cand):
+            return cand
+    raise ValueError(
+        f"unsupported wire_dtype {wire_dtype!r}; known: "
+        f"{sorted(WIRE_DTYPES)} (or their dtypes)"
+    )
+
+
+def wire_dtype_name(wire_dtype) -> str:
+    """The spec-string name of a wire dtype (inverse of
+    ``canonical_wire_dtype``)."""
+    dt = canonical_wire_dtype(wire_dtype)
+    for name, cand in WIRE_DTYPES.items():
+        if jnp.dtype(cand) == jnp.dtype(dt):
+            return name
+    raise ValueError(f"{wire_dtype!r} is not a supported wire dtype")
+
+
+def wire_itemsize(wire_dtype) -> int:
+    """Bytes per exchanged scalar at this wire dtype (cost-model input)."""
+    return jnp.dtype(canonical_wire_dtype(wire_dtype)).itemsize
+
+
+def wire_error_bound(wire_dtype) -> float:
+    """Unit roundoff u of one cast into the wire dtype (0.0 for f32) — the
+    scale of the derived consensus error bound (see WIRE_UNIT_ROUNDOFF)."""
+    return WIRE_UNIT_ROUNDOFF[wire_dtype_name(wire_dtype)]
+
+
+def wire_roundtrip(x: jax.Array, wire_dtype) -> jax.Array:
+    """Round ``x`` through the wire dtype and decode back to its own dtype —
+    the single-program simulation of a compressed exchange (the receiver
+    accumulates in fp32 on the decoded values).  STRUCTURAL no-op for f32:
+    returns ``x`` itself, so the uncompressed path's graph is untouched."""
+    wd = canonical_wire_dtype(wire_dtype)
+    if jnp.dtype(wd) == jnp.dtype(x.dtype):
+        return x
+    return x.astype(wd).astype(x.dtype)
+
+
+def wire_cast_pair(prec: jax.Array, pm: jax.Array, wire_dtype):
+    """Cast the (prec, prec*mu) sufficient-statistic pair to the wire dtype
+    for a REAL exchange (collective payload stays compressed on the wire;
+    the receiver casts back and accumulates fp32).  Identity for f32 — the
+    one shared home of the cast the legacy ``launch.consensus_opt`` helpers
+    each duplicated."""
+    wd = canonical_wire_dtype(wire_dtype)
+    if jnp.dtype(wd) == jnp.dtype(prec.dtype):
+        return prec, pm
+    return prec.astype(wd), pm.astype(wd)
+
 
 def softplus(x: jax.Array) -> jax.Array:
     return jax.nn.softplus(x)

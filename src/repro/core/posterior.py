@@ -118,7 +118,7 @@ def consensus_mean_field(
 
 
 def consensus_all_agents(
-    posts: GaussianPosterior, W: jax.Array
+    posts: GaussianPosterior, W: jax.Array, wire_dtype=None
 ) -> GaussianPosterior:
     """Consensus step (eq. 6) for ALL agents simultaneously.
 
@@ -132,17 +132,26 @@ def consensus_all_agents(
     (contiguous [N, P] buffers), in which case the call dispatches to the
     single fused network-wide path (Pallas kernel on TPU, fused XLA einsum
     elsewhere) — one HBM pass over the whole network posterior per round.
+
+    ``wire_dtype`` (``None`` | ``"f32"|"bf16"|"f16"`` | dtype) rounds the
+    exchanged (prec, prec*mu) through the wire dtype at the exchange
+    boundary on BOTH dispatch targets — f32/None is bitwise the
+    uncompressed path (ROADMAP "Wire precision").
     """
     from repro.core.flat import FlatPosterior, consensus_flat
+    from repro.core.numerics import wire_roundtrip
 
     if isinstance(posts, FlatPosterior):
-        return consensus_flat(posts, W)
+        return consensus_flat(posts, W, wire_dtype=wire_dtype)
 
     def combine(mean_stack, rho_stack):
         prec = 1.0 / jnp.square(softplus(rho_stack))
+        pm = prec * mean_stack
+        prec_x = wire_roundtrip(prec, wire_dtype)
+        pm_x = wire_roundtrip(pm, wire_dtype)
         # new_prec[i] = sum_j W[i,j] prec[j]
-        new_prec = jnp.einsum("ij,j...->i...", W, prec)
-        new_mean = jnp.einsum("ij,j...->i...", W, prec * mean_stack) / new_prec
+        new_prec = jnp.einsum("ij,j...->i...", W, prec_x)
+        new_mean = jnp.einsum("ij,j...->i...", W, pm_x) / new_prec
         new_rho = softplus_inv(jnp.sqrt(1.0 / new_prec))
         return new_mean, new_rho
 

@@ -153,6 +153,7 @@ def make_round_fn(
     kl_scale: float = 1.0,
     consensus: str = "gaussian",
     param_layout: FlatLayout | None = None,
+    wire_dtype=None,
 ):
     """Build the jittable per-round transition.
 
@@ -165,6 +166,8 @@ def make_round_fn(
     so the flat theta sample crosses to a pytree only at the model-apply
     boundary.  ``param_layout`` pre-binds that layout at build time (skips
     the per-trace wrap; required only when the state type is not known yet).
+    ``wire_dtype`` compresses the gaussian consensus exchange
+    (``consensus_all_agents``); f32/None is bitwise uncompressed.
     """
     if consensus not in ("gaussian", "mean_only", "none"):
         raise ValueError(f"unknown consensus mode {consensus!r}")
@@ -183,7 +186,7 @@ def make_round_fn(
         )
         u = jax.tree.leaves(batches)[0].shape[1]
         if consensus == "gaussian":
-            post = consensus_all_agents(post, W)
+            post = consensus_all_agents(post, W, wire_dtype=wire_dtype)
         elif consensus == "mean_only":
             # dataclasses.replace keeps the posterior's own type (and, for a
             # FlatPosterior, its static layout)

@@ -71,6 +71,7 @@ from repro.core.flat import (
     consensus_flat_masked,
     make_flat_nll,
 )
+from repro.core.numerics import canonical_wire_dtype, wire_dtype_name
 from repro.core.simulated import init_network, network_local_steps
 
 PyTree = Any
@@ -156,6 +157,18 @@ class GossipEngine:
                 "delivery-latency gossip implements gaussian/none consensus; "
                 "mean_only (the FedAvg baseline) runs on instant delivery"
             )
+        # wire precision of the consensus exchange (ROADMAP "Wire
+        # precision"): "f32" is the bitwise-uncompressed default
+        self.wire_dtype = inf.wire_dtype
+        # resident dtype of the [K, N, P] delivery-latency history ring
+        # (bf16 halves its HBM footprint; gathered rows decode to fp32)
+        if inf.history_dtype is not None and not self.hist_slots:
+            raise ValueError(
+                "history_dtype sizes the delivery-latency posterior "
+                "history ring; this clock has no delay (wrap it in "
+                '{"kind": "delayed", ...} or drop history_dtype)'
+            )
+        self.hist_dtype = canonical_wire_dtype(inf.history_dtype)
         impl = inf.consensus_impl
         self.consensus_impl = "masked" if impl == "auto" else impl
         self._mesh = None
@@ -190,6 +203,7 @@ class GossipEngine:
         opt = self.opt
         policy, consensus_mode = self.local_policy, self.consensus_mode
         hist_slots = self.hist_slots
+        wire_dtype, hist_dtype = self.wire_dtype, self.hist_dtype
         merge_in_jit = self.consensus_impl != "ppermute"
         self.n_traces = 0
 
@@ -241,7 +255,9 @@ class GossipEngine:
                 state, batches, W, key
             )
             if consensus_mode == "gaussian" and merge_in_jit:
-                post = consensus_flat_masked(post, W, active)
+                post = consensus_flat_masked(
+                    post, W, active, wire_dtype=wire_dtype
+                )
             elif consensus_mode == "mean_only":
                 act = active[:, None]
                 post = dataclasses.replace(
@@ -261,16 +277,19 @@ class GossipEngine:
             # ring slot FIRST: a lag-0 event then gathers the current value,
             # which is exactly what instant delivery merges
             slot = jnp.mod(state.round, hist_slots)
+            # the ring may be resident in a narrower dtype (history_dtype);
+            # astype is a no-op at the fp32 default
             hist_mean = jax.lax.dynamic_update_index_in_dim(
-                state.hist_mean, post.mean, slot, 0
+                state.hist_mean, post.mean.astype(hist_dtype), slot, 0
             )
             hist_rho = jax.lax.dynamic_update_index_in_dim(
-                state.hist_rho, post.rho, slot, 0
+                state.hist_rho, post.rho.astype(hist_dtype), slot, 0
             )
             if consensus_mode == "gaussian":
                 post = consensus_flat_delayed(
                     post, W, active, edges, weights, lags,
                     hist_mean, hist_rho, state.round,
+                    wire_dtype=wire_dtype,
                 )
             new_state = finish(state, post, opt_state, step, active)
             return dataclasses.replace(
@@ -303,10 +322,12 @@ class GossipEngine:
             # zero-init is safe — never read before their window is written
             # (window r only gathers slots of windows >= max(0, r -
             # max_delay)); None (empty subtree) when there is no latency so
-            # the leaf structure matches pre-latency gossip checkpoints
-            hist_mean=(jnp.zeros(hist_shape, ns.posterior.mean.dtype)
+            # the leaf structure matches pre-latency gossip checkpoints.
+            # Resident dtype is history_dtype (fp32 default; bf16 halves
+            # the ring's HBM footprint).
+            hist_mean=(jnp.zeros(hist_shape, self.hist_dtype)
                        if self.hist_slots else None),
-            hist_rho=(jnp.zeros(hist_shape, ns.posterior.rho.dtype)
+            hist_rho=(jnp.zeros(hist_shape, self.hist_dtype)
                       if self.hist_slots else None),
         )
 
@@ -345,6 +366,7 @@ class GossipEngine:
             post = consensus_flat_masked(
                 state.posterior, W, jnp.asarray(win.active),
                 mode="ppermute", mesh=self._mesh, axis="agents", window=win,
+                wire_dtype=self.wire_dtype,
             )
             return dataclasses.replace(state, posterior=post), losses
         return self._window(state, batches, W, key)
@@ -386,4 +408,8 @@ class GossipEngine:
             out["max_delay"] = self.max_delay
         if self._mesh is not None:
             out["consensus_shards"] = self.n_shards
+        if self.wire_dtype != "f32":
+            out["wire_dtype"] = self.wire_dtype
+        if self.hist_slots and wire_dtype_name(self.hist_dtype) != "f32":
+            out["history_dtype"] = wire_dtype_name(self.hist_dtype)
         return out

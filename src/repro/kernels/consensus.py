@@ -36,9 +36,21 @@ Flat-buffer layout contract (shared with ``core.flat.FlatPosterior``):
     (P fp32 lanes, leaf-major in layout order);
   * the caller's buffers are UNPADDED; kernels pad the lane dim up to a
     BLOCK multiple internally (mean pads 0.0, rho pads 1.0 so pad lanes keep
-    finite precision) and slice the pad back off before returning;
+    finite precision — softplus(1.0) ~ 1.31, so the pad precision ~0.58
+    stays finite and exactly representable under EVERY wire dtype,
+    including f16's narrow exponent range) and slice the pad back off
+    before returning;
   * keep BLOCK a multiple of 128 (TPU lane width); the last dim rides the
     lane dim, agents/neighbors ride sublanes.
+
+Wire-dtype compression (ROADMAP "Wire precision"): every kernel takes a
+static ``wire_dtype`` (default fp32).  The exchanged sufficient statistics
+(prec, prec*mu) are rounded through the wire dtype AT THE EXCHANGE BOUNDARY
+— immediately before the cross-agent contraction — and the contraction
+itself ACCUMULATES IN FP32 (``preferred_element_type``).  ``wire_dtype=
+jnp.float32`` is a structural no-op: ``core.numerics.wire_roundtrip``
+returns its input unchanged, so the f32 kernels are BITWISE identical to
+the pre-wire ones (pinned by tests/test_wire_dtype.py).
 
 Unfused, eq. (6) is ~6 elementwise HBM round-trips over tensors the size of
 the model; the consensus step is purely memory-bound, so fusing the whole
@@ -58,7 +70,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.numerics import softplus_inv
+from repro.core.numerics import (
+    canonical_wire_dtype,
+    softplus_inv,
+    wire_roundtrip,
+)
 from repro.kernels.dispatch import auto_interpret as _auto_interpret
 
 DEFAULT_BLOCK = 2048
@@ -76,21 +92,30 @@ def _pad_lanes(mean, rho, block):
     return mean, rho, p + pad
 
 
-def _consensus_kernel(w_ref, mean_ref, rho_ref, mean_out_ref, rho_out_ref):
+def _consensus_kernel(w_ref, mean_ref, rho_ref, mean_out_ref, rho_out_ref, *,
+                      wire_dtype):
     w = w_ref[...]  # [N, 1]
     mean = mean_ref[...]  # [N, BLOCK]
     rho = rho_ref[...]  # [N, BLOCK]
     sigma = jax.nn.softplus(rho)
     prec = 1.0 / (sigma * sigma)
-    wp = w * prec  # [N, BLOCK]
-    prec_out = jnp.sum(wp, axis=0)  # [BLOCK]
-    mean_out = jnp.sum(wp * mean, axis=0) / prec_out
+    if wire_dtype == jnp.float32:
+        # pre-wire op order, verbatim — f32 stays bitwise identical
+        wp = w * prec  # [N, BLOCK]
+        prec_out = jnp.sum(wp, axis=0)  # [BLOCK]
+        mean_out = jnp.sum(wp * mean, axis=0) / prec_out
+    else:
+        # exchange boundary: round (prec, prec*mu), accumulate fp32
+        prec_w = wire_roundtrip(prec, wire_dtype)
+        pm_w = wire_roundtrip(prec * mean, wire_dtype)
+        prec_out = jnp.sum(w * prec_w, axis=0)
+        mean_out = jnp.sum(w * pm_w, axis=0) / prec_out
     rho_out = softplus_inv(jax.lax.rsqrt(prec_out))
     mean_out_ref[...] = mean_out[None, :]
     rho_out_ref[...] = rho_out[None, :]
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block", "interpret", "wire_dtype"))
 def consensus_fused(
     w_row: jax.Array,  # [N]
     mean_stack: jax.Array,  # [N, P]
@@ -98,18 +123,23 @@ def consensus_fused(
     *,
     block: int = DEFAULT_BLOCK,
     interpret: bool | None = None,
+    wire_dtype=None,
 ) -> tuple[jax.Array, jax.Array]:
     """Fused consensus over a flat parameter block.  Returns (mean, rho) [P].
 
     ``interpret=None`` auto-dispatches (compiled on TPU, interpreter
-    elsewhere); pass an explicit bool to force either mode.
+    elsewhere); pass an explicit bool to force either mode.  ``wire_dtype``
+    rounds (prec, prec*mu) through the wire dtype at the exchange boundary
+    (module docstring); ``None``/f32 is the bitwise-identical uncompressed
+    path.
     """
     interpret = _auto_interpret(interpret)
+    wire_dtype = canonical_wire_dtype(wire_dtype)
     n, p = mean_stack.shape
     mean_stack, rho_stack, pp = _pad_lanes(mean_stack, rho_stack, block)
     grid = (pp // block,)
     mean_out, rho_out = pl.pallas_call(
-        _consensus_kernel,
+        functools.partial(_consensus_kernel, wire_dtype=wire_dtype),
         grid=grid,
         in_specs=[
             pl.BlockSpec((n, 1), lambda i: (0, 0)),  # w broadcast to all tiles
@@ -129,21 +159,27 @@ def consensus_fused(
     return mean_out[0, :p], rho_out[0, :p]
 
 
-def _consensus_network_kernel(w_ref, mean_ref, rho_ref, mean_out_ref, rho_out_ref):
+def _consensus_network_kernel(w_ref, mean_ref, rho_ref, mean_out_ref,
+                              rho_out_ref, *, wire_dtype):
     w = w_ref[...]  # [N, N], resident in VMEM for every tile
     mean = mean_ref[...]  # [N, BLOCK]
     rho = rho_ref[...]  # [N, BLOCK]
     sigma = jax.nn.softplus(rho)
     prec = 1.0 / (sigma * sigma)
+    # exchange boundary: every agent's (prec, prec*mu) contribution crosses
+    # through the wire dtype (structural no-op for f32)
+    prec_x = wire_roundtrip(prec, wire_dtype)
+    pm_x = wire_roundtrip(prec * mean, wire_dtype)
     # new_prec[i] = sum_j W[i,j] prec[j]: one MXU matmul covers every agent,
-    # so each [N, BLOCK] column tile is read from HBM exactly once.
-    new_prec = jnp.dot(w, prec, preferred_element_type=jnp.float32)
-    new_pm = jnp.dot(w, prec * mean, preferred_element_type=jnp.float32)
+    # so each [N, BLOCK] column tile is read from HBM exactly once; the
+    # contraction accumulates fp32 whatever the wire dtype.
+    new_prec = jnp.dot(w, prec_x, preferred_element_type=jnp.float32)
+    new_pm = jnp.dot(w, pm_x, preferred_element_type=jnp.float32)
     mean_out_ref[...] = new_pm / new_prec
     rho_out_ref[...] = softplus_inv(jax.lax.rsqrt(new_prec))
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block", "interpret", "wire_dtype"))
 def consensus_fused_network(
     W: jax.Array,  # [N, N] row-stochastic
     mean: jax.Array,  # [N, P] flat network posterior means
@@ -151,19 +187,23 @@ def consensus_fused_network(
     *,
     block: int = DEFAULT_BLOCK,
     interpret: bool | None = None,
+    wire_dtype=None,
 ) -> tuple[jax.Array, jax.Array]:
     """Eq. (6) for the WHOLE network in one ``pallas_call``.
 
     Returns (mean, rho), both [N, P].  One HBM pass: grid ``(P // BLOCK,)``,
     W stays in VMEM, each column tile of (mean, rho) is streamed through
-    VMEM once and the per-agent reduction runs on the MXU.
+    VMEM once and the per-agent reduction runs on the MXU.  ``wire_dtype``
+    rounds (prec, prec*mu) at the exchange boundary (accumulate fp32);
+    f32/None is bitwise the uncompressed kernel.
     """
     interpret = _auto_interpret(interpret)
+    wire_dtype = canonical_wire_dtype(wire_dtype)
     n, p = mean.shape
     mean, rho, pp = _pad_lanes(mean, rho, block)
     grid = (pp // block,)
     mean_out, rho_out = pl.pallas_call(
-        _consensus_network_kernel,
+        functools.partial(_consensus_network_kernel, wire_dtype=wire_dtype),
         grid=grid,
         in_specs=[
             pl.BlockSpec((n, n), lambda i: (0, 0)),  # W resident across tiles
@@ -184,7 +224,7 @@ def consensus_fused_network(
 
 
 def _consensus_masked_kernel(
-    w_ref, act_ref, mean_ref, rho_ref, mean_out_ref, rho_out_ref
+    w_ref, act_ref, mean_ref, rho_ref, mean_out_ref, rho_out_ref, *, wire_dtype
 ):
     w = w_ref[...]  # [N, N] effective window W-tilde, resident in VMEM
     act = act_ref[...]  # [N, 1] activity mask (1.0 = merges this window)
@@ -192,17 +232,20 @@ def _consensus_masked_kernel(
     rho = rho_ref[...]  # [N, BLOCK]
     sigma = jax.nn.softplus(rho)
     prec = 1.0 / (sigma * sigma)
-    # identical op sequence to _consensus_network_kernel -> active rows are
-    # bitwise-equal to the synchronous fused kernel
-    new_prec = jnp.dot(w, prec, preferred_element_type=jnp.float32)
-    new_pm = jnp.dot(w, prec * mean, preferred_element_type=jnp.float32)
+    # identical op sequence to _consensus_network_kernel (same exchange-
+    # boundary rounding) -> active rows are bitwise-equal to the synchronous
+    # fused kernel at every wire dtype; inactive rows never touch the wire
+    prec_x = wire_roundtrip(prec, wire_dtype)
+    pm_x = wire_roundtrip(prec * mean, wire_dtype)
+    new_prec = jnp.dot(w, prec_x, preferred_element_type=jnp.float32)
+    new_pm = jnp.dot(w, pm_x, preferred_element_type=jnp.float32)
     mean_out_ref[...] = jnp.where(act > 0, new_pm / new_prec, mean)
     rho_out_ref[...] = jnp.where(
         act > 0, softplus_inv(jax.lax.rsqrt(new_prec)), rho
     )
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block", "interpret", "wire_dtype"))
 def consensus_fused_masked(
     W: jax.Array,  # [N, N] effective window W-tilde (inactive rows = e_i)
     active: jax.Array,  # [N] bool/int/float activity mask
@@ -211,23 +254,27 @@ def consensus_fused_masked(
     *,
     block: int = DEFAULT_BLOCK,
     interpret: bool | None = None,
+    wire_dtype=None,
 ) -> tuple[jax.Array, jax.Array]:
     """Event-window eq. (6): masked network-wide consensus in ONE
     ``pallas_call``.
 
     Active rows compute the exact ``consensus_fused_network`` math on the
-    window's W-tilde; inactive rows pass (mean, rho) through untouched.
-    With ``active`` all-true and the same W this is bit-identical to
+    window's W-tilde (including its exchange-boundary ``wire_dtype``
+    rounding); inactive rows pass (mean, rho) through untouched.  With
+    ``active`` all-true and the same W this is bit-identical to
     ``consensus_fused_network`` — the gossip/synchronous equivalence the
-    tests pin.  Same layout/padding contract as the other kernels.
+    tests pin, at every wire dtype.  Same layout/padding contract as the
+    other kernels.
     """
     interpret = _auto_interpret(interpret)
+    wire_dtype = canonical_wire_dtype(wire_dtype)
     n, p = mean.shape
     mean, rho, pp = _pad_lanes(mean, rho, block)
     act = active.astype(jnp.float32)[:, None]
     grid = (pp // block,)
     mean_out, rho_out = pl.pallas_call(
-        _consensus_masked_kernel,
+        functools.partial(_consensus_masked_kernel, wire_dtype=wire_dtype),
         grid=grid,
         in_specs=[
             pl.BlockSpec((n, n), lambda i: (0, 0)),  # W resident across tiles
@@ -257,6 +304,8 @@ def _consensus_sparse_kernel(
     rho_out_ref,  # [1, BLOCK]
     acc_prec,  # VMEM scratch [1, BLOCK]
     acc_pm,  # VMEM scratch [1, BLOCK]
+    *,
+    wire_dtype,
 ):
     i = pl.program_id(0)
     d = pl.program_id(2)
@@ -268,9 +317,20 @@ def _consensus_sparse_kernel(
         acc_pm[...] = jnp.zeros_like(acc_pm)
 
     sigma = jax.nn.softplus(rho_ref[...])
-    wp = w / (sigma * sigma)  # zero-weight pad entries contribute nothing
-    acc_prec[...] += wp
-    acc_pm[...] += wp * mean_ref[...]
+    if wire_dtype == jnp.float32:
+        # pre-wire op order, verbatim (w/(sigma*sigma) fuses weight and
+        # precision) — f32 stays bitwise identical
+        wp = w / (sigma * sigma)  # zero-weight pad entries contribute nothing
+        acc_prec[...] += wp
+        acc_pm[...] += wp * mean_ref[...]
+    else:
+        # exchange boundary: the gathered neighbor tile's (prec, prec*mu)
+        # cross the wire rounded; the scratch accumulators stay fp32
+        prec = 1.0 / (sigma * sigma)
+        prec_x = wire_roundtrip(prec, wire_dtype)
+        pm_x = wire_roundtrip(prec * mean_ref[...], wire_dtype)
+        acc_prec[...] += w * prec_x
+        acc_pm[...] += w * pm_x
 
     @pl.when(d == pl.num_programs(2) - 1)
     def _finish():
@@ -279,7 +339,7 @@ def _consensus_sparse_kernel(
         rho_out_ref[...] = softplus_inv(jax.lax.rsqrt(prec_out))
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block", "interpret", "wire_dtype"))
 def consensus_fused_sparse(
     neighbors: jax.Array,  # [N, D] int32: neighbor ids, padded with self id
     weights: jax.Array,  # [N, D] fp32: W[i, neighbors[i]], padded with 0.0
@@ -288,6 +348,7 @@ def consensus_fused_sparse(
     *,
     block: int = DEFAULT_BLOCK,
     interpret: bool | None = None,
+    wire_dtype=None,
 ) -> tuple[jax.Array, jax.Array]:
     """Sparse-neighborhood eq. (6): each agent reads only deg(i) <= D
     neighbor tiles (D = max in-degree), not all N rows.
@@ -297,8 +358,12 @@ def consensus_fused_sparse(
     padded with the self id at weight 0, which reads a tile the agent already
     needs but adds nothing to the sums).  HBM traffic: sum_i deg(i) tiles vs
     N^2 for the dense kernel — the win for ring/grid/star topologies.
+    ``wire_dtype`` rounds each gathered tile's (prec, prec*mu) at the
+    exchange boundary (fp32 accumulators); f32/None is bitwise the
+    uncompressed kernel.
     """
     interpret = _auto_interpret(interpret)
+    wire_dtype = canonical_wire_dtype(wire_dtype)
     n, p = mean.shape
     d = neighbors.shape[1]
     mean, rho, pp = _pad_lanes(mean, rho, block)
@@ -320,7 +385,7 @@ def consensus_fused_sparse(
         ],
     )
     mean_out, rho_out = pl.pallas_call(
-        _consensus_sparse_kernel,
+        functools.partial(_consensus_sparse_kernel, wire_dtype=wire_dtype),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((n, pp), mean.dtype),
@@ -341,6 +406,8 @@ def _consensus_masked_sparse_kernel(
     rho_out_ref,  # [1, BLOCK]
     acc_prec,  # VMEM scratch [1, BLOCK]
     acc_pm,  # VMEM scratch [1, BLOCK]
+    *,
+    wire_dtype,
 ):
     i = pl.program_id(0)
     d = pl.program_id(2)
@@ -352,9 +419,17 @@ def _consensus_masked_sparse_kernel(
         acc_pm[...] = jnp.zeros_like(acc_pm)
 
     sigma = jax.nn.softplus(rho_ref[...])
-    wp = w / (sigma * sigma)
-    acc_prec[...] += wp
-    acc_pm[...] += wp * mean_ref[...]
+    if wire_dtype == jnp.float32:
+        # pre-wire op order, verbatim — f32 stays bitwise identical
+        wp = w / (sigma * sigma)
+        acc_prec[...] += wp
+        acc_pm[...] += wp * mean_ref[...]
+    else:
+        prec = 1.0 / (sigma * sigma)
+        prec_x = wire_roundtrip(prec, wire_dtype)
+        pm_x = wire_roundtrip(prec * mean_ref[...], wire_dtype)
+        acc_prec[...] += w * prec_x
+        acc_pm[...] += w * pm_x
 
     @pl.when(d == pl.num_programs(2) - 1)
     def _finish():
@@ -371,7 +446,7 @@ def _consensus_masked_sparse_kernel(
         )
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block", "interpret", "wire_dtype"))
 def consensus_fused_masked_sparse(
     neighbors: jax.Array,  # [N, D] int32 window neighbor ids (self-padded)
     weights: jax.Array,  # [N, D] fp32 w_eff[i, neighbors[i]] (0-padded)
@@ -381,17 +456,20 @@ def consensus_fused_masked_sparse(
     *,
     block: int = DEFAULT_BLOCK,
     interpret: bool | None = None,
+    wire_dtype=None,
 ) -> tuple[jax.Array, jax.Array]:
     """Active-edge eq. (6): CSR neighbor tables of the window's W-tilde
     (``core.flat.neighbor_tables(w_eff)``) + per-agent activity mask.
 
     Active agents accumulate only their deg(i) <= D fired-neighbor tiles;
     inactive agents copy their own (mean, rho) row bit-identically (their
-    table rows are all-self, so no foreign tile is ever gathered).  HBM
-    traffic scales with the window's active-edge fraction instead of N —
-    see ``launch.costmodel.gossip_window_roofline``.
+    table rows are all-self, so no foreign tile is ever gathered — and
+    never crosses the wire, whatever ``wire_dtype`` says).  HBM traffic
+    scales with the window's active-edge fraction instead of N — see
+    ``launch.costmodel.gossip_window_roofline``.
     """
     interpret = _auto_interpret(interpret)
+    wire_dtype = canonical_wire_dtype(wire_dtype)
     n, p = mean.shape
     d = neighbors.shape[1]
     mean, rho, pp = _pad_lanes(mean, rho, block)
@@ -413,7 +491,9 @@ def consensus_fused_masked_sparse(
         ],
     )
     mean_out, rho_out = pl.pallas_call(
-        _consensus_masked_sparse_kernel,
+        functools.partial(
+            _consensus_masked_sparse_kernel, wire_dtype=wire_dtype
+        ),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((n, pp), mean.dtype),

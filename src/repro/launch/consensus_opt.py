@@ -10,7 +10,12 @@ bytes) on every consensus.  Two optimizations:
    ``shard_map``: deg(i) x params bytes instead of N x params.  Exact
    (bitwise same math, different schedule).
 2. ``dtype`` compression — exchange (prec, prec*mu) in bf16: halves the
-   wire bytes; approximate (documented, validated to ~1e-2 relative).
+   wire bytes; approximate, error-bounded by ``core.numerics
+   .wire_error_bound`` (tests/test_wire_dtype.py).  Since the wire-dtype
+   PR this is a first-class knob (``InferenceSpec(wire_dtype=...)``) and
+   every cast site here routes through the ONE shared helper
+   ``core.numerics.wire_cast_pair`` (previously each function inlined its
+   own copy).
 3. ``consensus_ppermute_window`` — the SHARDED GOSSIP WINDOW (ROADMAP
    "Gossip scale-out"): one ``shard_map`` over the flat [N, P] buffers,
    sharded on the agent axis, that executes one ``gossip.clocks
@@ -34,6 +39,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.flat import XLA_BLOCK, _MAX_UNROLL, FlatPosterior
+from repro.core.numerics import canonical_wire_dtype, wire_cast_pair
 from repro.core.posterior import GaussianPosterior, softplus, softplus_inv
 
 try:  # jax >= 0.5 exports shard_map at the top level
@@ -46,6 +52,7 @@ def consensus_einsum(posts: GaussianPosterior, W: jax.Array,
                      wire_dtype=jnp.float32) -> GaussianPosterior:
     """Dense eq. (6) with optional wire-dtype compression of the exchanged
     sufficient statistics (prec, prec*mean)."""
+    wire_dtype = canonical_wire_dtype(wire_dtype)
 
     def combine(mean_stack, rho_stack):
         prec = 1.0 / jnp.square(softplus(rho_stack))
@@ -53,8 +60,7 @@ def consensus_einsum(posts: GaussianPosterior, W: jax.Array,
         # einsum (accumulate in fp32) — casting back before the contraction
         # would let XLA hoist the convert above the all-gather and the wire
         # would stay fp32 (measured: identical collective bytes).
-        pm = (prec * mean_stack).astype(wire_dtype)
-        prec_w = prec.astype(wire_dtype)
+        prec_w, pm = wire_cast_pair(prec, prec * mean_stack, wire_dtype)
         w_cast = W.astype(wire_dtype)
         new_prec = jnp.einsum("ij,j...->i...", w_cast, prec_w,
                               preferred_element_type=jnp.float32)
@@ -81,9 +87,9 @@ def consensus_einsum_flat(
     the agent dim sharded this still lowers to an all-gather, but of one
     contiguous buffer — a single collective per round (vs one per leaf), and
     the wire-dtype compression applies to the whole payload at once."""
+    wire_dtype = canonical_wire_dtype(wire_dtype)
     prec = 1.0 / jnp.square(softplus(posts.rho))
-    pm = (prec * posts.mean).astype(wire_dtype)
-    prec_w = prec.astype(wire_dtype)
+    prec_w, pm = wire_cast_pair(prec, prec * posts.mean, wire_dtype)
     w_cast = W.astype(wire_dtype)
     new_prec = jnp.einsum("ij,jp->ip", w_cast, prec_w,
                           preferred_element_type=jnp.float32)
@@ -116,6 +122,7 @@ def consensus_ppermute_ring_flat(
     two neighbor directions coincide and only the fwd direction is mixed,
     exactly like ``consensus_ppermute_pod``).
     """
+    wire_dtype = canonical_wire_dtype(wire_dtype)
     n = mesh.shape[axis]
     fwd = [(i, (i + 1) % n) for i in range(n)]  # receive from i-1
     bwd = [(i, (i - 1) % n) for i in range(n)]  # receive from i+1
@@ -135,8 +142,7 @@ def consensus_ppermute_ring_flat(
             w_prev = Wd[i, (i - 1) % n]
             w_next = Wd[i, (i + 1) % n] if n > 2 else jnp.asarray(0.0)
         prec = 1.0 / jnp.square(softplus(rho))
-        pm = (prec * mean).astype(wire_dtype)
-        pw = prec.astype(wire_dtype)
+        pw, pm = wire_cast_pair(prec, prec * mean, wire_dtype)
         prev_p = jax.lax.ppermute(pw, axis, fwd)
         prev_pm = jax.lax.ppermute(pm, axis, fwd)
         next_p = jax.lax.ppermute(pw, axis, bwd)
@@ -177,6 +183,7 @@ def consensus_ppermute_pod(
     dot legalization hoist converts above the all-gather; measured:
     identical f32 wire bytes).  Implemented for rings of any A (each agent
     mixes self + both neighbors); for A=2 both neighbors coincide."""
+    wire_dtype = canonical_wire_dtype(wire_dtype)
     n = mesh.shape[axis]
     fwd = [(i, (i + 1) % n) for i in range(n)]
     bwd = [(i, (i - 1) % n) for i in range(n)]
@@ -186,8 +193,7 @@ def consensus_ppermute_pod(
         i = jax.lax.axis_index(axis)
         prec = 1.0 / jnp.square(softplus(rho))
         pm = prec * mean
-        prec_w = prec.astype(wire_dtype)
-        pm_w = pm.astype(wire_dtype)
+        prec_w, pm_w = wire_cast_pair(prec, pm, wire_dtype)
         prev_p = jax.lax.ppermute(prec_w, axis, fwd).astype(jnp.float32)
         prev_pm = jax.lax.ppermute(pm_w, axis, fwd).astype(jnp.float32)
         w_self = Wd[i, i]
@@ -245,15 +251,18 @@ def window_shard_offsets(window, n_shards: int) -> tuple[int, ...]:
 
 
 @functools.lru_cache(maxsize=None)
-def _window_consensus_fn(mesh, axis, offsets, n, per, p, block):
+def _window_consensus_fn(mesh, axis, offsets, n, per, p, block, wire_dtype):
     """Build + cache the jitted shard_map program for one (mesh, schedule,
-    shape) signature.  The body mirrors ``core.flat
-    .consensus_flat_reference`` op for op (same elementwise chain, same
-    [*, N] x [N, cols] matmul contraction, same column blocking, same
-    activity select) so the sharded window is bit-identical to the masked
-    reference; only the data movement differs (buffers assembled from
-    neighbor-shard ppermutes instead of being resident)."""
+    shape, wire dtype) signature.  The body mirrors ``core.flat
+    .consensus_flat_reference`` op for op (same elementwise chain — wire
+    rounding included, same [*, N] x [N, cols] matmul contraction, same
+    column blocking, same activity select) so the sharded window is
+    bit-identical to the masked reference AT EVERY WIRE DTYPE; only the
+    data movement differs (buffers assembled from neighbor-shard ppermutes
+    instead of being resident — and at bf16/f16 the ppermuted payload
+    itself is wire-dtype, halving the ICI bytes per rotation)."""
     n_shards = mesh.shape[axis]
+    compressed = wire_dtype != jnp.float32
 
     def shard_fn(w_rows, act, mean_l, rho_l):
         # w_rows [per, N]: this shard's rows of W-tilde; mean_l/rho_l
@@ -261,6 +270,15 @@ def _window_consensus_fn(mesh, axis, offsets, n, per, p, block):
         i = jax.lax.axis_index(axis)
         prec = 1.0 / jnp.square(softplus(rho_l))
         pm = prec * mean_l
+        if compressed:
+            # exchange boundary: the wire payload is the rounded (prec,
+            # prec*mu).  The OWN block decodes the same rounded values the
+            # neighbors receive, so the assembled buffer is elementwise
+            # identical to the dense masked kernel's rounded buffer (the
+            # equivalence ladder stays bitwise per wire dtype).
+            prec_w, pm_w = wire_cast_pair(prec, pm, wire_dtype)
+            prec = prec_w.astype(jnp.float32)
+            pm = pm_w.astype(jnp.float32)
         # assemble the [N, P] sufficient-statistic buffers this shard's rows
         # read: own block always (self loops + intra-shard edges), one
         # ppermute rotation per fired cross-shard offset.  Rows of shards at
@@ -272,8 +290,14 @@ def _window_consensus_fn(mesh, axis, offsets, n, per, p, block):
         buf_pm = jax.lax.dynamic_update_slice(buf_pm, pm, (i * per, 0))
         for d in offsets:
             perm = [(s, (s + d) % n_shards) for s in range(n_shards)]
-            r_prec = jax.lax.ppermute(prec, axis, perm)
-            r_pm = jax.lax.ppermute(pm, axis, perm)
+            if compressed:
+                # the collective moves the COMPRESSED statistics (half the
+                # ICI bytes per rotation at bf16); decode fp32 on receipt
+                r_prec = jax.lax.ppermute(prec_w, axis, perm).astype(jnp.float32)
+                r_pm = jax.lax.ppermute(pm_w, axis, perm).astype(jnp.float32)
+            else:
+                r_prec = jax.lax.ppermute(prec, axis, perm)
+                r_pm = jax.lax.ppermute(pm, axis, perm)
             src0 = ((i - d) % n_shards) * per
             buf_prec = jax.lax.dynamic_update_slice(buf_prec, r_prec, (src0, 0))
             buf_pm = jax.lax.dynamic_update_slice(buf_pm, r_pm, (src0, 0))
@@ -325,6 +349,7 @@ def consensus_ppermute_window(
     axis: str = "agents",
     *,
     block: int | None = None,
+    wire_dtype=None,
 ) -> FlatPosterior:
     """Execute ONE gossip event window sharded over the agent axis.
 
@@ -339,7 +364,10 @@ def consensus_ppermute_window(
     path's full all-gather (``launch.costmodel.gossip_window_roofline``).
 
     Bit-identical to ``core.flat.consensus_flat_masked`` on the same
-    window (equivalence-ladder acceptance test in tests/test_gossip.py).
+    window AND the same ``wire_dtype`` (equivalence-ladder acceptance test
+    in tests/test_gossip.py / test_wire_dtype.py): at bf16/f16 the
+    ppermuted payload is the compressed (prec, prec*mu) — half the wire
+    bytes per rotation — decoded fp32 on receipt.
     Instant-delivery windows only: delayed windows (``window.max_lag > 0``)
     merge history slots and run the gather path in the engine.
     """
@@ -361,6 +389,7 @@ def consensus_ppermute_window(
     fn = _window_consensus_fn(
         mesh, axis, window_shard_offsets(window, n_shards), n, per, p,
         XLA_BLOCK if block is None else block,
+        canonical_wire_dtype(wire_dtype),
     )
     mean, rho = fn(
         jnp.asarray(window.w_eff, jnp.float32),
@@ -389,6 +418,7 @@ def consensus_ppermute_ring(
     sharded over ``axis``.  Wire bytes per agent: 2 x params (vs N x params
     for the dense all-gather) — the §Perf 'sparse consensus' optimization.
     """
+    wire_dtype = canonical_wire_dtype(wire_dtype)
     n = mesh.shape[axis]
     w_self, w_prev, w_next = ring_weights(n, self_weight)
     fwd = [(i, (i + 1) % n) for i in range(n)]  # receive from i-1
@@ -397,8 +427,7 @@ def consensus_ppermute_ring(
     def shard_fn(mean, rho):
         # per-shard leading agent dim == 1
         prec = 1.0 / jnp.square(softplus(rho))
-        pm = (prec * mean).astype(wire_dtype)
-        pw = prec.astype(wire_dtype)
+        pw, pm = wire_cast_pair(prec, prec * mean, wire_dtype)
         prev_p = jax.lax.ppermute(pw, axis, fwd)
         prev_pm = jax.lax.ppermute(pm, axis, fwd)
         next_p = jax.lax.ppermute(pw, axis, bwd)

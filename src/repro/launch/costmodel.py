@@ -25,12 +25,26 @@ from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 ATTN_KINDS = ("attn", "local_attn", "moe", "dec_attn")
 
 
+def _wire_bytes_per_el(wire_dtype: str) -> int:
+    """Bytes per exchanged scalar at a wire dtype (``core.numerics
+    .WIRE_DTYPES`` names).  Host-side mirror of ``numerics.wire_itemsize``
+    kept in plain ints so the cost model stays jax-free at call time."""
+    sizes = {"f32": 4, "bf16": 2, "f16": 2}
+    if wire_dtype not in sizes:
+        raise ValueError(
+            f"unknown wire_dtype {wire_dtype!r}; known: {sorted(sizes)}"
+        )
+    return sizes[wire_dtype]
+
+
 def consensus_roofline(
     n_agents: int,
     n_params: int,
     n_leaves: int,
     max_degree: int | None = None,
     bytes_per_el: int = 4,
+    *,
+    wire_dtype: str = "f32",
 ) -> dict[str, Any]:
     """Analytic HBM traffic of one consensus round (eq. 6), per execution
     strategy, for the memory-bound roofline.  Used by
@@ -55,7 +69,16 @@ def consensus_roofline(
 
     Returns bytes per strategy, the pass counts, and the roofline seconds at
     ``HBM_BW`` (single chip).
+
+    WIRE term (``wire_dtype``): with the agent axis sharded, eq. (6)
+    all-gathers BOTH sufficient statistics (prec, prec*mu) across agents;
+    at a compressed wire dtype the payload is cast at the exchange
+    boundary, so the collective bytes scale with ``wire_dtype``'s itemsize
+    — bf16 exactly halves them (asserted by unit test).  Reported in the
+    ``wire`` block; the HBM terms stay at ``bytes_per_el`` (the buffers
+    are fp32-resident, only the exchange compresses).
     """
+    wire_el = _wire_bytes_per_el(wire_dtype)
     row_bytes = n_params * bytes_per_el  # one agent, one buffer
     net_bytes = n_agents * row_bytes  # one buffer for the whole network
     touches_leaf_loop = 12.0  # ~6 round-trips over both buffers
@@ -86,7 +109,24 @@ def consensus_roofline(
             "flat_sparse": bytes_sparse / HBM_BW,
         },
         "model_speedup_fused_vs_leaf_loop": bytes_leaf_loop / bytes_fused,
+        # collective exchange of (prec, prec*mu) over a sharded agent axis:
+        # ring all-gather of both statistics = 2 x net x (N-1)/N per agent
+        # -> 2 x N x (N-1) x row bytes globally, at the WIRE itemsize
+        "wire": {
+            "dtype": wire_dtype,
+            "bytes_per_el": wire_el,
+            "collective_bytes": (
+                2.0 * n_agents * (n_agents - 1) * n_params * wire_el
+            ),
+            "collective_bytes_f32": (
+                2.0 * n_agents * (n_agents - 1) * n_params * 4
+            ),
+        },
     }
+    out["wire"]["model_saving_vs_f32"] = (
+        out["wire"]["collective_bytes_f32"] / out["wire"]["collective_bytes"]
+        if out["wire"]["collective_bytes"] else 1.0
+    )
     return out
 
 
@@ -101,6 +141,8 @@ def gossip_window_roofline(
     n_cross_offsets: int = 0,
     delay_depth: int = 0,
     n_stale_events: int = 0,
+    wire_dtype: str = "f32",
+    history_dtype: str = "f32",
 ) -> dict[str, Any]:
     """Analytic HBM traffic of ONE gossip event window (repro.gossip), for
     the active-edge masked consensus (``consensus_fused_masked_sparse``).
@@ -138,6 +180,15 @@ def gossip_window_roofline(
     buffer's RESIDENT footprint is ``hist_resident_bytes`` =
     ``2 x (delay_depth + 1) x N x P`` — the capacity planner's number, not
     a per-window traffic term.
+
+    WIRE term (``wire_dtype``): the ppermuted payload and the dense
+    all-gather both carry the (prec, prec*mu) statistics AT THE WIRE DTYPE
+    (the sharded window casts them at the exchange boundary), so every
+    ``ici_bytes`` entry scales with the wire itemsize — bf16 exactly
+    halves the interconnect bytes (asserted by unit test).  The HBM terms
+    stay at ``bytes_per_el`` (fp32-resident buffers); ``history_dtype``
+    independently sizes the ring's resident footprint and its per-window
+    traffic (bf16 halves the resident ring).
     """
     if n_merging is None:
         n_merging = n_participating
@@ -153,21 +204,27 @@ def gossip_window_roofline(
         )
     if delay_depth < 0 or n_stale_events < 0:
         raise ValueError("delay_depth and n_stale_events must be >= 0")
+    wire_el = _wire_bytes_per_el(wire_dtype)
+    hist_el = _wire_bytes_per_el(history_dtype)
     row_bytes = n_params * bytes_per_el
     net_bytes = n_agents * row_bytes
     # read mean+rho of participants, write mean+rho of merging agents
     bytes_window = 2.0 * n_participating * row_bytes + 2.0 * n_merging * row_bytes
     bytes_dense = 4.0 * net_bytes  # consensus_roofline flat_fused
-    # history ring: one (mean, rho) network write per window + one stale row
-    # pair read per delivered event
+    # history ring (at its RESIDENT dtype): one (mean, rho) network write
+    # per window + one stale row pair read per delivered event
+    hist_row = n_params * hist_el
+    hist_net = n_agents * hist_row
     bytes_history = (
-        2.0 * net_bytes + 2.0 * n_stale_events * row_bytes
+        2.0 * hist_net + 2.0 * n_stale_events * hist_row
         if delay_depth > 0 else 0.0
     )
     # interconnect: ppermute rotations vs the dense all-gather of both
-    # sufficient statistics over the agent axis (global bytes)
-    ici_ppermute = n_cross_offsets * 2.0 * net_bytes
-    ici_allgather = 2.0 * net_bytes * (n_shards - 1)
+    # sufficient statistics over the agent axis (global bytes, at the WIRE
+    # dtype — the payload is cast at the exchange boundary)
+    wire_net = n_agents * n_params * wire_el
+    ici_ppermute = n_cross_offsets * 2.0 * wire_net
+    ici_allgather = 2.0 * wire_net * (n_shards - 1)
     out = {
         "n_agents": n_agents,
         "n_params": n_params,
@@ -190,10 +247,12 @@ def gossip_window_roofline(
             bytes_dense / bytes_window if bytes_window else float("inf")
         ),
     }
+    out["wire_dtype"] = wire_dtype
     if delay_depth > 0:
         out["delay_depth"] = delay_depth
+        out["history_dtype"] = history_dtype
         out["hbm_bytes"]["history"] = bytes_history
-        out["hist_resident_bytes"] = 2.0 * (delay_depth + 1) * net_bytes
+        out["hist_resident_bytes"] = 2.0 * (delay_depth + 1) * hist_net
         out["roofline_seconds"]["history"] = bytes_history / HBM_BW
     if n_shards > 1:
         out["n_shards"] = n_shards

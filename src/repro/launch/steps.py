@@ -265,15 +265,16 @@ def make_local_step(
     return step_fn
 
 
-def make_consensus_step(cfg, W: jax.Array):
+def make_consensus_step(cfg, W: jax.Array, wire_dtype=None):
     """Standalone consensus (eq. 6) over the agent axis — the communication
     phase of a round, applied every u local steps by train.py.  Dispatches on
     the posterior type: a ``FlatPosterior`` runs the single fused
-    network-wide pass (Pallas kernel on TPU)."""
+    network-wide pass (Pallas kernel on TPU).  ``wire_dtype`` compresses
+    the exchanged (prec, prec*mu) — f32/None is bitwise uncompressed."""
     del cfg  # consensus is model-independent
 
     def step_fn(posterior: GaussianPosterior) -> GaussianPosterior:
-        return consensus_all_agents(posterior, W)
+        return consensus_all_agents(posterior, W, wire_dtype=wire_dtype)
 
     return step_fn
 

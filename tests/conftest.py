@@ -15,6 +15,12 @@ _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running test")
+    config.addinivalue_line(
+        "markers",
+        "multidevice: spawns an 8-virtual-device XLA subprocess "
+        "(deselected from the default tier-1 run via pytest.ini addopts; "
+        "CI runs `-m multidevice` as its own step)",
+    )
 
 
 def run_multidevice_subprocess(code: str, timeout: int = 420) -> None:

@@ -29,6 +29,7 @@ def _run(body: str) -> None:
 
 
 @pytest.mark.slow
+@pytest.mark.multidevice
 def test_consensus_einsum_sharded_matches_unsharded():
     _run("""
     from repro.core.posterior import GaussianPosterior, consensus_all_agents
@@ -55,6 +56,7 @@ def test_consensus_einsum_sharded_matches_unsharded():
 
 
 @pytest.mark.slow
+@pytest.mark.multidevice
 def test_consensus_ppermute_matches_einsum():
     # seed xfail removed: the failure was jax.shard_map missing on jax 0.4.x;
     # consensus_opt now falls back to jax.experimental.shard_map
@@ -89,6 +91,7 @@ def test_consensus_ppermute_matches_einsum():
 
 
 @pytest.mark.slow
+@pytest.mark.multidevice
 def test_consensus_ppermute_ring_flat_matches_reference():
     """The FLAT ppermute route (one shard_map over the [N, P] buffers, ring
     weights read from W rows) == the fused flat consensus reference — the
@@ -119,6 +122,7 @@ def test_consensus_ppermute_ring_flat_matches_reference():
 
 
 @pytest.mark.slow
+@pytest.mark.multidevice
 @pytest.mark.xfail(
     reason="pre-existing seed failure (numerical mismatch on the single-CPU-device substrate); identical at seed commit e353c71",
     strict=False,
@@ -163,6 +167,7 @@ def test_train_round_step_sharded_matches_single_device():
 
 
 @pytest.mark.slow
+@pytest.mark.multidevice
 def test_decode_step_sharded_matches_single_device():
     _run("""
     from repro.configs import get_config
@@ -200,6 +205,7 @@ def test_decode_step_sharded_matches_single_device():
 
 
 @pytest.mark.slow
+@pytest.mark.multidevice
 @pytest.mark.xfail(
     reason="pre-existing seed failure (numerical mismatch on the single-CPU-device substrate); identical at seed commit e353c71",
     strict=False,

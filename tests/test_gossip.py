@@ -990,6 +990,7 @@ def _run_sharded(body: str) -> None:
 
 
 @pytest.mark.slow
+@pytest.mark.multidevice
 def test_ppermute_window_bitwise_all_clocks_and_topologies():
     """Acceptance: consensus_ppermute_window == consensus_flat_masked
     BIT-identically for EVERY window of poisson / round_robin / trace
@@ -1047,6 +1048,7 @@ def test_ppermute_window_bitwise_all_clocks_and_topologies():
 
 
 @pytest.mark.slow
+@pytest.mark.multidevice
 def test_gossip_engine_ppermute_impl_bitwise_vs_masked():
     """Acceptance (engine level): a gossip session on
     InferenceSpec(consensus_impl="ppermute") over the 8-device agent mesh

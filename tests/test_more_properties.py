@@ -112,6 +112,109 @@ def test_init_posterior_sigma(sigma, p, seed):
     np.testing.assert_allclose(got, sigma, rtol=1e-4)
 
 
+# ---------------------------------------------------------------------------
+# gossip-clock properties (wire-dtype PR satellites)
+# ---------------------------------------------------------------------------
+
+
+def _random_row_stochastic(n, seed):
+    """A dense row-stochastic base W with self-loops (every off-diagonal a
+    potential gossip edge)."""
+    rng = np.random.default_rng(seed)
+    W = rng.random((n, n)) + 0.05
+    W = W / W.sum(1, keepdims=True)
+    return W
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(3, 7), st.integers(0, 200), st.integers(0, 60))
+def test_conserve_w_tilde_row_stochastic_for_arbitrary_subsets(
+    n, subset_seed, w_seed
+):
+    """Property: under the "conserve" rule, EVERY fired-edge subset yields
+    a row-stochastic W-tilde whose inactive rows are exactly e_i and whose
+    active rows keep the base weight on fired in-edges (idle in-edge mass
+    on self)."""
+    from repro.gossip.clocks import _directed_edges, window_from_events
+
+    W = _random_row_stochastic(n, w_seed)
+    edges = _directed_edges(W)
+    rng = np.random.default_rng(subset_seed)
+    fired = [e for e in edges if rng.random() < 0.4]
+    win = window_from_events(W, fired, e_max=max(len(edges), 1))
+    np.testing.assert_allclose(win.w_eff.sum(axis=1), 1.0, atol=1e-12)
+    assert (win.w_eff >= 0).all()
+    inactive = ~win.active
+    np.testing.assert_array_equal(win.w_eff[inactive], np.eye(n)[inactive])
+    for i in np.nonzero(win.active)[0]:
+        fired_in = {j for (d, j) in fired if d == i}
+        for j in fired_in:
+            assert win.w_eff[i, j] == W[i, j]  # base weight, exactly
+        idle_mass = sum(W[i, j] for j in range(n)
+                        if j != i and j not in fired_in)
+        np.testing.assert_allclose(
+            win.w_eff[i, i], W[i, i] + idle_mass, atol=1e-12
+        )
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 1000), st.integers(0, 40),
+       st.floats(0.1, 3.0, allow_nan=False))
+def test_event_window_stream_is_pure_function_of_seed_and_round(
+    seed, r, rate
+):
+    """Property: window(r) is a pure function of (clock seed, r) — two
+    independently constructed clocks replay the identical window, and
+    regenerating from ONE clock twice (memo evicted in between) is
+    bitwise identical."""
+    from repro.gossip.clocks import PoissonClock
+    from repro.core.graphs import bidirectional_ring_w
+
+    W = bidirectional_ring_w(6)
+    a = PoissonClock(W, rate=rate, seed=seed).window(r)
+    b = PoissonClock(W, rate=rate, seed=seed).window(r)
+    np.testing.assert_array_equal(a.edges, b.edges)
+    np.testing.assert_array_equal(a.weights, b.weights)
+    np.testing.assert_array_equal(a.active, b.active)
+    np.testing.assert_array_equal(a.w_eff, b.w_eff)
+    c = PoissonClock(W, rate=rate, seed=seed)
+    first = c.window(r)
+    c.window(r + 1)  # advance the one-slot memo so (r) is reconstructed
+    again = c.window(r)
+    assert again is not first  # really regenerated, not the memo
+    np.testing.assert_array_equal(first.edges, again.edges)
+    np.testing.assert_array_equal(first.w_eff, again.w_eff)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 500), st.integers(1, 500), st.integers(0, 12),
+       st.floats(0.5, 4.0, allow_nan=False))
+def test_failure_drop_decisions_independent_of_inner_clock(
+    seed_a, seed_delta, r, rate_b
+):
+    """Property: the failure_injected drop stream is salted on (outer seed,
+    0xFA11ED, r) ALONE — swapping the inner clock (different seed AND
+    rate) leaves the per-slot keep/drop prefix unchanged."""
+    from repro.core.graphs import complete_w
+    from repro.gossip.clocks import FailureInjectedClock, PoissonClock
+
+    W = complete_w(5)
+    drop = 0.5
+    inner_a = PoissonClock(W, rate=2.0, seed=seed_a)
+    inner_b = PoissonClock(W, rate=rate_b, seed=seed_a + seed_delta)
+    c_a = FailureInjectedClock(inner_a, drop_rate=drop, seed=7)
+    c_b = FailureInjectedClock(inner_b, drop_rate=drop, seed=7)
+    ev_a, ev_b = inner_a.window(r), inner_b.window(r)
+    mask = np.random.default_rng([7, 0xFA11ED, r]).random(
+        max(ev_a.n_events, ev_b.n_events)
+    ) >= drop
+    for ev, c in ((ev_a, c_a), (ev_b, c_b)):
+        kept = [tuple(e) for e, k in
+                zip(ev.edges[: ev.n_events].tolist(), mask) if k]
+        win = c.window(r)
+        assert kept == [tuple(e) for e in win.edges[: win.n_events].tolist()]
+
+
 def test_moe_dropless_at_high_capacity_property():
     """At capacity_factor high enough, NO assignment is dropped: the MoE
     output is independent of capacity_factor beyond that point."""
