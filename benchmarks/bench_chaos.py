@@ -1,0 +1,281 @@
+"""Chaos-harness smoke (`benchmarks/run.py chaos-smoke`).
+
+Five parts, mirroring what the ROADMAP Robustness section promises:
+
+1. **Combined chaos run** (the tentpole scenario): a Poisson ring under
+   agent churn (Markov crash/recover), link drops (``failure_injected``),
+   delivery latency (``delayed``) and payload corruption (NaN/Inf/huge
+   garbage on the wire), defended by ``fault_policy="quarantine"`` — every
+   trained-agent loss finite, every resident posterior finite
+   (``Session.health()`` all-ok: the injected garbage never propagates),
+   fault telemetry populated, one jitted call per window.
+2. **Strict counter-demo**: the SAME chaos with the undefended
+   ``fault_policy="strict"`` — the injected NaN/Inf reaches and poisons
+   agents (asserted: strictly fewer healthy posteriors than quarantine,
+   which keeps all N).
+3. **Zero-fault bitwise ladder**: with no fault model, the quarantined
+   session's trajectory must be BIT-identical to the strict session's on
+   the same spec — the guard is structurally free when healthy.
+4. **Consensus contraction under churn**: an lr=0 probe (local steps are
+   no-ops, only consensus acts) — the across-agent posterior spread must
+   contract over the run despite crash/recover churn, because quarantined
+   W-tilde rows stay row-stochastic (mass moves to self, never leaks).
+5. **Degradation-vs-fault-rate sweep**: the same ring at increasing crash
+   rates — uptime falls and merges thin out gracefully; losses stay
+   finite at every rate (no cliff, no NaN).
+
+Output: ``BENCH_chaos.json`` + the harness's ``name,us_per_call,derived``
+CSV rows.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+import numpy as np
+
+DEFAULT_JSON = "BENCH_chaos.json"
+
+_FAULTS = {
+    "crash_rate": 0.15,
+    "recover_rate": 0.5,
+    "corrupt_rate": 0.25,
+    "corrupt_kind": "mix",
+    "seed": 7,
+}
+
+
+def _chaos_spec(
+    n: int,
+    policy: str,
+    faults: dict | None,
+    n_rounds: int = 8,
+    lr: float = 1e-2,
+    delayed: bool = True,
+):
+    """The combined-chaos ExperimentSpec: Poisson activations, dropped
+    links, delivery latency, and (optionally) the agent fault model."""
+    from repro.api import (
+        DataSpec, ExperimentSpec, InferenceSpec, RunSpec, TopologySpec,
+    )
+
+    inner = {
+        "kind": "failure_injected",
+        "inner": {"kind": "poisson", "rate": 0.8, "seed": 1},
+        "drop_rate": 0.1,
+    }
+    clock: dict = (
+        {"kind": "delayed", "inner": inner,
+         "latency": {"kind": "geometric", "p": 0.5, "max_delay": 2,
+                     "seed": 5}}
+        if delayed else dict(inner)
+    )
+    if faults is not None:
+        clock["faults"] = dict(faults)
+    return ExperimentSpec(
+        topology=TopologySpec.gossip("bidirectional_ring", {"n": n},
+                                     clock=clock),
+        data=DataSpec(
+            dataset_params=dict(n_classes=3, dim=8, n_train_per_class=30),
+            partition="iid", partition_params=dict(n_agents=n),
+            batch_size=4, local_updates=2,
+        ),
+        inference=InferenceSpec(hidden=8, depth=1, lr=lr,
+                                fault_policy=policy),
+        run=RunSpec(n_rounds=n_rounds, seed=0),
+    )
+
+
+def _combined_chaos(n: int = 6, n_rounds: int = 8) -> dict:
+    from repro.api import build_session
+
+    s = build_session(_chaos_spec(n, "quarantine", _FAULTS,
+                                  n_rounds=n_rounds))
+    t0 = time.perf_counter()
+    recs = [s.round()]
+    compile_us = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    for _ in range(n_rounds - 1):
+        recs.append(s.round())
+    wall_us = (time.perf_counter() - t0) * 1e6
+    # every reported (trained-agent) loss finite; idle/crashed windows may
+    # legitimately report None
+    losses = [r["loss"] for r in recs if r["loss"] is not None]
+    assert losses and all(np.isfinite(v) for v in losses), \
+        f"non-finite chaos losses: {losses}"
+    health = s.health()
+    assert health["all_ok"], \
+        f"quarantine let garbage reach a resident posterior: {health}"
+    assert s.engine.n_traces == 1, "guarded window retraced"
+    tel = s.evaluate(n_mc=1)
+    faults = tel["faults"]
+    assert faults["quarantined"]["total"] > 0, \
+        "chaos run quarantined nothing — the injection is not exercising " \
+        "the guard"
+    assert any(r.get("n_crashed", 0) > 0 for r in recs), \
+        "chaos run never crashed an agent"
+    return {
+        "n_agents": n,
+        "windows": int(tel["windows"]),
+        "final_loss": losses[-1],
+        "n_crashed_per_round": [int(r.get("n_crashed", 0)) for r in recs],
+        "health": health,
+        "faults": faults,
+        "staleness": tel["staleness"],
+        "merges": tel["merges"],
+        "n_traces": int(s.engine.n_traces),
+        "compile_us": compile_us,
+        "wall_us_per_window": wall_us / (n_rounds - 1),
+    }
+
+
+def _strict_poison_demo(n: int = 6, n_rounds: int = 8) -> dict:
+    """The undefended baseline on the same chaos: injected garbage
+    propagates through the trusting consensus and poisons posteriors."""
+    from repro.api import build_session
+
+    s = build_session(_chaos_spec(n, "strict", _FAULTS, n_rounds=n_rounds))
+    for _ in range(n_rounds):
+        s.round()
+    health = s.health()
+    assert health["n_healthy"] < n, (
+        "strict consensus survived the corruption injection — the chaos "
+        "scenario is too weak to demonstrate the failure mode"
+    )
+    return {"n_healthy": health["n_healthy"], "n_agents": n,
+            "ok": health["ok"]}
+
+
+def _zero_fault_bitwise(n: int = 6, n_rounds: int = 5) -> dict:
+    """No fault model: quarantine must be bitwise the strict trajectory
+    (both on the instant and the delayed clock paths)."""
+    from repro.api import build_session
+
+    out = {}
+    for delayed in (False, True):
+        posts = {}
+        for policy in ("strict", "quarantine"):
+            s = build_session(_chaos_spec(n, policy, None,
+                                          n_rounds=n_rounds,
+                                          delayed=delayed))
+            for _ in range(n_rounds):
+                s.round()
+            posts[policy] = s.posterior()
+        np.testing.assert_array_equal(
+            np.asarray(posts["strict"].mean),
+            np.asarray(posts["quarantine"].mean),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(posts["strict"].rho),
+            np.asarray(posts["quarantine"].rho),
+        )
+        out["delayed" if delayed else "instant"] = True
+    return out
+
+
+def _contraction_probe(n: int = 6, n_rounds: int = 10) -> dict:
+    """lr=0: only the consensus acts.  Quarantined churned consensus must
+    still CONTRACT the across-agent spread — the conserve rule keeps every
+    W-tilde row row-stochastic, so averaging never diverges."""
+    from repro.api import build_session
+
+    faults = dict(_FAULTS, corrupt_rate=0.0)  # churn-only probe
+    spec = _chaos_spec(n, "quarantine", faults, n_rounds=n_rounds, lr=0.0,
+                       delayed=False)
+    spec = dataclasses.replace(
+        spec, inference=dataclasses.replace(spec.inference, shared_init=False)
+    )
+    s = build_session(spec)
+    mean0 = np.asarray(s.posterior().mean)
+    spread_start = float(np.max(np.ptp(mean0, axis=0)))
+    for _ in range(n_rounds):
+        s.round()
+    mean1 = np.asarray(s.posterior().mean)
+    spread_end = float(np.max(np.ptp(mean1, axis=0)))
+    assert spread_end < spread_start, (
+        f"churned quarantined consensus failed to contract: "
+        f"{spread_start} -> {spread_end}"
+    )
+    return {"spread_start": spread_start, "spread_end": spread_end,
+            "contraction": spread_end / spread_start}
+
+
+def _fault_rate_sweep(n: int = 6, n_rounds: int = 8) -> list[dict]:
+    from repro.api import build_session
+
+    out = []
+    for crash_rate in (0.0, 0.1, 0.3):
+        faults = dict(_FAULTS, crash_rate=crash_rate)
+        s = build_session(_chaos_spec(n, "quarantine", faults,
+                                      n_rounds=n_rounds))
+        losses = []
+        for _ in range(n_rounds):
+            rec = s.round()
+            if rec["loss"] is not None:
+                losses.append(rec["loss"])
+        assert losses and all(np.isfinite(v) for v in losses), \
+            f"non-finite losses at crash_rate={crash_rate}"
+        assert s.health()["all_ok"], \
+            f"unhealthy posterior at crash_rate={crash_rate}"
+        tel = s.evaluate(n_mc=1)
+        out.append({
+            "crash_rate": crash_rate,
+            "final_loss": losses[-1],
+            "uptime_frac_mean": tel["faults"].get("uptime", {}).get(
+                "frac_mean", 1.0),
+            "merges_total": tel["merges"]["total"],
+            "quarantined_total": tel["faults"].get("quarantined", {}).get(
+                "total", 0),
+            "avg_acc": tel["avg_acc"],
+        })
+    # graceful degradation: more churn => fewer windows up, fewer merges
+    assert out[0]["merges_total"] >= out[-1]["merges_total"], \
+        "crash churn did not thin the merge count"
+    return out
+
+
+def run(json_out: str | None = DEFAULT_JSON) -> dict:
+    import jax
+
+    chaos = _combined_chaos()
+    print(f"chaos_combined,{chaos['wall_us_per_window']:.1f},"
+          f"windows={chaos['windows']};loss={chaos['final_loss']:.4f};"
+          f"quarantined={chaos['faults']['quarantined']['total']};"
+          f"healthy={chaos['health']['n_healthy']}/{chaos['n_agents']};"
+          f"traces={chaos['n_traces']}")
+    strict = _strict_poison_demo()
+    print(f"chaos_strict_poison,0.0,"
+          f"healthy={strict['n_healthy']}/{strict['n_agents']}")
+    bitwise = _zero_fault_bitwise()
+    print(f"chaos_zero_fault_bitwise,0.0,"
+          f"instant={int(bitwise['instant'])};"
+          f"delayed={int(bitwise['delayed'])}")
+    contraction = _contraction_probe()
+    print(f"chaos_contraction,0.0,"
+          f"ratio={contraction['contraction']:.4f}")
+    sweep = _fault_rate_sweep()
+    for rec in sweep:
+        print(f"chaos_rate[c={rec['crash_rate']}],0.0,"
+              f"loss={rec['final_loss']:.4f};"
+              f"uptime={rec['uptime_frac_mean']:.3f};"
+              f"merges={rec['merges_total']};"
+              f"quarantined={rec['quarantined_total']}")
+    doc = {
+        "benchmark": "gossip_chaos_harness",
+        "backend": jax.default_backend(),
+        "combined_chaos": chaos,
+        "strict_poison_demo": strict,
+        "zero_fault_bitwise": bitwise,
+        "contraction_probe": contraction,
+        "fault_rate_sweep": sweep,
+    }
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"# wrote {json_out}")
+    return doc
+
+
+if __name__ == "__main__":
+    run()

@@ -31,6 +31,14 @@ Subcommands:
             shard count — run under
             XLA_FLAGS=--xla_force_host_platform_device_count=8 to cover
             S>1); emits BENCH_gossip.json
+  run.py chaos-smoke [--json-out F]              fault-tolerance chaos
+            harness: combined crash/recover churn + link drops + delivery
+            latency + NaN/Inf/huge payload corruption under
+            fault_policy="quarantine" (healthy posteriors asserted), the
+            strict counter-demo (corruption poisons), the zero-fault
+            quarantine==strict bitwise ladder, an lr=0 consensus
+            contraction probe under churn, and a degradation-vs-crash-rate
+            sweep; emits BENCH_chaos.json
 """
 from __future__ import annotations
 
@@ -40,6 +48,7 @@ import sys
 import traceback
 
 from benchmarks import (
+    bench_chaos,
     bench_consensus,
     bench_gossip,
     calibration,
@@ -124,11 +133,14 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument(
         "cmd", nargs="?",
-        choices=["figures", "bench", "api-smoke", "gossip-smoke"],
+        choices=["figures", "bench", "api-smoke", "gossip-smoke",
+                 "chaos-smoke"],
         default="figures",
         help="figures (default): paper figures; bench: consensus perf "
         "sweep; api-smoke: declarative-API smoke; gossip-smoke: async "
-        "gossip runtime smoke (all-active equivalence + Poisson run)",
+        "gossip runtime smoke (all-active equivalence + Poisson run); "
+        "chaos-smoke: fault-tolerance chaos harness (churn + corruption "
+        "under quarantine)",
     )
     ap.add_argument("--only", nargs="*", choices=list(ALL), default=None)
     ap.add_argument(
@@ -147,6 +159,9 @@ def main(argv=None) -> None:
         return
     if args.cmd == "gossip-smoke":
         bench_gossip.run(json_out=args.json_out or bench_gossip.DEFAULT_JSON)
+        return
+    if args.cmd == "chaos-smoke":
+        bench_chaos.run(json_out=args.json_out or bench_chaos.DEFAULT_JSON)
         return
     if args.cmd == "bench":
         bench_consensus.run(

@@ -122,7 +122,12 @@ class Session:
         ``local_policy="active"``) reports ``loss=None`` / ``n_trained=0``
         instead of silently writing NaN into the history; for the
         synchronous engines a NaN loss stays a loud NaN (divergence
-        signal)."""
+        signal).
+
+        Fault-aware engines (a gossip clock with a ``"faults"`` model)
+        additionally report ``n_crashed`` — agents down this window.  A
+        crashed agent skips local training, so its NaN sentinel loss is
+        already excluded from the ``loss`` mean like any idle agent's."""
         r = self.round_idx
         if W is None:
             W = self._spec_w_schedule()(r)
@@ -138,7 +143,11 @@ class Session:
             loss = float(np.nanmean(losses)) if n_trained else None
         else:
             loss = float(losses.mean())
-        return {"round": self.round_idx, "loss": loss, "n_trained": n_trained}
+        rec = {"round": self.round_idx, "loss": loss, "n_trained": n_trained}
+        crashed = getattr(self.engine, "last_crashed", None)
+        if crashed is not None:
+            rec["n_crashed"] = int(np.asarray(crashed).sum())
+        return rec
 
     def run(
         self,
@@ -207,6 +216,34 @@ class Session:
         return mc_predict(
             post, self.model.logits_fn, jnp.asarray(x), key, n_mc=n_mc,
         )
+
+    def health(self) -> dict:
+        """Per-agent posterior health probe (ROADMAP "Robustness").
+
+        Flat BbB posteriors run the same finiteness / positivity /
+        magnitude validity check the quarantine guard applies at the
+        consensus exchange boundary (``core.flat.payload_validity``), so
+        ``ok[i]`` is exactly "agent i's posterior would be accepted by a
+        quarantined peer".  Other engines (conjugate linreg) fall back to
+        an all-leaves-finite probe.  Pure read — no state is modified."""
+        post = self.posterior()
+        from repro.core.flat import FlatPosterior, payload_validity
+
+        if isinstance(post, FlatPosterior):
+            ok = np.asarray(payload_validity(post.mean, post.rho))
+        else:
+            flags = [
+                np.isfinite(
+                    np.asarray(leaf).reshape(np.asarray(leaf).shape[0], -1)
+                ).all(axis=1)
+                for leaf in jax.tree.leaves(post)
+            ]
+            ok = np.logical_and.reduce(flags)
+        return {
+            "ok": [bool(v) for v in ok],
+            "n_healthy": int(ok.sum()),
+            "all_ok": bool(ok.all()),
+        }
 
     def evaluate(self, n_mc: int = 4, key=None) -> dict:
         """Held-out test metrics per agent: MC-predictive accuracy for

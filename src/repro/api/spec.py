@@ -342,6 +342,18 @@ class InferenceSpec:
     stores the delivery-latency [K, N, P] posterior history ring in a
     narrower resident dtype (halving its HBM footprint at bf16); only
     meaningful with a delayed gossip clock.
+
+    ``fault_policy`` picks the consensus defense against corrupted
+    exchange payloads (ROADMAP "Robustness"):
+      ``strict``      trust every incoming contribution verbatim (default;
+                      an injected NaN/Inf poisons every reachable agent —
+                      the undefended failure mode);
+      ``quarantine``  validate every incoming (prec, prec*mu) contribution
+                      at the exchange boundary (finite, prec > 0, magnitude
+                      bound — ``core.flat.payload_validity``), drop invalid
+                      ones and reassign their W-tilde row mass to self.
+                      With zero faults the quarantined path is BITWISE
+                      identical to strict on every consensus impl.
     """
 
     method: str = "bbb"
@@ -360,6 +372,7 @@ class InferenceSpec:
     consensus_shards: int | None = None  # ppermute only; None = auto
     wire_dtype: str = "f32"  # f32 | bf16 | f16: consensus exchange precision
     history_dtype: str | None = None  # delayed gossip ring residency (None=f32)
+    fault_policy: str = "strict"  # strict | quarantine: exchange validation
     prior_var: float = 0.5  # conjugate_linreg prior N(0, prior_var I)
 
     def validate(self) -> None:
@@ -395,6 +408,17 @@ class InferenceSpec:
             raise ValueError(
                 "wire_dtype applies to the mean-field consensus exchange; "
                 "the conjugate_linreg engine would silently ignore it"
+            )
+        if self.fault_policy not in ("strict", "quarantine"):
+            raise ValueError(
+                f"unknown fault_policy {self.fault_policy!r}; known: "
+                "strict | quarantine"
+            )
+        if self.fault_policy == "quarantine" and self.consensus != "gaussian":
+            raise ValueError(
+                "fault_policy='quarantine' validates the gaussian (prec, "
+                f"prec*mu) exchange; consensus={self.consensus!r} has no "
+                "quarantined path and would silently ignore it"
             )
         if self.consensus_shards is not None:
             if self.consensus_shards <= 0:
@@ -467,6 +491,13 @@ class ExperimentSpec:
                 "history ring and requires a TopologySpec(kind='gossip') "
                 "with a delayed clock (it would be silently ignored "
                 "otherwise)"
+            )
+        if (self.inference.fault_policy != "strict"
+                and self.topology.kind != "gossip"):
+            raise ValueError(
+                "fault_policy='quarantine' guards the gossip consensus "
+                "exchange and requires a TopologySpec(kind='gossip') (the "
+                "synchronous engines have no exchange boundary to validate)"
             )
         if self.inference.consensus_impl != "auto":
             if self.topology.kind != "gossip":

@@ -632,6 +632,331 @@ def _sparse_reference(mean, rho, neighbors, weights, block: int = XLA_BLOCK,
     )
 
 
+# ---------------------------------------------------------------------------
+# Quarantine guard: fault-tolerant consensus (ROADMAP "Robustness")
+# ---------------------------------------------------------------------------
+
+# An exchanged |prec| or |prec*mu| lane above this is garbage regardless of
+# finiteness (the "huge" corruption kind stays finite on purpose): a prec of
+# 1e20 is a sigma of 1e-10 — far outside any posterior this runtime reaches.
+QUARANTINE_BOUND = 1e20
+
+
+def payload_validity(
+    mean: jax.Array,
+    rho: jax.Array,
+    *,
+    wire_dtype=None,
+    bound: float = QUARANTINE_BOUND,
+    mode: str | None = None,
+    block: int | None = None,
+) -> jax.Array:
+    """[N] bool: is each agent's exchanged (prec, prec*mu) payload sane?
+
+    The check runs ON THE WIRE REPRESENTATION — the rounded statistics a
+    receiver actually sees (``wire_roundtrip``; structural no-op at f32):
+    every lane must be finite, ``prec`` strictly positive, and both
+    magnitudes within ``bound``.  This is the exchange-boundary guard the
+    quarantined consensus wrappers apply to every incoming contribution; a
+    single NaN/Inf/huge lane flags the whole agent (one poisoned lane
+    already ruins its row of eq. (6)).
+
+    mode: None auto (Pallas on TPU, XLA elsewhere) | "xla" | "pallas" |
+    "interpret" — the fused kernel is pinned bit-equal to the reference.
+    """
+    wire_dtype = canonical_wire_dtype(wire_dtype)
+    if mode is None:
+        mode = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if mode == "xla":
+        prec = 1.0 / jnp.square(softplus(rho))
+        prec_x = wire_roundtrip(prec, wire_dtype)
+        pm_x = wire_roundtrip(prec * mean, wire_dtype)
+        ok = (
+            jnp.isfinite(prec_x)
+            & (prec_x > 0.0)
+            & (prec_x <= bound)
+            & jnp.isfinite(pm_x)
+            & (jnp.abs(pm_x) <= bound)
+        )
+        return jnp.all(ok, axis=-1)
+    if mode in ("pallas", "interpret"):
+        from repro.kernels.consensus import DEFAULT_BLOCK, payload_validity_fused
+
+        return payload_validity_fused(
+            mean, rho,
+            bound=bound,
+            block=(DEFAULT_BLOCK if block is None else block),
+            interpret=(True if mode == "interpret" else None),
+            wire_dtype=wire_dtype,
+        )
+    raise ValueError(f"unknown payload_validity mode {mode!r}")
+
+
+def quarantine_w(W: jax.Array, valid: jax.Array) -> jax.Array:
+    """Zero every column of an invalid source and move the dropped row mass
+    onto self — rows stay row-stochastic, mirroring the clock layer's
+    ``"conserve"`` rule for crashed agents.  The self column survives even
+    for an invalid agent (its own row is restored post-consensus anyway).
+    With ``valid`` all-True the result is value-identical to ``W``."""
+    n = W.shape[0]
+    eye = jnp.eye(n, dtype=bool)
+    keep = valid[None, :] | eye
+    Wk = jnp.where(keep, W, 0.0)
+    dropped = jnp.sum(W - Wk, axis=1)
+    return Wk.at[jnp.arange(n), jnp.arange(n)].add(dropped)
+
+
+def _sanitized_sources(posts, mean_src, rho_src, valid_src, valid_self):
+    """Exchange-side (mean, rho) with every invalid payload replaced by a
+    finite placeholder.  Zeroing an invalid source's W column is NOT enough:
+    ``0 * NaN = NaN`` still poisons the contraction, so the buffer rows
+    behind zeroed weights must be finite too.  A corrupted-but-healthy
+    sender falls back to its TRUE resident statistics (its self term stays
+    truthful); an agent whose resident state is itself garbage gets a
+    neutral (0, rho=1) row that only ever multiplies zero weight."""
+    v_src = valid_src[:, None]
+    v_self = valid_self[:, None]
+    safe_mean = jnp.where(v_self, posts.mean, 0.0)
+    safe_rho = jnp.where(v_self, posts.rho, 1.0)
+    mean_x = jnp.where(v_src, mean_src, safe_mean)
+    rho_x = jnp.where(v_src, rho_src, safe_rho)
+    return mean_x, rho_x
+
+
+def consensus_flat_masked_quarantined(
+    posts: FlatPosterior,
+    W: jax.Array,
+    active: jax.Array,
+    *,
+    mean_src: jax.Array | None = None,
+    rho_src: jax.Array | None = None,
+    mode: str | None = None,
+    block: int | None = None,
+    mesh: Any = None,
+    axis: str = "agents",
+    window: Any = None,
+    wire_dtype=None,
+    bound: float = QUARANTINE_BOUND,
+) -> tuple[FlatPosterior, jax.Array]:
+    """Quarantine-guarded ``consensus_flat_masked``: validate every incoming
+    contribution at the exchange boundary, drop invalid ones, move their row
+    mass to self.  Returns ``(posterior, valid_src [N] bool)``.
+
+    ``mean_src``/``rho_src`` are the statistics agents actually TRANSMIT
+    (default: the resident ``posts`` buffers) — the fault-injection hook:
+    the engine passes corrupted copies here while ``posts`` stays the
+    resident truth.  The guard:
+
+    * ``valid_src`` — wire-payload sanity of each transmission
+      (``payload_validity``); invalid sources are dropped from every row
+      (``quarantine_w``) and their buffer rows sanitized (``0 * NaN = NaN``
+      would otherwise leak through the matmul);
+    * a corrupted sender still MERGES (it is a bad transmitter, not a bad
+      receiver): its own row mixes its true self term with its valid
+      in-edges;
+    * an agent whose RESIDENT state is invalid is excluded from merging
+      and passes through unchanged (``Session.health`` flags it).
+
+    With zero faults (all payloads valid) every branch is a value-identity
+    (``where(True, x, .) = x``, ``W + 0 = W``), so the output is BITWISE
+    identical to the unguarded path on every mode — the equivalence-ladder
+    rung ``fault_policy="quarantine"`` == ``"strict"``.
+    """
+    mean_src = posts.mean if mean_src is None else mean_src
+    rho_src = posts.rho if rho_src is None else rho_src
+    vmode = mode if mode in ("pallas", "interpret") else "xla"
+    valid_src = payload_validity(
+        mean_src, rho_src, wire_dtype=wire_dtype, bound=bound, mode=vmode
+    )
+    valid_self = payload_validity(
+        posts.mean, posts.rho, wire_dtype=wire_dtype, bound=bound, mode=vmode
+    )
+    mean_x, rho_x = _sanitized_sources(
+        posts, mean_src, rho_src, valid_src, valid_self
+    )
+    posts_x = FlatPosterior(mean=mean_x, rho=rho_x, layout=posts.layout)
+    W_g = quarantine_w(jnp.asarray(W, COMPUTE_DTYPE), valid_src)
+    act_g = (active > 0) & valid_self
+    if mode == "ppermute":
+        from repro.launch.consensus_opt import consensus_ppermute_window
+
+        if mesh is None or window is None:
+            raise ValueError(
+                "consensus_flat_masked_quarantined(mode='ppermute') needs "
+                "mesh= and window="
+            )
+        out = consensus_ppermute_window(
+            posts_x, window, mesh, axis,
+            block=(XLA_BLOCK if block is None else block),
+            wire_dtype=wire_dtype,
+            w_eff=W_g, active=act_g,
+        )
+    else:
+        out = consensus_flat_masked(
+            posts_x, W_g, act_g,
+            mode=mode, block=block, wire_dtype=wire_dtype,
+        )
+    v_self = valid_self[:, None]
+    return (
+        FlatPosterior(
+            mean=jnp.where(v_self, out.mean, posts.mean),
+            rho=jnp.where(v_self, out.rho, posts.rho),
+            layout=posts.layout,
+        ),
+        valid_src,
+    )
+
+
+def consensus_flat_masked_sparse_quarantined(
+    posts: FlatPosterior,
+    neighbors: jax.Array,
+    weights: jax.Array,
+    active: jax.Array,
+    *,
+    mean_src: jax.Array | None = None,
+    rho_src: jax.Array | None = None,
+    mode: str | None = None,
+    block: int | None = None,
+    wire_dtype=None,
+    bound: float = QUARANTINE_BOUND,
+) -> tuple[FlatPosterior, jax.Array]:
+    """Quarantine-guarded ``consensus_flat_masked_sparse``: the CSR-table
+    form of the dense guard.  Table STRUCTURE stays static (same neighbor
+    ids — gathering a sanitized zero-weight row is harmless); only the
+    weights adjust in-graph: invalid non-self slots drop to 0.0 and each
+    row's dropped mass lands on its real self slot.  Zero faults is a
+    value-identity, as in the dense wrapper."""
+    mean_src = posts.mean if mean_src is None else mean_src
+    rho_src = posts.rho if rho_src is None else rho_src
+    vmode = mode if mode in ("pallas", "interpret") else "xla"
+    valid_src = payload_validity(
+        mean_src, rho_src, wire_dtype=wire_dtype, bound=bound, mode=vmode
+    )
+    valid_self = payload_validity(
+        posts.mean, posts.rho, wire_dtype=wire_dtype, bound=bound, mode=vmode
+    )
+    mean_x, rho_x = _sanitized_sources(
+        posts, mean_src, rho_src, valid_src, valid_self
+    )
+    n = posts.mean.shape[0]
+    rows = jnp.arange(n, dtype=neighbors.dtype)[:, None]
+    self_mask = neighbors == rows
+    keep = valid_src[neighbors] | self_mask
+    wts_k = jnp.where(keep, weights, 0.0)
+    dropped = jnp.sum(weights - wts_k, axis=1)
+    # each row's REAL self entry (nonzero weight; pad slots are self at 0.0
+    # and must not receive mass) absorbs the dropped in-weights
+    self_slot = jnp.argmax(self_mask & (weights > 0.0), axis=1)
+    wts_g = wts_k.at[jnp.arange(n), self_slot].add(dropped)
+    act_g = (active > 0) & valid_self
+    out = consensus_flat_masked_sparse(
+        FlatPosterior(mean=mean_x, rho=rho_x, layout=posts.layout),
+        neighbors, wts_g, act_g,
+        mode=mode, block=block, wire_dtype=wire_dtype,
+    )
+    v_self = valid_self[:, None]
+    return (
+        FlatPosterior(
+            mean=jnp.where(v_self, out.mean, posts.mean),
+            rho=jnp.where(v_self, out.rho, posts.rho),
+            layout=posts.layout,
+        ),
+        valid_src,
+    )
+
+
+def consensus_flat_delayed_quarantined(
+    posts: FlatPosterior,
+    W: jax.Array,
+    active: jax.Array,
+    edges: jax.Array,
+    weights: jax.Array,
+    lags: jax.Array,
+    hist_mean: jax.Array,
+    hist_rho: jax.Array,
+    round_idx: jax.Array,
+    *,
+    corrupt: jax.Array | None = None,
+    fill_mean: jax.Array | None = None,
+    fill_rho: jax.Array | None = None,
+    wire_dtype=None,
+    bound: float = QUARANTINE_BOUND,
+) -> tuple[FlatPosterior, jax.Array]:
+    """Quarantine-guarded ``consensus_flat_delayed``: validate each DELIVERED
+    event's stale (prec, prec*mu) contribution, drop invalid events (their
+    weight moves to the dst's self term), keep agents with garbage resident
+    state out of the merge.  Returns ``(posterior, valid_event [E] bool)``.
+
+    ``corrupt``/``fill_mean``/``fill_rho`` ([N] arrays) inject sender-side
+    corruption into the gathered history rows by src id — applied at
+    DELIVERY time (the history ring itself stays clean; a flaky sender
+    garbles whatever it transmits, however old).  Zero faults (no corrupt
+    mask, all-finite history) is a value-identity against
+    ``consensus_flat_delayed`` — the f32 branch keeps its op order verbatim.
+    """
+    wire_dtype = canonical_wire_dtype(wire_dtype)
+    k_slots = hist_mean.shape[0]
+    slot = jnp.mod(round_idx - lags, k_slots)
+    dst, src = edges[:, 0], edges[:, 1]
+    h_mean = hist_mean[slot, src].astype(COMPUTE_DTYPE)
+    h_rho = hist_rho[slot, src].astype(COMPUTE_DTYPE)
+    if corrupt is not None:
+        bad = corrupt[src][:, None]
+        h_mean = jnp.where(bad, fill_mean[src][:, None], h_mean)
+        h_rho = jnp.where(bad, fill_rho[src][:, None], h_rho)
+    prec_e = 1.0 / jnp.square(softplus(h_rho))
+    w_e = weights[:, None].astype(COMPUTE_DTYPE)
+    prec_now = 1.0 / jnp.square(softplus(posts.rho))
+    diag = jnp.diagonal(W)[:, None].astype(COMPUTE_DTYPE)
+
+    # per-event wire-payload sanity of the delivered contribution
+    prec_e_x = wire_roundtrip(prec_e, wire_dtype)
+    pm_e_x = wire_roundtrip(prec_e * h_mean, wire_dtype)
+    ok_e = (
+        jnp.isfinite(prec_e_x)
+        & (prec_e_x > 0.0)
+        & (prec_e_x <= bound)
+        & jnp.isfinite(pm_e_x)
+        & (jnp.abs(pm_e_x) <= bound)
+    )
+    valid_e = jnp.all(ok_e, axis=-1)  # [E]
+    v_e = valid_e[:, None]
+    # dropped events: weight to the dst's self term, rows sanitized so the
+    # zero weight never multiplies a non-finite lane
+    w_e_g = jnp.where(v_e, w_e, 0.0)
+    drop = jnp.zeros((posts.mean.shape[0], 1), COMPUTE_DTYPE).at[dst].add(
+        w_e - w_e_g
+    )
+    diag_g = diag + drop
+    prec_e = jnp.where(v_e, prec_e, 1.0)
+    h_mean = jnp.where(v_e, h_mean, 0.0)
+    valid_self = payload_validity(
+        posts.mean, posts.rho, wire_dtype=wire_dtype, bound=bound, mode="xla"
+    )
+    if wire_dtype == jnp.float32:
+        acc_prec = (diag_g * prec_now).at[dst].add(w_e_g * prec_e)
+        acc_pm = (diag_g * prec_now * posts.mean).at[dst].add(
+            w_e_g * prec_e * h_mean
+        )
+    else:
+        prec_now_x = wire_roundtrip(prec_now, wire_dtype)
+        pm_now_x = wire_roundtrip(prec_now * posts.mean, wire_dtype)
+        prec_e_x = wire_roundtrip(prec_e, wire_dtype)
+        pm_e_x = wire_roundtrip(prec_e * h_mean, wire_dtype)
+        acc_prec = (diag_g * prec_now_x).at[dst].add(w_e_g * prec_e_x)
+        acc_pm = (diag_g * pm_now_x).at[dst].add(w_e_g * pm_e_x)
+    act = (active > 0) & valid_self
+    act = act[:, None]
+    mean_out = jnp.where(act, acc_pm / acc_prec, posts.mean)
+    rho_out = jnp.where(
+        act, softplus_inv(jax.lax.rsqrt(acc_prec)), posts.rho
+    )
+    return (
+        FlatPosterior(mean=mean_out, rho=rho_out, layout=posts.layout),
+        valid_e,
+    )
+
+
 def consensus_flat_sparse(
     posts: FlatPosterior,
     neighbors: jax.Array,

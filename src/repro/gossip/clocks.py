@@ -206,6 +206,10 @@ class GossipClock:
         self.n_agents = self.W_base.shape[0]
         self.seed = int(seed)
         self.e_max = max(len(_directed_edges(self.W_base)), 1)
+        # agent-level fault model (gossip.faults.FaultModel) — attached on
+        # the OUTERMOST clock only (build_clock enforces this; wrappers reach
+        # inner clocks through _events, which carries no fault filtering)
+        self.faults = None
 
     # -- subclass hook -------------------------------------------------------
 
@@ -228,13 +232,47 @@ class GossipClock:
 
     def _build_window(self, r: int) -> EventWindow:
         rng = np.random.default_rng([self.seed, r])
+        events, _ = self._filter_crashed(r, self._events(r, rng))
         return window_from_events(
-            self.W_base, self._events(r, rng), self.e_max,
-            index=r, rule=self.rule,
+            self.W_base, events, self.e_max, index=r, rule=self.rule,
         )
 
     def windows(self, n: int) -> list[EventWindow]:
         return [self.window(r) for r in range(n)]
+
+    # -- agent churn (gossip.faults) -----------------------------------------
+
+    def attach_faults(self, model) -> None:
+        """Attach a ``FaultModel`` (see ``gossip.faults``).  A crashed agent
+        fires no out-edges and receives nothing: every event whose src was
+        down at FIRE time or whose dst is down at DELIVERY time is removed
+        before the W-tilde build, so the ``"conserve"`` rule moves the
+        dropped in-edge mass onto self and rows stay row-stochastic."""
+        self.faults = model
+        self._last_window = None  # invalidate the one-slot window memo
+
+    def crashed(self, r: int) -> np.ndarray:
+        """[N] bool: agents down during window ``r`` (all-False unfaulted)."""
+        if self.faults is None:
+            return np.zeros((self.n_agents,), bool)
+        return self.faults.crashed(r)
+
+    def _filter_crashed(self, r: int, events, lags=None):
+        """Drop events touching crashed agents; returns ``(events, lags)``
+        filtered in parallel (``lags`` may be None for instant delivery).
+
+        src must be up at fire time ``r - lag``, dst at delivery time ``r``.
+        """
+        if self.faults is None or not events:
+            return events, lags
+        lag_of = [0] * len(events) if lags is None else [int(d) for d in lags]
+        up_now = self.faults.up(r)
+        keep_e, keep_l = [], []
+        for (i, j), d in zip(events, lag_of):
+            if up_now[int(i)] and self.faults.up(r - d)[int(j)]:
+                keep_e.append((i, j))
+                keep_l.append(d)
+        return keep_e, (None if lags is None else keep_l)
 
     def union_support(self) -> np.ndarray:
         """[N, N] 0/1 adjacency of every edge that can EVER activate (self
@@ -541,13 +579,12 @@ class DelayedClock(GossipClock):
 
     def _build_window(self, r: int) -> EventWindow:
         deliveries = self._deliveries(r)
+        events, lags = self._filter_crashed(
+            r, [e for e, _ in deliveries], [lag for _, lag in deliveries]
+        )
         return window_from_events(
-            self.W_base,
-            [e for e, _ in deliveries],
-            self.e_max,
-            index=r,
-            rule=self.rule,
-            delays=[lag for _, lag in deliveries],
+            self.W_base, events, self.e_max,
+            index=r, rule=self.rule, delays=lags,
         )
 
     def union_support(self) -> np.ndarray:
@@ -603,10 +640,17 @@ def trace_from_schedule(mats: Sequence[np.ndarray]) -> tuple[np.ndarray, list]:
 # ---------------------------------------------------------------------------
 
 
-def build_clock(doc: dict, W_base: np.ndarray) -> GossipClock:
+def build_clock(doc: dict, W_base: np.ndarray, _inner: bool = False) -> GossipClock:
     """Build a clock from a plain dict (the ``TopologySpec.clock`` form that
     rides in session checkpoints).  Keys beyond the per-kind parameters
     (e.g. ``local_policy``, consumed by the engine) are ignored here.
+
+    A TOP-LEVEL ``"faults"`` key (a ``gossip.faults.FaultSpec`` doc) attaches
+    agent churn to the built clock: crashed agents fire no out-edges and
+    receive nothing (their in-edge mass moves to self via the w_eff rule).
+    ``"faults"`` on an INNER clock doc is rejected — wrappers reach inner
+    clocks through ``_events``, which carries no fault filtering, so a
+    nested fault model would be silently ignored.
 
     kinds:
       ``poisson``           rate, window_len, seed
@@ -619,46 +663,61 @@ def build_clock(doc: dict, W_base: np.ndarray) -> GossipClock:
     """
     if not isinstance(doc, dict) or "kind" not in doc:
         raise ValueError("clock must be a dict with a 'kind' key")
+    if "faults" in doc and _inner:
+        raise ValueError(
+            "'faults' must sit on the OUTERMOST clock doc: an inner clock's "
+            "fault model would be silently ignored (wrappers reach inner "
+            "clocks through _events, which carries no fault filtering)"
+        )
     kind = doc["kind"]
+    clock = None
     if kind == "poisson":
-        return PoissonClock(
+        clock = PoissonClock(
             W_base,
             rate=doc.get("rate", 1.0),
             window_len=doc.get("window_len", 1.0),
             seed=doc.get("seed", 0),
         )
-    if kind == "round_robin":
-        return RoundRobinClock(
+    elif kind == "round_robin":
+        clock = RoundRobinClock(
             W_base,
             edges_per_window=doc.get("edges_per_window", 1),
             seed=doc.get("seed", 0),
         )
-    if kind == "trace":
+    elif kind == "trace":
         if "trace" not in doc:
             raise ValueError("clock kind='trace' requires a 'trace' list")
-        return TraceClock(
+        clock = TraceClock(
             W_base,
             trace=[[(e[0], e[1]) for e in slot] for slot in doc["trace"]],
             rule=doc.get("rule", "conserve"),
             seed=doc.get("seed", 0),
         )
-    if kind == "failure_injected":
+    elif kind == "failure_injected":
         if "inner" not in doc:
             raise ValueError("clock kind='failure_injected' requires 'inner'")
-        return FailureInjectedClock(
-            build_clock(doc["inner"], W_base),
+        clock = FailureInjectedClock(
+            build_clock(doc["inner"], W_base, _inner=True),
             drop_rate=doc.get("drop_rate", 0.1),
             seed=doc.get("seed", 0),
         )
-    if kind == "delayed":
+    elif kind == "delayed":
         if "inner" not in doc:
             raise ValueError("clock kind='delayed' requires 'inner'")
-        return DelayedClock(
-            build_clock(doc["inner"], W_base),
+        clock = DelayedClock(
+            build_clock(doc["inner"], W_base, _inner=True),
             latency=doc.get("latency", {"kind": "constant", "delay": 1}),
             seed=doc.get("seed", 0),
         )
-    raise ValueError(
-        f"unknown clock kind {kind!r}; known: "
-        "poisson | round_robin | trace | failure_injected | delayed"
-    )
+    else:
+        raise ValueError(
+            f"unknown clock kind {kind!r}; known: "
+            "poisson | round_robin | trace | failure_injected | delayed"
+        )
+    if doc.get("faults") is not None:
+        from repro.gossip import faults as _faults
+
+        clock.attach_faults(
+            _faults.build_faults(doc["faults"], clock.n_agents)
+        )
+    return clock

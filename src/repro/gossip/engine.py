@@ -50,6 +50,22 @@ Staleness telemetry rides in the state: per-agent window index of the last
 merge and total merge count; ``Session.evaluate`` surfaces the percentiles
 via ``telemetry``.
 
+Fault tolerance (ROADMAP "Robustness"): a ``"faults"`` entry in the clock
+doc attaches a deterministic agent-level fault model (``gossip.faults``) —
+Markov crash/recover churn (the clock filters a crashed agent's events, so
+its W-tilde row collapses to ``e_i`` and its local state freezes) and
+payload corruption (a corrupted agent's WIRE (prec, prec*mu) statistics
+are replaced by NaN/Inf/huge garbage at the exchange boundary; resident
+state intact).  ``InferenceSpec.fault_policy`` picks the defense:
+``"strict"`` trusts the wire verbatim (the undefended baseline — injected
+garbage propagates), ``"quarantine"`` validates every incoming
+contribution (``core.flat.payload_validity``), drops invalid ones and
+reassigns their row mass to self, counting drops per agent in
+``GossipState.n_quarantined``.  The fault machinery is structurally gated:
+with no fault model and the strict policy the pre-fault window functions
+are built verbatim, and the zero-fault quarantined window is bitwise the
+strict one (tests/test_faults.py).
+
 Equivalence contract (pinned by tests/test_gossip.py): with an
 ``all_edges_trace`` clock every window's W-tilde equals the base W bitwise
 and every agent is active, so the GossipEngine's posterior trajectory is
@@ -68,7 +84,9 @@ import numpy as np
 from repro.core.flat import (
     FlatPosterior,
     consensus_flat_delayed,
+    consensus_flat_delayed_quarantined,
     consensus_flat_masked,
+    consensus_flat_masked_quarantined,
     make_flat_nll,
 )
 from repro.core.numerics import canonical_wire_dtype, wire_dtype_name
@@ -87,7 +105,10 @@ class GossipState:
     buffers ([K, N, P]; slot ``r mod K`` = window r's post-local-step,
     pre-merge posterior).  Instant-delivery clocks carry ``None`` — an
     EMPTY pytree subtree, so their state flattens to exactly the pre-
-    latency leaf structure and old gossip checkpoints keep loading."""
+    latency leaf structure and old gossip checkpoints keep loading.
+    ``n_quarantined`` (fault_policy="quarantine" only, else ``None`` — the
+    same empty-subtree trick) counts, per agent, the incoming consensus
+    contributions dropped by the exchange-boundary validity guard."""
 
     posterior: FlatPosterior
     opt_state: Any
@@ -97,6 +118,7 @@ class GossipState:
     n_merges: jax.Array  # [N] int32 total merges per agent
     hist_mean: Any  # [K, N, P] stale-posterior ring buffer; None if instant
     hist_rho: Any  # [K, N, P] or None
+    n_quarantined: Any = None  # [N] int32 dropped contributions; None if strict
 
 
 def _agent_select(active: jax.Array, new: PyTree, old: PyTree) -> PyTree:
@@ -150,6 +172,20 @@ class GossipEngine:
                 "known: all | active"
             )
         self.clock = spec.topology.gossip_clock()
+        # agent-level fault model (gossip.faults), attached by build_clock
+        # from the clock doc's top-level "faults" entry; None = no churn or
+        # corruption.  fault_policy picks the consensus defense.
+        self.faults = getattr(self.clock, "faults", None)
+        self.fault_policy = inf.fault_policy
+        self.quarantine = inf.fault_policy == "quarantine"
+        if (self.faults is not None
+                and self.faults.spec.corrupt_rate > 0.0
+                and self.consensus_mode != "gaussian"):
+            raise ValueError(
+                "payload corruption targets the gaussian (prec, prec*mu) "
+                f"exchange; consensus={self.consensus_mode!r} exchanges no "
+                "such payload (drop corrupt_rate or use gaussian consensus)"
+            )
         self.max_delay = int(getattr(self.clock, "max_delay", 0))
         self.hist_slots = self.max_delay + 1 if self.max_delay > 0 else 0
         if self.max_delay > 0 and self.consensus_mode == "mean_only":
@@ -205,9 +241,14 @@ class GossipEngine:
         hist_slots = self.hist_slots
         wire_dtype, hist_dtype = self.wire_dtype, self.hist_dtype
         merge_in_jit = self.consensus_impl != "ppermute"
+        quarantine = self.quarantine
+        # structural gate: with no fault model and the strict policy the
+        # ORIGINAL window functions are built verbatim — the fault machinery
+        # adds zero ops (and zero trace changes) to existing runs
+        self._guarded = guarded = self.quarantine or self.faults is not None
         self.n_traces = 0
 
-        def local_phase(state: GossipState, batches, W, key):
+        def local_phase(state: GossipState, batches, W, key, up=None):
             """Shared pre-consensus window phase: per-agent local VI steps +
             the wake-on-event policy select + staleness bookkeeping inputs.
             Identical (bitwise) across all three window executions."""
@@ -225,7 +266,19 @@ class GossipEngine:
                 key, lr, state.step, n_samples=n_mc, kl_scale=kl_scale,
             )
             u = jax.tree.leaves(batches)[0].shape[1]
-            if policy == "active":
+            if up is not None:
+                # fault-aware (guarded windows only): crashed agents freeze —
+                # no local training, no merge, NaN loss ("did not train").
+                # With up all-True every select is where(True, x, .), so the
+                # zero-fault guarded window stays value-identical to the
+                # unguarded one (the bitwise ladder in tests/test_faults.py).
+                train = (active & up) if policy == "active" else up
+                post = _agent_select(train, post, state.posterior)
+                opt_state = _agent_select(train, opt_state, state.opt_state)
+                step = jnp.where(train, state.step + u, state.step)
+                losses = jnp.where(train, losses, jnp.nan)
+                active = active & up
+            elif policy == "active":
                 # wake-on-event: sleeping agents' local state passes through,
                 # and their (discarded) phantom losses must not pollute the
                 # loss telemetry — NaN marks "did not train this window"
@@ -296,7 +349,114 @@ class GossipEngine:
                 new_state, hist_mean=hist_mean, hist_rho=hist_rho
             ), losses
 
-        fn = window_fn_delayed if self.hist_slots else window_fn
+        def window_fn_guarded(
+            state: GossipState, batches, W, key, up, corrupt,
+            fill_mean, fill_rho,
+        ):
+            """Fault-aware instant window.  ``up`` gates local training
+            (crashed agents freeze; the clock already rewired their W-tilde
+            rows to e_i), ``corrupt`` + fills replace the corrupted agents'
+            WIRE payloads at the exchange boundary (resident state intact);
+            ``quarantine`` swaps in the validated consensus.  All-up /
+            no-corruption inputs make every extra op a value-identity, so
+            the zero-fault guarded trajectory is bitwise the strict one."""
+            post, opt_state, step, active, losses = local_phase(
+                state, batches, W, key, up
+            )
+            n_q = state.n_quarantined
+            if consensus_mode == "gaussian" and merge_in_jit:
+                c = corrupt[:, None]
+                mean_src = jnp.where(c, fill_mean[:, None], post.mean)
+                rho_src = jnp.where(c, fill_rho[:, None], post.rho)
+                if quarantine:
+                    post, valid_src = consensus_flat_masked_quarantined(
+                        post, W, active,
+                        mean_src=mean_src, rho_src=rho_src,
+                        wire_dtype=wire_dtype,
+                    )
+                    n_q = n_q + (~valid_src).astype(jnp.int32)
+                else:
+                    # strict: the wire buffer is trusted verbatim, so the
+                    # injected garbage reaches every receiving agent (the
+                    # undefended baseline); only the exchange is poisoned —
+                    # non-merging agents keep their true resident state
+                    merged = consensus_flat_masked(
+                        dataclasses.replace(post, mean=mean_src, rho=rho_src),
+                        W, active, wire_dtype=wire_dtype,
+                    )
+                    act = active[:, None]
+                    post = dataclasses.replace(
+                        post,
+                        mean=jnp.where(act, merged.mean, post.mean),
+                        rho=jnp.where(act, merged.rho, post.rho),
+                    )
+            elif consensus_mode == "mean_only":
+                act = active[:, None]
+                post = dataclasses.replace(
+                    post,
+                    mean=jnp.where(act, W @ post.mean, post.mean),
+                    rho=jnp.where(act, W @ post.rho, post.rho),
+                )
+            new_state = finish(state, post, opt_state, step, active)
+            return dataclasses.replace(new_state, n_quarantined=n_q), losses
+
+        def window_fn_delayed_guarded(
+            state: GossipState, batches, W, key, edges, weights, lags,
+            up, corrupt, fill_mean, fill_rho,
+        ):
+            """Fault-aware delayed window: corruption applies at DELIVERY
+            time by source id (every event gathered FROM a corrupted agent
+            this window reads garbage, whatever its fire time); the history
+            ring always records the TRUE resident posterior."""
+            post, opt_state, step, active, losses = local_phase(
+                state, batches, W, key, up
+            )
+            slot = jnp.mod(state.round, hist_slots)
+            hist_mean = jax.lax.dynamic_update_index_in_dim(
+                state.hist_mean, post.mean.astype(hist_dtype), slot, 0
+            )
+            hist_rho = jax.lax.dynamic_update_index_in_dim(
+                state.hist_rho, post.rho.astype(hist_dtype), slot, 0
+            )
+            n_q = state.n_quarantined
+            if consensus_mode == "gaussian":
+                if quarantine:
+                    post, valid_e = consensus_flat_delayed_quarantined(
+                        post, W, active, edges, weights, lags,
+                        hist_mean, hist_rho, state.round,
+                        corrupt=corrupt, fill_mean=fill_mean,
+                        fill_rho=fill_rho, wire_dtype=wire_dtype,
+                    )
+                    # count only REAL dropped events — [E_max] padding rows
+                    # carry zero weight and must not inflate the telemetry
+                    bad = ((~valid_e) & (weights > 0.0)).astype(jnp.int32)
+                    n_q = n_q.at[edges[:, 0]].add(bad)
+                else:
+                    # strict: poison the gathered copies (by src id, every
+                    # ring slot) — the state's ring keeps the true values
+                    c = corrupt[None, :, None]
+                    hm = jnp.where(
+                        c, fill_mean.astype(hist_mean.dtype)[None, :, None],
+                        hist_mean,
+                    )
+                    hr = jnp.where(
+                        c, fill_rho.astype(hist_rho.dtype)[None, :, None],
+                        hist_rho,
+                    )
+                    post = consensus_flat_delayed(
+                        post, W, active, edges, weights, lags,
+                        hm, hr, state.round, wire_dtype=wire_dtype,
+                    )
+            new_state = finish(state, post, opt_state, step, active)
+            return dataclasses.replace(
+                new_state, hist_mean=hist_mean, hist_rho=hist_rho,
+                n_quarantined=n_q,
+            ), losses
+
+        if guarded:
+            fn = window_fn_delayed_guarded if self.hist_slots else window_fn_guarded
+        else:
+            fn = window_fn_delayed if self.hist_slots else window_fn
         self._window = jax.jit(fn) if spec.run.jit else fn
 
     # -- Engine protocol -----------------------------------------------------
@@ -329,6 +489,10 @@ class GossipEngine:
                        if self.hist_slots else None),
             hist_rho=(jnp.zeros(hist_shape, self.hist_dtype)
                       if self.hist_slots else None),
+            # None (empty subtree) under fault_policy="strict" so strict
+            # states keep the exact pre-fault leaf structure
+            n_quarantined=(jnp.zeros((self.n_agents,), jnp.int32)
+                           if self.quarantine else None),
         )
 
     def _window_for(self, state, W):
@@ -351,25 +515,76 @@ class GossipEngine:
             )
         return win
 
+    def _fault_arrays(self, r: int):
+        """Host-side per-window fault draws (pure functions of (seed, r) —
+        a resumed session regenerates the identical stream).  Also records
+        ``last_crashed`` for ``Session.round``'s n_crashed telemetry."""
+        n = self.n_agents
+        if self.faults is None:
+            up = np.ones(n, dtype=bool)
+            corrupt = np.zeros(n, dtype=bool)
+            fm = np.zeros(n, np.float32)
+            fr = np.zeros(n, np.float32)
+        else:
+            up = self.faults.up(r)
+            corrupt = self.faults.corrupted(r)
+            fm, fr = self.faults.fills(r)
+        self.last_crashed = ~up
+        return (jnp.asarray(up), jnp.asarray(corrupt),
+                jnp.asarray(fm), jnp.asarray(fr))
+
     def run_round(self, state, batches, W, key):
         W = jnp.asarray(W)
+        extra = self._fault_arrays(int(state.round)) if self._guarded else ()
         if self.hist_slots:
             win = self._window_for(state, W)
             return self._window(
                 state, batches, W, key,
                 jnp.asarray(win.edges), jnp.asarray(win.weights),
-                jnp.asarray(win.delays),
+                jnp.asarray(win.delays), *extra,
             )
         if self.consensus_impl == "ppermute" and self.consensus_mode == "gaussian":
             win = self._window_for(state, W)
-            state, losses = self._window(state, batches, W, key)
-            post = consensus_flat_masked(
-                state.posterior, W, jnp.asarray(win.active),
-                mode="ppermute", mesh=self._mesh, axis="agents", window=win,
-                wire_dtype=self.wire_dtype,
-            )
-            return dataclasses.replace(state, posterior=post), losses
-        return self._window(state, batches, W, key)
+            state, losses = self._window(state, batches, W, key, *extra)
+            post = state.posterior
+            if not self._guarded:
+                post = consensus_flat_masked(
+                    post, W, jnp.asarray(win.active),
+                    mode="ppermute", mesh=self._mesh, axis="agents",
+                    window=win, wire_dtype=self.wire_dtype,
+                )
+                return dataclasses.replace(state, posterior=post), losses
+            up, corrupt, fm, fr = extra
+            c = corrupt[:, None]
+            mean_src = jnp.where(c, fm[:, None], post.mean)
+            rho_src = jnp.where(c, fr[:, None], post.rho)
+            active = jnp.asarray(win.active)
+            if self.quarantine:
+                post, valid_src = consensus_flat_masked_quarantined(
+                    post, W, active, mean_src=mean_src, rho_src=rho_src,
+                    mode="ppermute", mesh=self._mesh, axis="agents",
+                    window=win, wire_dtype=self.wire_dtype,
+                )
+                state = dataclasses.replace(
+                    state, posterior=post,
+                    n_quarantined=(state.n_quarantined
+                                   + (~valid_src).astype(jnp.int32)),
+                )
+            else:
+                merged = consensus_flat_masked(
+                    dataclasses.replace(post, mean=mean_src, rho=rho_src),
+                    W, active, mode="ppermute", mesh=self._mesh,
+                    axis="agents", window=win, wire_dtype=self.wire_dtype,
+                )
+                act = active[:, None]
+                post = dataclasses.replace(
+                    post,
+                    mean=jnp.where(act, merged.mean, post.mean),
+                    rho=jnp.where(act, merged.rho, post.rho),
+                )
+                state = dataclasses.replace(state, posterior=post)
+            return state, losses
+        return self._window(state, batches, W, key, *extra)
 
     def posterior(self, state) -> FlatPosterior:
         return state.posterior
@@ -412,4 +627,24 @@ class GossipEngine:
             out["wire_dtype"] = self.wire_dtype
         if self.hist_slots and wire_dtype_name(self.hist_dtype) != "f32":
             out["history_dtype"] = wire_dtype_name(self.hist_dtype)
+        if self._guarded:
+            nw = int(state.round)
+            faults: dict = {"policy": self.fault_policy}
+            if self.faults is not None:
+                uptime = self.faults.uptime(nw)
+                faults["uptime"] = {
+                    "per_agent": [int(v) for v in uptime],
+                    "frac_mean": (float(uptime.mean()) / nw if nw else 1.0),
+                    "min": int(uptime.min()) if nw else 0,
+                }
+                faults["currently_down"] = (
+                    int(self.faults.crashed(nw - 1).sum()) if nw else 0
+                )
+            if getattr(state, "n_quarantined", None) is not None:
+                nq = np.asarray(state.n_quarantined)
+                faults["quarantined"] = {
+                    "per_agent": [int(v) for v in nq],
+                    "total": int(nq.sum()),
+                }
+            out["faults"] = faults
         return out

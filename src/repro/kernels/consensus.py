@@ -396,6 +396,73 @@ def consensus_fused_sparse(
     return mean_out[:, :p], rho_out[:, :p]
 
 
+def _payload_validity_kernel(mean_ref, rho_ref, ok_ref, *, wire_dtype, bound):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        ok_ref[...] = jnp.ones_like(ok_ref)
+
+    sigma = jax.nn.softplus(rho_ref[...])
+    prec = 1.0 / (sigma * sigma)
+    prec_x = wire_roundtrip(prec, wire_dtype)
+    pm_x = wire_roundtrip(prec * mean_ref[...], wire_dtype)
+    ok = (
+        jnp.isfinite(prec_x)
+        & (prec_x > 0.0)
+        & (prec_x <= bound)
+        & jnp.isfinite(pm_x)
+        & (jnp.abs(pm_x) <= bound)
+    )
+    tile_ok = jnp.all(ok, axis=-1, keepdims=True)  # [N, 1]
+    ok_ref[...] = ok_ref[...] * tile_ok.astype(jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bound", "block", "interpret", "wire_dtype")
+)
+def payload_validity_fused(
+    mean: jax.Array,  # [N, P]
+    rho: jax.Array,  # [N, P]
+    *,
+    bound: float,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool | None = None,
+    wire_dtype=None,
+) -> jax.Array:
+    """Fused exchange-payload sanity probe: ONE streaming pass over the flat
+    [N, P] buffers returning a per-agent [N] bool — every wire-rounded
+    (prec, prec*mu) lane finite, prec > 0, magnitudes within ``bound``.
+
+    Grid ``(P // BLOCK,)`` with a revisited [N, 1] output: tile 0 seeds the
+    flags to 1.0, every subsequent tile ANDs (multiplies) its own all-lanes
+    verdict in — the same single-HBM-pass shape as the consensus kernels, so
+    the quarantine guard adds one read pass, not a gather storm.  Pad lanes
+    (mean 0.0, rho 1.0) are always valid and never flip a flag.  Pinned
+    bit-equal to the ``core.flat.payload_validity`` XLA reference.
+    """
+    interpret = _auto_interpret(interpret)
+    wire_dtype = canonical_wire_dtype(wire_dtype)
+    n, _ = mean.shape
+    mean, rho, pp = _pad_lanes(mean, rho, block)
+    grid = (pp // block,)
+    ok = pl.pallas_call(
+        functools.partial(
+            _payload_validity_kernel, wire_dtype=wire_dtype,
+            bound=float(bound),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, block), lambda i: (0, i)),
+            pl.BlockSpec((n, block), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((n, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        interpret=interpret,
+    )(mean, rho)
+    return ok[:, 0] > 0.0
+
+
 def _consensus_masked_sparse_kernel(
     nbr_ref,  # scalar-prefetch [N, D] int32 neighbor ids (self-padded)
     wts_ref,  # scalar-prefetch [N, D] fp32 weights (0-padded)

@@ -350,6 +350,8 @@ def consensus_ppermute_window(
     *,
     block: int | None = None,
     wire_dtype=None,
+    w_eff: jax.Array | None = None,
+    active: jax.Array | None = None,
 ) -> FlatPosterior:
     """Execute ONE gossip event window sharded over the agent axis.
 
@@ -370,6 +372,13 @@ def consensus_ppermute_window(
     bytes per rotation — decoded fp32 on receipt.
     Instant-delivery windows only: delayed windows (``window.max_lag > 0``)
     merge history slots and run the gather path in the engine.
+
+    ``w_eff``/``active`` override the window's W-tilde and activity mask
+    WITHOUT changing the (static, edge-derived) permutation schedule — the
+    quarantine guard's hook: it zeroes an invalid source's columns and moves
+    the mass to self, which only ever REMOVES weight from scheduled edges
+    (rotating a sanitized zero-weight payload is harmless), so the cached
+    shard_map program is reused unchanged.
     """
     n = window.n_agents
     n_shards = mesh.shape[axis]
@@ -392,8 +401,9 @@ def consensus_ppermute_window(
         canonical_wire_dtype(wire_dtype),
     )
     mean, rho = fn(
-        jnp.asarray(window.w_eff, jnp.float32),
-        jnp.asarray(window.active),
+        (jnp.asarray(window.w_eff, jnp.float32) if w_eff is None
+         else jnp.asarray(w_eff, jnp.float32)),
+        jnp.asarray(window.active) if active is None else jnp.asarray(active),
         posts.mean,
         posts.rho,
     )

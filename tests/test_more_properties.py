@@ -215,6 +215,83 @@ def test_failure_drop_decisions_independent_of_inner_clock(
         assert kept == [tuple(e) for e in win.edges[: win.n_events].tolist()]
 
 
+# ---------------------------------------------------------------------------
+# agent-fault properties (fault-tolerant gossip PR satellites)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1000), st.integers(0, 25),
+       st.floats(0.05, 0.6, allow_nan=False),
+       st.floats(0.2, 1.0, allow_nan=False))
+def test_fault_stream_is_pure_function_of_seed_and_round(
+    seed, r, crash_rate, recover_rate
+):
+    """Property: the crash/corruption schedule for round r depends ONLY on
+    (fault seed, r) — independently built models, queried in different
+    orders, replay the identical stream (the resume contract)."""
+    from repro.gossip.faults import FaultModel, FaultSpec
+
+    spec = FaultSpec(crash_rate=crash_rate, recover_rate=recover_rate,
+                     corrupt_rate=0.4, seed=seed)
+    a, b = FaultModel(spec, 7), FaultModel(spec, 7)
+    _ = b.up(r + 3)  # warm b's memo past r: access order must not matter
+    np.testing.assert_array_equal(a.up(r), b.up(r))
+    np.testing.assert_array_equal(a.corrupted(r), b.corrupted(r))
+    fm_a, fr_a = a.fills(r)
+    fm_b, fr_b = b.fills(r)
+    np.testing.assert_array_equal(fm_a, fm_b)
+    np.testing.assert_array_equal(fr_a, fr_b)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 500), st.integers(0, 30))
+def test_fault_salts_pairwise_independent_streams(seed, r):
+    """Property: the crash (0xC7A54), corruption (0xBADBAD), link-drop
+    (0xFA11ED) and delay (0xDE1A7) streams are DISTINCT Philox counter
+    streams for the same (seed, r) — no salt pair ever yields the same
+    draw vector (which would couple two fault concerns)."""
+    from repro.gossip.clocks import DELAY_SALT
+    from repro.gossip.faults import CORRUPT_SALT, CRASH_SALT
+
+    salts = (CRASH_SALT, CORRUPT_SALT, 0xFA11ED, DELAY_SALT)
+    assert len(set(salts)) == 4
+    draws = [np.random.default_rng([seed, s, r]).random(16) for s in salts]
+    for i in range(len(salts)):
+        for j in range(i + 1, len(salts)):
+            assert not np.array_equal(draws[i], draws[j]), (
+                f"salt streams {salts[i]:#x} and {salts[j]:#x} collided"
+            )
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(3, 7), st.integers(0, 12), st.integers(0, 60),
+       st.floats(0.1, 0.7, allow_nan=False))
+def test_conserve_w_tilde_row_stochastic_under_arbitrary_crash_subsets(
+    n, r, seed, crash_rate
+):
+    """Property: whatever agent subset the Markov churn crashes in window
+    r, the conserve-rule W-tilde stays row-stochastic, crashed rows are
+    EXACTLY e_i, and crashed columns carry no off-diagonal mass (a
+    crashed agent neither fires nor receives)."""
+    from repro.gossip.clocks import PoissonClock
+    from repro.gossip.faults import FaultModel, FaultSpec
+
+    W = _random_row_stochastic(n, seed)
+    clock = PoissonClock(W, rate=1.2, seed=seed)
+    clock.attach_faults(FaultModel(
+        FaultSpec(crash_rate=crash_rate, recover_rate=0.5, seed=seed + 1), n
+    ))
+    win = clock.window(r)
+    crashed = clock.crashed(r)
+    np.testing.assert_allclose(win.w_eff.sum(axis=1), 1.0, atol=1e-12)
+    assert (win.w_eff >= 0).all()
+    np.testing.assert_array_equal(win.w_eff[crashed], np.eye(n)[crashed])
+    assert not win.active[crashed].any()
+    off_diag = win.w_eff - np.diag(np.diag(win.w_eff))
+    assert (off_diag[:, crashed] == 0.0).all()
+
+
 def test_moe_dropless_at_high_capacity_property():
     """At capacity_factor high enough, NO assignment is dropped: the MoE
     output is independent of capacity_factor beyond that point."""
