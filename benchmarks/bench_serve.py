@@ -1,0 +1,214 @@
+"""Serving-tier smoke benchmark (`benchmarks/run.py serve-smoke`).
+
+Three parts, mirroring what the ROADMAP Serving section promises:
+
+1. **Correctness probes** (asserted, not timed): a bf16-resident snapshot
+   is EXACTLY half the fp32 snapshot's resident bytes — in the live
+   ``PosteriorSnapshot.nbytes()`` and in the analytic
+   ``serve_roofline`` model; the padding-bucket apply cache compiles one
+   program per touched ``(bucket, shape, mc)`` key and a replayed request
+   stream adds ZERO retraces; the f32 snapshot serves the L=0 point
+   estimate identically to ``Session.predictive(n_mc=0)``.
+2. **MC ensemble sweep** (the paper's L knob, Sec 4.2): p50/p99 serving
+   latency and warm queries/sec vs ``mc_samples`` over a fixed ragged
+   request stream, next to the roofline's per-batch apply bytes (serving
+   is posterior-row bound, so modeled bytes scale ~linearly in L).
+3. **Bucket-policy sweep**: the same stream under different
+   ``bucket_sizes`` policies — trace count, pad-row overhead, and warm
+   latency trade off against each other (one big bucket = 1 trace but max
+   padding; fine-grained buckets = more traces, less padding).
+
+Output: ``BENCH_serve.json`` + the harness's ``name,us_per_call,derived``
+CSV rows.  Latency numbers are CPU smoke values — the relative shape
+(latency vs L, padding vs policy) is the load-bearing part, as for the
+other BENCH_*.json documents.
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+import numpy as np
+
+from repro.api import (
+    DataSpec,
+    ExperimentSpec,
+    InferenceSpec,
+    RunSpec,
+    ServeSpec,
+    TopologySpec,
+    build_session,
+)
+from repro.launch.costmodel import serve_roofline
+
+DEFAULT_JSON = "BENCH_serve.json"
+
+N_AGENTS = 3
+N_ROUNDS = 4
+
+
+def _session():
+    spec = ExperimentSpec(
+        topology=TopologySpec.gossip("ring", {"n": N_AGENTS}),
+        data=DataSpec(
+            dataset_params=dict(n_classes=3, dim=8, n_train_per_class=30),
+            partition_params=dict(n_agents=N_AGENTS),
+            batch_size=4,
+            local_updates=2,
+        ),
+        inference=InferenceSpec(hidden=8, depth=1, lr=1e-2),
+        run=RunSpec(n_rounds=N_ROUNDS, seed=0),
+        serve=ServeSpec(max_staleness=None),
+    )
+    sess = build_session(spec)
+    sess.run()
+    return sess
+
+
+def _request_stream(sess, n_requests: int = 24, seed: int = 0):
+    """A fixed ragged stream: sizes 1..9, round-robined over the agents."""
+    rng = np.random.default_rng(seed)
+    x = np.asarray(sess.data.x_test)
+    sizes = rng.integers(1, 10, size=n_requests)
+    return [
+        (x[rng.integers(0, x.shape[0], size=int(n))], i % N_AGENTS)
+        for i, n in enumerate(sizes)
+    ]
+
+
+def _probes(sess) -> dict:
+    """The asserted serving contracts."""
+    snap32 = sess.snapshot(dtype="f32")
+    snap16 = sess.snapshot(dtype="bf16")
+    live_ratio = snap32.nbytes() / snap16.nbytes()
+    n_params = int(snap32.posterior.mean.shape[1])
+    r32 = serve_roofline(N_AGENTS, n_params, snapshot_dtype="f32")
+    r16 = serve_roofline(N_AGENTS, n_params, snapshot_dtype="bf16")
+    model_ratio = r32["snapshot_hbm_bytes"] / r16["snapshot_hbm_bytes"]
+    assert live_ratio == 2.0, f"bf16 snapshot not half: {live_ratio}"
+    assert model_ratio == 2.0, f"modeled bf16 HBM not half: {model_ratio}"
+
+    # replay determinism of the apply cache: a second pass over the same
+    # stream must add ZERO retraces
+    sess.snapshot(dtype="f32")
+    server = sess.attach_server(mc_samples=2, bucket_sizes=(4, 16))
+    stream = _request_stream(sess)
+    for rows, agent in stream:
+        server.query(rows, agent=agent)
+    traces_first = server.n_traces
+    for rows, agent in stream:
+        server.query(rows, agent=agent)
+    assert server.n_traces == traces_first, (
+        f"replay retraced: {server.n_traces} != {traces_first}"
+    )
+    assert traces_first == 2, f"expected 1 trace per bucket, {traces_first}"
+
+    # the served L=0 point estimate equals the Session's own predictive
+    x = np.asarray(sess.data.x_test[:6])
+    served0, _ = server.query(x, agent=0, mc_samples=0)
+    direct0 = sess.predictive(0, x, n_mc=0)
+    np.testing.assert_allclose(
+        np.asarray(served0), np.asarray(direct0), rtol=1e-6, atol=1e-7
+    )
+    print(f"serve_probe_bf16_halving,0.0,live={live_ratio};model={model_ratio}")
+    print(f"serve_probe_trace_pin,0.0,traces={traces_first};replay_delta=0")
+    print("serve_probe_point_estimate,0.0,matches_session_predictive=1")
+    return {
+        "bf16_snapshot_ratio_live": live_ratio,
+        "bf16_snapshot_ratio_model": model_ratio,
+        "snapshot_bytes": {"f32": snap32.nbytes(), "bf16": snap16.nbytes()},
+        "trace_pin": {"buckets": [4, 16], "traces": traces_first,
+                      "replay_delta": 0},
+    }
+
+
+def _serve_stream(server, stream):
+    for rows, agent in stream:
+        probs, _ = server.query(rows, agent=agent)
+    jax.block_until_ready(probs)
+
+
+def _mc_sweep(sess, mc_grid=(0, 1, 4, 8)) -> list[dict]:
+    """p50/p99 latency + warm QPS vs the MC ensemble size L."""
+    sess.snapshot(dtype="f32")
+    n_params = int(sess.posterior().mean.shape[1])
+    out = []
+    stream = _request_stream(sess)
+    for mc in mc_grid:
+        server = sess.attach_server(mc_samples=mc, bucket_sizes=(4, 16))
+        _serve_stream(server, stream)  # cold pass: compiles the buckets
+        server._lat_us.clear()
+        _serve_stream(server, stream)  # warm pass: the measured one
+        lat = server.latency_percentiles()
+        qps = 1e6 / lat["mean_us"]
+        model = serve_roofline(
+            N_AGENTS, n_params, mc_samples=mc, batch=8,
+            dim=int(np.asarray(sess.data.x_test).shape[1]), n_classes=3,
+        )
+        rec = {
+            "mc_samples": mc,
+            "p50_us": lat["p50_us"],
+            "p99_us": lat["p99_us"],
+            "qps": qps,
+            "rows": server.n_rows // 2,
+            "model_apply_bytes_per_batch": model["apply_bytes_per_batch"],
+        }
+        out.append(rec)
+        print(f"serve_mc_L{mc},{lat['p50_us']:.1f},"
+              f"p99={lat['p99_us']:.1f};qps={qps:.1f}")
+    return out
+
+
+def _bucket_sweep(sess, mc: int = 4) -> list[dict]:
+    """Trace count / padding overhead / warm latency per bucket policy."""
+    sess.snapshot(dtype="f32")
+    policies = {
+        "single_big": (16,),
+        "pow2_small": (1, 2, 4, 8),
+        "pow2_full": (1, 2, 4, 8, 16, 32),
+    }
+    stream = _request_stream(sess)
+    out = []
+    for name, buckets in policies.items():
+        server = sess.attach_server(mc_samples=mc, bucket_sizes=buckets)
+        _serve_stream(server, stream)
+        server._lat_us.clear()
+        pad_before, rows_before = server.n_padded_rows, server.n_rows
+        _serve_stream(server, stream)
+        lat = server.latency_percentiles()
+        pad_frac = (server.n_padded_rows - pad_before) / (
+            server.n_rows - rows_before
+        )
+        rec = {
+            "policy": name,
+            "bucket_sizes": list(buckets),
+            "traces": server.n_traces,
+            "pad_rows_per_row": pad_frac,
+            "p50_us": lat["p50_us"],
+            "p99_us": lat["p99_us"],
+        }
+        out.append(rec)
+        print(f"serve_buckets_{name},{lat['p50_us']:.1f},"
+              f"traces={server.n_traces};pad_frac={pad_frac:.2f}")
+    return out
+
+
+def run(json_out: str | None = DEFAULT_JSON) -> dict:
+    print("name,us_per_call,derived")
+    sess = _session()
+    doc = {
+        "n_agents": N_AGENTS,
+        "n_params": int(sess.posterior().mean.shape[1]),
+        "probes": _probes(sess),
+        "mc_sweep": _mc_sweep(sess),
+        "bucket_sweep": _bucket_sweep(sess),
+    }
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"# wrote {json_out}")
+    return doc
+
+
+if __name__ == "__main__":
+    run()

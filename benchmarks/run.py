@@ -39,6 +39,12 @@ Subcommands:
             quarantine==strict bitwise ladder, an lr=0 consensus
             contraction probe under churn, and a degradation-vs-crash-rate
             sweep; emits BENCH_chaos.json
+  run.py serve-smoke [--json-out F]              posterior serving tier
+            smoke: bf16 snapshot halving asserted live + in the roofline
+            model, padding-bucket trace-count pinning with a zero-retrace
+            replay, served point estimate vs Session.predictive, then
+            p50/p99 latency + QPS sweeps vs MC ensemble size L and bucket
+            policy; emits BENCH_serve.json
 """
 from __future__ import annotations
 
@@ -51,6 +57,7 @@ from benchmarks import (
     bench_chaos,
     bench_consensus,
     bench_gossip,
+    bench_serve,
     calibration,
     fig1_linreg,
     fig2_star_centrality,
@@ -134,13 +141,14 @@ def main(argv=None) -> None:
     ap.add_argument(
         "cmd", nargs="?",
         choices=["figures", "bench", "api-smoke", "gossip-smoke",
-                 "chaos-smoke"],
+                 "chaos-smoke", "serve-smoke"],
         default="figures",
         help="figures (default): paper figures; bench: consensus perf "
         "sweep; api-smoke: declarative-API smoke; gossip-smoke: async "
         "gossip runtime smoke (all-active equivalence + Poisson run); "
         "chaos-smoke: fault-tolerance chaos harness (churn + corruption "
-        "under quarantine)",
+        "under quarantine); serve-smoke: posterior serving tier (snapshot "
+        "halving + trace pinning + latency/QPS sweeps)",
     )
     ap.add_argument("--only", nargs="*", choices=list(ALL), default=None)
     ap.add_argument(
@@ -162,6 +170,9 @@ def main(argv=None) -> None:
         return
     if args.cmd == "chaos-smoke":
         bench_chaos.run(json_out=args.json_out or bench_chaos.DEFAULT_JSON)
+        return
+    if args.cmd == "serve-smoke":
+        bench_serve.run(json_out=args.json_out or bench_serve.DEFAULT_JSON)
         return
     if args.cmd == "bench":
         bench_consensus.run(

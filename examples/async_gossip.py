@@ -33,6 +33,10 @@ Two more regimes ride the same declarative spec:
   sources, so the garbage never reaches a resident posterior (ROADMAP
   "Robustness").
 
+To serve predictions from the posteriors these runs produce, see the
+serving quickstart ``examples/serve_batched.py`` (snapshots carry this
+runtime's staleness telemetry into the serving SLO).
+
     PYTHONPATH=src python examples/async_gossip.py
 """
 import os

@@ -13,6 +13,11 @@ agent counts) and returns an engine-backed ``Session``; swap
 production ``launch.steps`` path, or change ``TopologySpec`` to move the
 same run onto any other graph.
 
+Next steps: ``examples/async_gossip.py`` (event-driven asynchronous
+runtime) and ``examples/serve_batched.py`` (the serving quickstart —
+publish a posterior snapshot and serve batched MC-predictive traffic
+under a staleness SLO).
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np

@@ -32,6 +32,12 @@ conjugate linear-regression family of paper Example 1 is selected by
 asynchronous ``GossipEngine`` (``repro.gossip``) — one Poisson/trace event
 window per round, active-edge masked consensus, staleness telemetry in
 ``Session.evaluate``.
+
+Serving (``repro.serve``): ``session.snapshot()`` publishes the consensus
+posterior into an immutable double-buffered serving copy (``ServeSpec``
+picks residency/defaults) and ``session.attach_server()`` returns a
+``PredictiveServer`` — batched MC-predictive inference under a
+bounded-staleness SLO (see ``examples/serve_batched.py``).
 """
 from repro.api.data import DataBundle, build_data
 from repro.api.engines import (
@@ -48,6 +54,7 @@ from repro.api.spec import (
     ExperimentSpec,
     InferenceSpec,
     RunSpec,
+    ServeSpec,
     TopologySpec,
 )
 
@@ -63,6 +70,7 @@ __all__ = [
     "MODELS",
     "ModelFns",
     "RunSpec",
+    "ServeSpec",
     "Session",
     "SimulatedEngine",
     "TopologySpec",

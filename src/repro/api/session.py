@@ -100,6 +100,8 @@ class Session:
     round_idx: int = 0
     history: list = dataclasses.field(default_factory=list)
     _w_schedule: Any = dataclasses.field(default=None, repr=False)
+    _serve_store: Any = dataclasses.field(default=None, repr=False)
+    _server: Any = dataclasses.field(default=None, repr=False)
 
     def _spec_w_schedule(self):
         """The topology's round-indexed W callable, materialized once (the
@@ -217,6 +219,74 @@ class Session:
             post, self.model.logits_fn, jnp.asarray(x), key, n_mc=n_mc,
         )
 
+    # -- serving (ROADMAP "Serving"; repro.serve) ----------------------------
+
+    @property
+    def serve_store(self):
+        """The session's ``serve.SnapshotStore`` (lazy; clock = the round
+        counter, so snapshot AGE is measured in training windows)."""
+        if self._serve_store is None:
+            from repro.serve import SnapshotStore
+
+            self._serve_store = SnapshotStore(clock=lambda: self.round_idx)
+        return self._serve_store
+
+    def snapshot(self, dtype=None):
+        """Publish the consensus posterior into the serving double buffer.
+
+        Copies the live ``FlatPosterior`` into an immutable
+        ``PosteriorSnapshot`` (optionally ``dtype="bf16"``-resident — half
+        the serving HBM; default: ``spec.serve.snapshot_dtype``), stamps it
+        with the current window index and the engine's gossip telemetry
+        (``snapshot_meta``: staleness percentiles, quarantine counts), and
+        atomically swaps it in as the served front buffer.  Pure READ of
+        training state: a run with serving readers attached stays bitwise
+        identical to one without (pinned by tests/test_serve.py)."""
+        from repro.core.flat import FlatPosterior
+
+        post = self.posterior()
+        if not isinstance(post, FlatPosterior):
+            raise ValueError(
+                "Session.snapshot() serves flat BbB posteriors; the "
+                f"{type(self.engine).__name__} posterior is not a "
+                "FlatPosterior"
+            )
+        if dtype is None:
+            dtype = self.spec.serve.snapshot_dtype
+        meta_fn = getattr(self.engine, "snapshot_meta", None)
+        telemetry = meta_fn(self.state) if meta_fn is not None else {}
+        return self.serve_store.publish(
+            post, window=self.round_idx, dtype=dtype, telemetry=telemetry,
+        )
+
+    def attach_server(self, **overrides):
+        """A ``serve.PredictiveServer`` bound to this session's snapshot
+        store and model apply.  Defaults come from ``spec.serve``
+        (``mc_samples`` / ``bucket_sizes`` / ``max_staleness`` /
+        ``staleness_policy``); keyword ``overrides`` win.  The server reads
+        only published snapshots — call ``snapshot()`` first (and again
+        whenever the served posterior should roll forward).  The attached
+        server's telemetry shows up in ``evaluate()``."""
+        if self.model is None:
+            raise ValueError(
+                "attach_server() requires a classification model (the "
+                "conjugate linreg engine has no serving path)"
+            )
+        from repro.serve import PredictiveServer
+
+        s = self.spec.serve
+        kwargs = dict(
+            mc_samples=s.mc_samples,
+            bucket_sizes=s.bucket_sizes,
+            max_staleness=s.max_staleness,
+            staleness_policy=s.staleness_policy,
+        )
+        kwargs.update(overrides)
+        self._server = PredictiveServer(
+            self.serve_store, self.model.logits_fn, **kwargs
+        )
+        return self._server
+
     def health(self) -> dict:
         """Per-agent posterior health probe (ROADMAP "Robustness").
 
@@ -249,11 +319,18 @@ class Session:
         """Held-out test metrics per agent: MC-predictive accuracy for
         classification, global-test MSE for linreg.  Engines exposing a
         ``telemetry(state)`` hook (the gossip runtime: staleness percentiles,
-        merge counts) have it merged into the result."""
+        merge counts) have it merged into the result, and a serving tier
+        (published snapshots / an attached ``PredictiveServer``) adds a
+        ``"serving"`` block — snapshot age/version/bytes and SLO breach
+        counts next to the fault and staleness metrics."""
         out = self._evaluate_metrics(n_mc=n_mc, key=key)
         telemetry = getattr(self.engine, "telemetry", None)
         if telemetry is not None:
             out.update(telemetry(self.state))
+        if self._server is not None:
+            out["serving"] = self._server.telemetry()
+        elif self._serve_store is not None:
+            out["serving"] = self._serve_store.telemetry()
         return out
 
     def _evaluate_metrics(self, n_mc: int = 4, key=None) -> dict:

@@ -433,6 +433,59 @@ class InferenceSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class ServeSpec:
+    """The serving-tier contract (ROADMAP "Serving"; ``repro.serve``).
+
+    ``snapshot_dtype`` picks the RESIDENCY of published posterior snapshots
+    (``"f32" | "bf16" | "f16"`` — the shared ``core.numerics`` wire-dtype
+    vocabulary): a bf16-resident snapshot halves the serving HBM
+    (``launch.costmodel.serve_roofline``) and is decoded to fp32 inside the
+    jitted apply.  ``mc_samples`` is the default predictive ensemble size L
+    (0 = point estimate at the posterior mean); ``bucket_sizes`` the
+    ascending padding buckets the request micro-batcher compiles for;
+    ``max_staleness`` the SLO bound in training windows (None = unbounded)
+    enforced under ``staleness_policy`` (``"strict"`` refuses with
+    ``serve.StalenessSLOError``, ``"flag"`` serves with ``slo_ok=False``).
+    """
+
+    snapshot_dtype: str = "f32"  # f32 | bf16 | f16: snapshot residency
+    mc_samples: int = 8
+    bucket_sizes: Sequence[int] = (1, 2, 4, 8, 16, 32)
+    max_staleness: int | None = None  # SLO bound in windows (None = off)
+    staleness_policy: str = "strict"  # strict | flag
+
+    def __post_init__(self):
+        # normalize to tuple so from_doc(to_doc(spec)) == spec (the doc
+        # format lowers tuples to lists)
+        object.__setattr__(self, "bucket_sizes", tuple(
+            int(b) for b in self.bucket_sizes
+        ))
+
+    def validate(self) -> None:
+        if self.snapshot_dtype not in ("f32", "bf16", "f16"):
+            raise ValueError(
+                f"unknown snapshot_dtype {self.snapshot_dtype!r}; known: "
+                "f32 | bf16 | f16"
+            )
+        if self.mc_samples < 0:
+            raise ValueError("mc_samples must be >= 0 (0 = point estimate)")
+        if (not self.bucket_sizes
+                or any(b <= 0 for b in self.bucket_sizes)
+                or list(self.bucket_sizes) != sorted(set(self.bucket_sizes))):
+            raise ValueError(
+                "bucket_sizes must be a strictly ascending sequence of "
+                f"positive ints, got {self.bucket_sizes!r}"
+            )
+        if self.max_staleness is not None and self.max_staleness < 0:
+            raise ValueError("max_staleness must be >= 0 windows (or None)")
+        if self.staleness_policy not in ("strict", "flag"):
+            raise ValueError(
+                f"unknown staleness_policy {self.staleness_policy!r}; "
+                "known: strict | flag"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
 class RunSpec:
     """Run envelope: length, seed, engine, eval cadence."""
 
@@ -451,17 +504,19 @@ class RunSpec:
 
 @dataclasses.dataclass(frozen=True)
 class ExperimentSpec:
-    """One experiment = topology x data x inference x run."""
+    """One experiment = topology x data x inference x run (+ serving)."""
 
     topology: TopologySpec = dataclasses.field(default_factory=TopologySpec)
     data: DataSpec = dataclasses.field(default_factory=DataSpec)
     inference: InferenceSpec = dataclasses.field(default_factory=InferenceSpec)
     run: RunSpec = dataclasses.field(default_factory=RunSpec)
+    serve: ServeSpec = dataclasses.field(default_factory=ServeSpec)
 
     def validate(self) -> None:
         self.data.validate()
         self.inference.validate()
         self.run.validate()
+        self.serve.validate()
         if self.inference.method == "conjugate_linreg" and self.data.dataset != "linreg":
             raise ValueError("conjugate_linreg inference requires dataset='linreg'")
         if self.data.dataset == "linreg" and self.inference.method != "conjugate_linreg":
@@ -538,6 +593,8 @@ class ExperimentSpec:
             data=DataSpec(**doc["data"]),
             inference=InferenceSpec(**doc["inference"]),
             run=RunSpec(**doc["run"]),
+            # absent in pre-serving checkpoints: default ServeSpec
+            serve=ServeSpec(**doc.get("serve") or {}),
         )
 
 

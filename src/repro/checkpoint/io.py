@@ -196,6 +196,52 @@ def restore_flat_posterior(path: str, sharding=None):
     return FlatPosterior(mean=mean, rho=rho, layout=layout)
 
 
+_SNAPSHOT = "__posterior_snapshot__"
+
+
+def save_snapshot(path: str, snap, compress_level: int = 3) -> None:
+    """Checkpoint a ``serve.PosteriorSnapshot`` next to the session state.
+
+    The (possibly bf16-resident) buffers go through ``_pack_leaf`` — which
+    stores extension dtype NAMES, so a narrow snapshot round-trips in its
+    resident dtype — and the provenance (window / version / dtype /
+    telemetry) rides in the document.  A serving replica restores the exact
+    served posterior without any training state."""
+    doc = {
+        _SNAPSHOT: True,
+        "layout": snap.posterior.layout.to_doc(),
+        "mean": _pack_leaf(snap.posterior.mean),
+        "rho": _pack_leaf(snap.posterior.rho),
+        "window": int(snap.window),
+        "version": int(snap.version),
+        "dtype": snap.dtype,
+        "telemetry": snap.telemetry,
+    }
+    _write_doc(path, doc, compress_level)
+
+
+def restore_snapshot(path: str):
+    """Restore a ``serve.PosteriorSnapshot`` saved by ``save_snapshot``."""
+    from repro.core.flat import FlatLayout, FlatPosterior
+    from repro.serve.snapshot import PosteriorSnapshot
+
+    doc = _read_doc(path)
+    if not doc.get(_SNAPSHOT):
+        raise ValueError(f"{path} is not a posterior-snapshot checkpoint")
+    post = FlatPosterior(
+        mean=jnp.asarray(_unpack_leaf(doc["mean"])),
+        rho=jnp.asarray(_unpack_leaf(doc["rho"])),
+        layout=FlatLayout.from_doc(doc["layout"]),
+    )
+    return PosteriorSnapshot(
+        posterior=post,
+        window=int(doc["window"]),
+        version=int(doc["version"]),
+        dtype=doc["dtype"],
+        telemetry=dict(doc.get("telemetry") or {}),
+    )
+
+
 _SESSION = "__session__"
 
 

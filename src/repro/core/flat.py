@@ -228,6 +228,41 @@ class FlatPosterior:
     def n_params(self) -> int:
         return self.layout.n_params
 
+    # -- serving-snapshot views (ROADMAP "Serving") --------------------------
+
+    def astype(self, dtype) -> "FlatPosterior":
+        """Both buffers cast to ``dtype`` (layout unchanged) — the decode
+        half of the serving-snapshot path: a narrow-resident snapshot is
+        ``astype(jnp.float32)``-ed inside the jitted apply, where XLA fuses
+        the widening cast into the first read (no extra HBM pass).  A
+        same-dtype cast is a structural no-op returning ``self``."""
+        dt = jnp.dtype(dtype)
+        if (jnp.dtype(self.mean.dtype) == dt
+                and jnp.dtype(self.rho.dtype) == dt):
+            return self
+        return FlatPosterior(
+            mean=self.mean.astype(dt), rho=self.rho.astype(dt),
+            layout=self.layout,
+        )
+
+    def snapshot(self, dtype=None) -> "FlatPosterior":
+        """A DECOUPLED copy of both buffers (optionally resident in a
+        narrower dtype — ``core.numerics`` wire-dtype names; ``"bf16"``
+        halves the snapshot HBM).  This is the publish half of the serving
+        tier's double buffer (``repro.serve``): the returned posterior
+        shares no storage with the training buffers, so subsequent training
+        updates can never change what a reader serves, and the copy only
+        READS the live buffers — a training run with a snapshot reader
+        attached stays bitwise identical to one without."""
+        from repro.core.numerics import canonical_wire_dtype
+
+        dt = canonical_wire_dtype(dtype)
+        return FlatPosterior(
+            mean=jnp.array(self.mean, dtype=dt, copy=True),
+            rho=jnp.array(self.rho, dtype=dt, copy=True),
+            layout=self.layout,
+        )
+
     def to_pytree(self):
         """-> ``GaussianPosterior`` over the original parameter pytree."""
         from repro.core.posterior import GaussianPosterior

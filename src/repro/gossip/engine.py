@@ -648,3 +648,27 @@ class GossipEngine:
                 }
             out["faults"] = faults
         return out
+
+    def snapshot_meta(self, state) -> dict:
+        """The gossip provenance a serving snapshot carries (ROADMAP
+        "Serving"): the window index, staleness percentiles, merge counts
+        and quarantine totals AT PUBLISH TIME — the raw material of the
+        serving tier's bounded-staleness SLO
+        (``serve.PredictiveServer(max_staleness=k)``).  Plain data,
+        checkpoint-embeddable next to the snapshot buffers."""
+        age = self.staleness(state)
+        merges = np.asarray(state.n_merges)
+        meta = {
+            "window": int(state.round),
+            "staleness": {
+                "p50": float(np.percentile(age, 50)),
+                "p90": float(np.percentile(age, 90)),
+                "max": int(age.max()),
+            },
+            "merges_total": int(merges.sum()),
+        }
+        if getattr(state, "n_quarantined", None) is not None:
+            meta["quarantined_total"] = int(
+                np.asarray(state.n_quarantined).sum()
+            )
+        return meta

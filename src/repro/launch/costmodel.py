@@ -269,6 +269,70 @@ def gossip_window_roofline(
     return out
 
 
+def serve_roofline(
+    n_agents: int,
+    n_params: int,
+    *,
+    snapshot_dtype: str = "f32",
+    mc_samples: int = 8,
+    batch: int = 1,
+    dim: int = 1,
+    n_classes: int = 2,
+    bytes_per_el: int = 4,
+) -> dict[str, Any]:
+    """Analytic bytes model of the posterior serving tier (``repro.serve``),
+    for the memory-bound roofline of one served micro-batch.
+
+    SNAPSHOT term: the published double buffer is 2 x [n_agents, n_params]
+    scalars RESIDENT at ``snapshot_dtype`` (the ``core.numerics`` wire
+    vocabulary) — a bf16 snapshot is exactly HALF the fp32 HBM (asserted by
+    unit test).  ``snapshot_publish_bytes`` is the traffic of one publish:
+    read the fp32 training buffers, write the snapshot-resident copy.
+
+    PER-QUERY APPLY term: one micro-batch of ``batch`` rows under one
+    agent's posterior draws ``mc_samples`` parameter samples; each sample
+    reads the agent's (mean, rho) row pair once (``2 x n_params`` at the
+    snapshot dtype — XLA fuses the fp32 widening into the read), streams
+    the [batch, dim] inputs and writes [batch, n_classes] fp32
+    probabilities.  ``mc_samples=0`` (the point estimate) still reads the
+    mean row once.  The serving regime is posterior-row bound whenever
+    ``mc_samples x n_params >> batch x dim``, which is the paper's setting
+    — so apply bytes scale ~linearly in L, the knob ``BENCH_serve.json``
+    sweeps.
+    """
+    snap_el = _wire_bytes_per_el(snapshot_dtype)
+    if mc_samples < 0 or batch <= 0:
+        raise ValueError("mc_samples must be >= 0 and batch positive")
+    snapshot_bytes = 2.0 * n_agents * n_params * snap_el
+    snapshot_bytes_f32 = 2.0 * n_agents * n_params * 4
+    publish_bytes = snapshot_bytes_f32 + snapshot_bytes  # read fp32, write resident
+    draws = max(mc_samples, 1)  # the point estimate still reads the mean row
+    row_reads = (2.0 if mc_samples else 1.0) * draws * n_params * snap_el
+    io_bytes = batch * dim * bytes_per_el + batch * n_classes * 4.0
+    apply_bytes = row_reads + io_bytes
+    out = {
+        "n_agents": n_agents,
+        "n_params": n_params,
+        "snapshot_dtype": snapshot_dtype,
+        "mc_samples": mc_samples,
+        "batch": batch,
+        "snapshot_hbm_bytes": snapshot_bytes,
+        "snapshot_hbm_bytes_f32": snapshot_bytes_f32,
+        "snapshot_saving_vs_f32": (
+            snapshot_bytes_f32 / snapshot_bytes if snapshot_bytes else 1.0
+        ),
+        "snapshot_publish_bytes": publish_bytes,
+        "apply_bytes_per_batch": apply_bytes,
+        "apply_bytes_per_row": apply_bytes / batch,
+        "posterior_row_bound": row_reads > io_bytes,
+        "roofline_seconds": {
+            "publish": publish_bytes / HBM_BW,
+            "apply_per_batch": apply_bytes / HBM_BW,
+        },
+    }
+    return out
+
+
 def _layer_kind_counts(cfg) -> dict[str, int]:
     counts: dict[str, int] = {}
     for k in cfg.pattern:

@@ -1,121 +1,113 @@
-"""Serving driver: batched prefill + autoregressive decode using the
-posterior-mean weights (the paper's predictive distribution with L=1; pass
---mc-samples for the full Monte-Carlo predictive averaging).
+"""Serving driver: train a small decentralized network, publish a posterior
+snapshot, and serve batched MC-predictive traffic against it (the paper's
+Sec 4.2 predictive distribution behind the ``repro.serve`` tier).
 
-Example (CPU, reduced config):
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
-      --batch 4 --prompt-len 32 --gen 16
+This replaces the dormant LM prefill/decode seed driver: the repo's end
+product is each agent's *classification* predictive served from its
+consensus posterior, so the driver now runs the supported path end to end —
+``build_session`` -> ``Session.run`` -> ``Session.snapshot`` (the shared
+wire-dtype snapshot machinery, not an ad-hoc per-leaf bf16 cast) ->
+``PredictiveServer`` request stream — and reports serving latency
+percentiles, QPS, and the staleness/SLO telemetry block.
+
+Example (CPU, seconds):
+  PYTHONPATH=src python -m repro.launch.serve --rounds 6 --requests 32 \
+      --mc-samples 8 --snapshot-dtype bf16 --max-staleness 4
 """
 from __future__ import annotations
 
 import argparse
-import time
+import json
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
-from repro.configs import get_config
-from repro.launch.steps import make_agent_cache, make_decode_step, make_prefill_step
-from repro.models import init_params
+from repro.api import (
+    DataSpec,
+    ExperimentSpec,
+    InferenceSpec,
+    RunSpec,
+    ServeSpec,
+    TopologySpec,
+    build_session,
+)
 
 
-def sample_token(logits: jax.Array, key: jax.Array, temperature: float) -> jax.Array:
-    if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)
+def serving_spec(
+    n_agents: int = 4,
+    rounds: int = 6,
+    seed: int = 0,
+    *,
+    serve: ServeSpec = ServeSpec(),
+) -> ExperimentSpec:
+    """A small gossip network whose snapshots carry real staleness
+    telemetry — the serving tier's natural substrate."""
+    return ExperimentSpec(
+        topology=TopologySpec.gossip("ring", {"n": n_agents}),
+        data=DataSpec(
+            dataset_params=dict(n_classes=4, dim=16, n_train_per_class=60),
+            partition_params=dict(n_agents=n_agents),
+            batch_size=8,
+            local_updates=2,
+        ),
+        inference=InferenceSpec(hidden=16, depth=1, lr=5e-3),
+        run=RunSpec(n_rounds=rounds, seed=seed),
+        serve=serve,
+    )
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-8b")
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--mc-samples", type=int, default=1)
+    ap.add_argument("--agents", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--mc-samples", type=int, default=8,
+                    help="posterior ensemble size L (0 = point estimate)")
+    ap.add_argument("--snapshot-dtype", default="f32",
+                    choices=["f32", "bf16", "f16"])
+    ap.add_argument("--max-staleness", type=int, default=None,
+                    help="SLO bound in training windows (default: off)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    a = 1  # serving uses one agent's posterior
-    key = jax.random.key(args.seed)
-    key, k_init, k_prompt = jax.random.split(key, 3)
-    base = jax.vmap(lambda k: init_params(cfg, k))(jax.random.split(k_init, a))
-    if args.mc_samples > 1:
-        # paper Sec 4.2: Monte-Carlo predictive — L posterior samples served
-        # as an ensemble, class probabilities averaged
-        from repro.core.posterior import init_posterior
+    spec = serving_spec(
+        args.agents, args.rounds, args.seed,
+        serve=ServeSpec(
+            snapshot_dtype=args.snapshot_dtype,
+            mc_samples=args.mc_samples,
+            max_staleness=args.max_staleness,
+            staleness_policy="flag",
+        ),
+    )
+    sess = build_session(spec)
+    hist = sess.run(eval_every=args.rounds)  # history: final round only
+    print(f"trained {args.rounds} windows x {args.agents} agents "
+          f"(final loss {hist[-1]['loss'] if hist else None})")
 
-        post = init_posterior(base, init_sigma=0.02)
-        keys = jax.random.split(jax.random.key(args.seed + 1), args.mc_samples)
-        param_sets = [
-            jax.tree.map(
-                lambda p: p.astype(jnp.bfloat16) if p.dtype == jnp.float32 else p,
-                post.sample(k),
-            )
-            for k in keys
-        ]
-    else:
-        param_sets = [
-            jax.tree.map(
-                lambda p: p.astype(jnp.bfloat16) if p.dtype == jnp.float32 else p,
-                base,
-            )
-        ]
-    params = param_sets[0]
+    snap = sess.snapshot()
+    print(f"published snapshot: window={snap.window} dtype={snap.dtype} "
+          f"resident={snap.nbytes()}B telemetry={snap.telemetry}")
 
-    b = args.batch
-    capacity = args.prompt_len + args.gen
-    prompts = jax.random.randint(k_prompt, (a, b, args.prompt_len), 0, cfg.vocab_size)
-    batch = {"tokens": prompts}
-    if cfg.frontend == "audio_stub":
-        batch["frames"] = jnp.zeros((a, b, cfg.encoder_seq, cfg.d_model), jnp.float32)
-    if cfg.frontend == "vision_stub":
-        batch["patches"] = jnp.zeros((a, b, cfg.n_patches, cfg.d_model), jnp.float32)
+    server = sess.attach_server()
+    rng = np.random.default_rng(args.seed)
+    x_test = np.asarray(sess.data.x_test)
+    # a ragged request stream round-robined over the agents
+    sizes = rng.integers(1, 9, size=args.requests)
+    for i, n in enumerate(sizes):
+        rows = x_test[rng.integers(0, x_test.shape[0], size=int(n))]
+        probs, meta = server.query(rows, agent=i % args.agents)
+        jax.block_until_ready(probs)
 
-    prefill = jax.jit(make_prefill_step(cfg))
-    decode = jax.jit(make_decode_step(cfg))
-    # MC-predictive serving: one KV cache per posterior sample (ensemble)
-    caches = [make_agent_cache(cfg, a, b, capacity) for _ in param_sets]
-
-    def ensemble_probs(logit_list):
-        # paper Sec 4.2: P(y) = (1/L) sum_k Softmax(f_{theta_k}(x))
-        ps = [jax.nn.softmax(lg[:, :, -1, : cfg.vocab_size].astype(jnp.float32), -1)
-              for lg in logit_list]
-        return jnp.log(jnp.mean(jnp.stack(ps), axis=0) + 1e-30)
-
-    t0 = time.time()
-    logit_list = []
-    for j, p_j in enumerate(param_sets):
-        lg, caches[j] = prefill(p_j, batch, caches[j])
-        logit_list.append(lg)
-    key, k = jax.random.split(key)
-    tok = sample_token(ensemble_probs(logit_list), k, args.temperature)
-    print(f"prefill {args.prompt_len} tokens x {b} reqs x L={len(param_sets)}: "
-          f"{time.time() - t0:.2f}s")
-
-    out_tokens = [tok]
-    pos0 = args.prompt_len + (cfg.n_patches if cfg.frontend == "vision_stub" else 0)
-    t0 = time.time()
-    for i in range(args.gen - 1):
-        key, k = jax.random.split(key)
-        logit_list = []
-        for j, p_j in enumerate(param_sets):
-            lg, caches[j] = decode(
-                p_j, tok[..., None], jnp.asarray(pos0 + i, jnp.int32), caches[j],
-                batch.get("frames"),
-            )
-            logit_list.append(lg)
-        tok = sample_token(ensemble_probs(logit_list), k, args.temperature)
-        out_tokens.append(tok)
-    dt = time.time() - t0
-    gen = jnp.stack(out_tokens, axis=-1)
-    print(f"decoded {args.gen - 1} steps x {b} reqs in {dt:.2f}s "
-          f"({(args.gen - 1) * b / max(dt, 1e-9):.1f} tok/s)")
-    print("sample output ids:", gen[0, 0][:16].tolist())
+    tel = server.telemetry()
+    lat = tel.get("latency", {})
+    warm = server._lat_us[len(server.bucket_sizes):]  # skip compile batches
+    qps = (1e6 * len(warm) / sum(warm)) if warm else 0.0
+    print(f"served {tel['requests']} requests ({tel['rows']} rows, "
+          f"{tel['batches']} bucket slabs, {tel['padded_rows']} pad rows, "
+          f"{tel['traces']} traces)")
+    print(f"latency p50={lat.get('p50_us', 0):.0f}us "
+          f"p99={lat.get('p99_us', 0):.0f}us  warm-qps~{qps:.1f}")
+    print("telemetry:", json.dumps(tel, default=float))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,32 @@
+"""``repro.serve`` — the posterior serving tier (ROADMAP "Serving").
+
+Snapshot-isolated, batched MC-predictive inference against a live
+``Session``: ``snapshot.SnapshotStore`` double-buffers immutable copies of
+the consensus ``FlatPosterior`` (optionally bf16-resident for half the
+serving HBM), and ``server.PredictiveServer`` serves the paper's
+Monte-Carlo predictive distribution from the front buffer through a
+compiled-once padding-bucket apply cache, under a bounded-staleness SLO.
+
+Quickstart (see ``examples/serve_batched.py`` for the full tour)::
+
+    sess = Session.from_spec(spec)
+    sess.run(n_rounds=8)
+    sess.snapshot(dtype="bf16")            # publish the serving copy
+    server = sess.attach_server(mc_samples=8, max_staleness=4)
+    probs, meta = server.query(x, agent=0)
+"""
+from repro.serve.server import (
+    DEFAULT_BUCKETS,
+    PredictiveServer,
+    StalenessSLOError,
+)
+from repro.serve.snapshot import PosteriorSnapshot, SnapshotStore, take_snapshot
+
+__all__ = [
+    "DEFAULT_BUCKETS",
+    "PosteriorSnapshot",
+    "PredictiveServer",
+    "SnapshotStore",
+    "StalenessSLOError",
+    "take_snapshot",
+]

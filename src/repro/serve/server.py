@@ -1,0 +1,325 @@
+"""``PredictiveServer`` — batched MC-predictive inference over a snapshot.
+
+Serves the paper's Monte-Carlo predictive distribution (Sec. 4.2)
+
+    P(y | x) = (1/L) sum_k Softmax(f_{theta_k}(x)),   theta_k ~ snapshot
+
+from the ``SnapshotStore``'s front buffer, with three serving-tier
+guarantees:
+
+* **Compiled-once apply cache** — arbitrary request streams execute a
+  SMALL, FIXED set of pre-compiled programs.  Incoming request rows are
+  coalesced per agent and chopped into PADDING BUCKETS (``bucket_sizes``,
+  ascending): full slabs of the largest bucket, then the smallest bucket
+  covering the remainder (zero-padded; pad rows are sliced off before any
+  value escapes).  Each jitted apply is keyed on
+  ``(bucket, request_shape, mc_samples)`` — the trace count equals the
+  number of DISTINCT keys the stream touches, pinned by
+  tests/test_serve.py, and ``n_traces`` counts retraces exactly like the
+  gossip engine's telemetry.
+* **fp32 probability accumulation** — per posterior sample the class
+  probabilities are computed and accumulated in fp32 regardless of the
+  snapshot's resident dtype (a bf16-resident snapshot decodes to fp32
+  inside the jitted program, where XLA fuses the widening cast into the
+  first read).  ``mc_samples=0`` is the deterministic point estimate (one
+  softmax at the posterior mean — the paper's L=1 fast path).
+* **Staleness SLO** — ``max_staleness=k`` bounds how out-of-date a served
+  posterior may be: a snapshot more than k training windows old is
+  REFUSED (``staleness_policy="strict"`` raises ``StalenessSLOError``) or
+  FLAGGED (``"flag"``: the response meta carries ``slo_ok=False``), and
+  every breach is counted in the serving telemetry that
+  ``Session.evaluate`` surfaces next to the fault/staleness metrics.
+
+The server never touches training state: it reads the immutable snapshot
+the store currently fronts.  Publish a fresh snapshot
+(``Session.snapshot()``) to roll the served posterior forward.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.numerics import COMPUTE_DTYPE, softplus
+from repro.serve.snapshot import PosteriorSnapshot, SnapshotStore
+
+DEFAULT_BUCKETS = (1, 2, 4, 8, 16, 32)
+
+
+class StalenessSLOError(RuntimeError):
+    """The served snapshot is older than the ``max_staleness`` SLO allows."""
+
+
+def _check_buckets(bucket_sizes) -> tuple[int, ...]:
+    buckets = tuple(int(b) for b in bucket_sizes)
+    if not buckets or any(b <= 0 for b in buckets):
+        raise ValueError(
+            f"bucket_sizes must be positive and non-empty, got {bucket_sizes!r}"
+        )
+    if list(buckets) != sorted(set(buckets)):
+        raise ValueError(
+            f"bucket_sizes must be strictly ascending, got {bucket_sizes!r}"
+        )
+    return buckets
+
+
+class PredictiveServer:
+    """Batched MC-predictive serving against a ``SnapshotStore``.
+
+    ``logits_fn(theta_pytree, x) -> logits`` is the model apply (the
+    registry signature, ``api.models.ModelFns.logits_fn``); the flat->
+    pytree conversion happens once per sample inside the jitted program
+    via the snapshot layout.  ``seed`` roots the server's own MC key
+    stream: each bucket slab folds a monotone batch counter into the base
+    key, so the whole key sequence is a pure function of (seed, request
+    history) — two servers built with the same seed and fed the same
+    stream sample identically, while successive queries on one server
+    draw fresh posterior samples."""
+
+    def __init__(
+        self,
+        store: SnapshotStore,
+        logits_fn: Callable[[Any, jax.Array], jax.Array],
+        *,
+        mc_samples: int = 8,
+        bucket_sizes: Sequence[int] = DEFAULT_BUCKETS,
+        max_staleness: int | None = None,
+        staleness_policy: str = "strict",
+        seed: int = 0,
+    ):
+        if mc_samples < 0:
+            raise ValueError("mc_samples must be >= 0 (0 = point estimate)")
+        if staleness_policy not in ("strict", "flag"):
+            raise ValueError(
+                f"unknown staleness_policy {staleness_policy!r}; known: "
+                "strict | flag"
+            )
+        if max_staleness is not None and max_staleness < 0:
+            raise ValueError("max_staleness must be >= 0 windows (or None)")
+        self.store = store
+        self.logits_fn = logits_fn
+        self.mc_samples = int(mc_samples)
+        self.bucket_sizes = _check_buckets(bucket_sizes)
+        self.max_staleness = max_staleness
+        self.staleness_policy = staleness_policy
+        self._base_key = jax.random.key(seed)
+        self._apply_cache: dict = {}
+        # serving telemetry (Session.evaluate merges it)
+        self.n_traces = 0
+        self.n_requests = 0
+        self.n_rows = 0
+        self.n_padded_rows = 0
+        self.n_batches = 0
+        self.n_slo_breaches = 0
+        self._batch_counter = 0
+        self._lat_us: list[float] = []
+
+    # -- staleness SLO -------------------------------------------------------
+
+    def check_slo(self, snap: PosteriorSnapshot | None = None) -> tuple[bool, int]:
+        """(slo_ok, age).  Counts a breach and — under the strict policy —
+        refuses by raising ``StalenessSLOError``.  With no ``max_staleness``
+        every snapshot is within SLO (age still reported)."""
+        snap = self.store.current() if snap is None else snap
+        age = self.store.age() if self.store.clock is not None else 0
+        if self.max_staleness is None or age <= self.max_staleness:
+            return True, age
+        self.n_slo_breaches += 1
+        if self.staleness_policy == "strict":
+            raise StalenessSLOError(
+                f"snapshot of window {snap.window} is {age} windows stale "
+                f"(> max_staleness={self.max_staleness}); publish a fresh "
+                "snapshot (Session.snapshot()) or serve with "
+                "staleness_policy='flag'"
+            )
+        return False, age
+
+    # -- the compiled-once apply cache ---------------------------------------
+
+    def _apply_for(self, layout, bucket: int, row_shape: tuple, mc: int):
+        """The jitted MC-predictive program for one (bucket, row_shape, mc)
+        key.  The layout is static closure state (it never changes for a
+        fixed model); mean/rho/x/key are traced, so republishing a snapshot
+        or switching agents NEVER retraces."""
+        key_t = (bucket, row_shape, mc, id(layout))
+        cached = self._apply_cache.get(key_t)
+        if cached is not None:
+            return cached
+        logits_fn = self.logits_fn
+
+        def apply(mean_row, rho_row, x, key):
+            self.n_traces += 1  # trace-time side effect: retrace telemetry
+            mean = mean_row.astype(COMPUTE_DTYPE)
+            rho = rho_row.astype(COMPUTE_DTYPE)
+
+            def probs_of(theta_flat):
+                logits = logits_fn(layout.unflatten(theta_flat), x)
+                return jax.nn.softmax(logits.astype(COMPUTE_DTYPE), axis=-1)
+
+            if mc == 0:
+                # deterministic point estimate: one softmax at the mean
+                return probs_of(mean)
+
+            def one(k):
+                eps = jax.random.normal(k, mean.shape, COMPUTE_DTYPE)
+                return probs_of(mean + softplus(rho) * eps)
+
+            keys = jax.random.split(key, mc)
+            # fp32 probability accumulation across the posterior ensemble
+            return jnp.mean(jax.vmap(one)(keys), axis=0)
+
+        fn = jax.jit(apply)
+        self._apply_cache[key_t] = fn
+        return fn
+
+    def _bucket_plan(self, total: int) -> list[int]:
+        """Chop ``total`` rows into bucket-sized slabs: full slabs of the
+        largest bucket, then the smallest bucket covering the remainder."""
+        if total <= 0:
+            return []
+        top = self.bucket_sizes[-1]
+        plan = [top] * (total // top)
+        rem = total % top
+        if rem:
+            plan.append(next(b for b in self.bucket_sizes if b >= rem))
+        return plan
+
+    # -- serving -------------------------------------------------------------
+
+    def query(self, x, agent: int = 0, *, mc_samples: int | None = None,
+              key=None):
+        """One request: class probabilities for ``x`` ([n, ...features] or a
+        single [...features] row) under ``agent``'s snapshot posterior.
+        Returns ``(probs, meta)``; ``meta`` carries the snapshot provenance
+        and the SLO verdict."""
+        x = jnp.asarray(x)
+        single = x.ndim == 1
+        outs, meta = self.serve(
+            [x[None] if single else x], agents=[agent],
+            mc_samples=mc_samples, key=key,
+        )
+        probs = outs[0][0] if single else outs[0]
+        return probs, meta
+
+    def serve(self, requests, agents=None, *, mc_samples: int | None = None,
+              key=None):
+        """Serve a micro-batch of requests in one pass.
+
+        ``requests``: list of arrays ``[n_i, ...features]`` (ragged leading
+        sizes welcome — that is the point).  ``agents``: per-request agent
+        id (default: all agent 0).  Rows are coalesced per agent, executed
+        through the padding-bucket apply cache, and handed back per request
+        in order.  Returns ``(outputs, meta)``.
+        """
+        snap = self.store.current()
+        slo_ok, age = self.check_slo(snap)
+        mc = self.mc_samples if mc_samples is None else int(mc_samples)
+        if mc < 0:
+            raise ValueError("mc_samples must be >= 0")
+        reqs = [jnp.asarray(r) for r in requests]
+        if any(r.ndim < 2 for r in reqs):
+            raise ValueError(
+                "each request must be [n, ...features]; wrap single rows "
+                "with x[None] (or use query())"
+            )
+        agents = [0] * len(reqs) if agents is None else list(agents)
+        if len(agents) != len(reqs):
+            raise ValueError(
+                f"{len(reqs)} requests but {len(agents)} agent ids"
+            )
+        n_agents = snap.n_agents
+        for a in agents:
+            if not 0 <= int(a) < n_agents:
+                raise ValueError(
+                    f"agent {a} out of range for a {n_agents}-agent snapshot"
+                )
+        base = self._base_key if key is None else jnp.asarray(key)
+        post = snap.posterior
+        t0 = time.perf_counter()
+
+        # coalesce rows per agent (one posterior row per slab), preserving
+        # request order within each agent group
+        by_agent: dict[int, list[int]] = {}
+        for i, a in enumerate(agents):
+            by_agent.setdefault(int(a), []).append(i)
+        results: list = [None] * len(reqs)
+        for a, idxs in by_agent.items():
+            rows = jnp.concatenate([reqs[i] for i in idxs], axis=0)
+            row_shape = tuple(rows.shape[1:])
+            mean_row, rho_row = post.mean[a], post.rho[a]
+            chunks, off = [], 0
+            for bucket in self._bucket_plan(rows.shape[0]):
+                n = min(bucket, rows.shape[0] - off)
+                slab = rows[off:off + n]
+                if n < bucket:  # zero-pad to the bucket; sliced off below
+                    pad = jnp.zeros((bucket - n,) + row_shape, slab.dtype)
+                    slab = jnp.concatenate([slab, pad], axis=0)
+                    self.n_padded_rows += bucket - n
+                fn = self._apply_for(post.layout, bucket, row_shape, mc)
+                k = jax.random.fold_in(base, self._batch_counter)
+                self._batch_counter += 1
+                probs = fn(mean_row, rho_row, slab, k)
+                chunks.append(probs[:n])
+                off += n
+                self.n_batches += 1
+            agent_probs = (jnp.concatenate(chunks, axis=0) if chunks
+                           else jnp.zeros((0, 0), COMPUTE_DTYPE))
+            off = 0
+            for i in idxs:
+                n = reqs[i].shape[0]
+                results[i] = agent_probs[off:off + n]
+                off += n
+        jax.block_until_ready([r for r in results if r is not None])
+        lat_us = (time.perf_counter() - t0) * 1e6
+        self._lat_us.append(lat_us)
+        self.n_requests += len(reqs)
+        self.n_rows += sum(int(r.shape[0]) for r in reqs)
+        meta = {
+            "snapshot_window": snap.window,
+            "snapshot_version": snap.version,
+            "snapshot_age": age,
+            "slo_ok": slo_ok,
+            "mc_samples": mc,
+            "latency_us": lat_us,
+        }
+        return results, meta
+
+    # -- telemetry -----------------------------------------------------------
+
+    def latency_percentiles(self) -> dict:
+        if not self._lat_us:
+            return {}
+        lat = np.asarray(self._lat_us)
+        return {
+            "p50_us": float(np.percentile(lat, 50)),
+            "p99_us": float(np.percentile(lat, 99)),
+            "mean_us": float(lat.mean()),
+            "n": int(lat.size),
+        }
+
+    def telemetry(self) -> dict:
+        """Plain-data serving block (merged into ``Session.evaluate``):
+        snapshot provenance + age, request/batch/padding counters, the SLO
+        breach count, and the apply-cache trace count."""
+        out = {
+            "requests": self.n_requests,
+            "rows": self.n_rows,
+            "batches": self.n_batches,
+            "padded_rows": self.n_padded_rows,
+            "traces": self.n_traces,
+            "mc_samples": self.mc_samples,
+            "bucket_sizes": list(self.bucket_sizes),
+            "slo": {
+                "max_staleness": self.max_staleness,
+                "policy": self.staleness_policy,
+                "breaches": self.n_slo_breaches,
+            },
+        }
+        out.update(self.store.telemetry())
+        lat = self.latency_percentiles()
+        if lat:
+            out["latency"] = lat
+        return out

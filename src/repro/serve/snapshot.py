@@ -1,0 +1,189 @@
+"""Snapshot isolation for the posterior serving tier (ROADMAP "Serving").
+
+The paper's end product is each agent's *predictive distribution* served
+from its consensus posterior (Sec. 4.2).  Serving must never interfere
+with training, and training must never mutate what a reader is serving —
+the classic snapshot-isolation contract, realized here as a DOUBLE BUFFER
+over ``core.flat.FlatPosterior``:
+
+* ``SnapshotStore.publish`` copies the live [N, P] (mean, rho) buffers
+  into a fresh, immutable ``PosteriorSnapshot`` (the back buffer) and then
+  swaps it in as the served front buffer in one atomic reference
+  assignment.  Readers holding the previous snapshot keep serving it
+  unchanged; new reads see the new one.  Publishing only READS training
+  state, so a training run with a serving reader attached stays BITWISE
+  identical to one without (pinned by tests/test_serve.py).
+* Snapshots may be resident in a narrower dtype
+  (``snapshot_dtype="bf16"`` — the ``core.numerics`` wire-dtype machinery,
+  shared with the consensus exchange): half the serving HBM, decoded to
+  fp32 inside the jitted apply.  ``launch.costmodel.serve_roofline`` models
+  the halving; a unit test asserts it exactly.
+* Every snapshot carries its provenance: the training WINDOW index it was
+  taken at, a monotone version counter, and the gossip staleness telemetry
+  (``last_merge`` percentiles, quarantine counts) when the engine exposes
+  it — the raw material of the serving tier's staleness SLO
+  (``server.PredictiveServer(max_staleness=k)``: refuse/flag answers from
+  a snapshot more than k windows stale, the bounded-staleness regime of
+  Lalitha et al., arXiv:1901.11173).
+
+Checkpointing: ``PosteriorSnapshot.save``/``load`` persist a snapshot next
+to the session checkpoint (``checkpoint.io.save_snapshot``) — a serving
+replica can restore the exact served posterior without the training state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+
+from repro.core.flat import FlatPosterior
+from repro.core.numerics import COMPUTE_DTYPE, canonical_wire_dtype, wire_dtype_name
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PosteriorSnapshot:
+    """One immutable published posterior + its provenance.
+
+    ``posterior`` is a decoupled copy of the training buffers (possibly
+    narrow-resident — see ``dtype``); ``window`` is the training round it
+    was taken at; ``version`` the store's monotone publish counter;
+    ``telemetry`` the engine's staleness block at publish time (plain
+    data, checkpoint-embeddable).
+    """
+
+    posterior: FlatPosterior
+    window: int
+    version: int
+    dtype: str  # resident dtype name ("f32" | "bf16" | "f16")
+    telemetry: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def n_agents(self) -> int:
+        return int(self.posterior.mean.shape[0])
+
+    def nbytes(self) -> int:
+        """Resident HBM of the snapshot (both buffers) — bf16 snapshots
+        are exactly half the fp32 ones (asserted by test)."""
+        return int(self.posterior.mean.nbytes + self.posterior.rho.nbytes)
+
+    def decode(self) -> FlatPosterior:
+        """The fp32 view served to the apply path (structural no-op for an
+        fp32-resident snapshot)."""
+        return self.posterior.astype(COMPUTE_DTYPE)
+
+    # -- persistence (next to the session checkpoint) ------------------------
+
+    def save(self, path: str) -> None:
+        from repro.checkpoint.io import save_snapshot
+
+        save_snapshot(path, self)
+
+    @classmethod
+    def load(cls, path: str) -> "PosteriorSnapshot":
+        from repro.checkpoint.io import restore_snapshot
+
+        return restore_snapshot(path)
+
+
+def take_snapshot(
+    post: FlatPosterior,
+    *,
+    window: int,
+    version: int = 0,
+    dtype=None,
+    telemetry: dict | None = None,
+) -> PosteriorSnapshot:
+    """Copy ``post`` into an immutable snapshot (see ``FlatPosterior
+    .snapshot`` for the decoupling contract).  ``dtype`` is a wire-dtype
+    name/dtype (None = fp32-resident)."""
+    dt = canonical_wire_dtype(dtype)
+    return PosteriorSnapshot(
+        posterior=post.snapshot(dt),
+        window=int(window),
+        version=int(version),
+        dtype=wire_dtype_name(dt),
+        telemetry=dict(telemetry or {}),
+    )
+
+
+class SnapshotStore:
+    """The double buffer: one served front snapshot, atomically swapped.
+
+    ``publish`` builds the new snapshot first (the back buffer — readers
+    still see the old front the whole time) and installs it with a single
+    reference assignment, which is atomic under the interpreter: a reader
+    either gets the complete old snapshot or the complete new one, never a
+    half-written mix.  Readers never block training and training never
+    blocks readers.
+
+    ``clock`` supplies "now" in training windows (the Session wires it to
+    its round counter) so ``age()`` — windows since the served snapshot
+    was taken — is the quantity the staleness SLO bounds.
+    """
+
+    def __init__(self, clock: Callable[[], int] | None = None):
+        self._front: PosteriorSnapshot | None = None
+        self._version = 0
+        self.clock = clock
+        self.n_published = 0
+
+    def publish(
+        self,
+        post: FlatPosterior,
+        *,
+        window: int,
+        dtype=None,
+        telemetry: dict | None = None,
+    ) -> PosteriorSnapshot:
+        self._version += 1
+        snap = take_snapshot(
+            post, window=window, version=self._version, dtype=dtype,
+            telemetry=telemetry,
+        )
+        # the copies must have materialized before the swap: a reader that
+        # picks up the new front serves finished buffers, not futures that
+        # still alias an in-flight donation
+        jax.block_until_ready((snap.posterior.mean, snap.posterior.rho))
+        self._front = snap  # the atomic swap
+        self.n_published += 1
+        return snap
+
+    def current(self) -> PosteriorSnapshot:
+        if self._front is None:
+            raise RuntimeError(
+                "no snapshot published yet — call Session.snapshot() (or "
+                "SnapshotStore.publish) before serving"
+            )
+        return self._front
+
+    @property
+    def version(self) -> int:
+        return self._version
+
+    def age(self, now: int | None = None) -> int:
+        """Windows since the served snapshot was taken (>= 0)."""
+        snap = self.current()
+        if now is None:
+            if self.clock is None:
+                raise ValueError(
+                    "SnapshotStore.age() needs `now` or a wired clock"
+                )
+            now = self.clock()
+        return max(int(now) - snap.window, 0)
+
+    def telemetry(self) -> dict:
+        """Plain-data store block (merged into the serving telemetry)."""
+        if self._front is None:
+            return {"published": 0}
+        snap = self._front
+        out = {
+            "published": self.n_published,
+            "snapshot_window": snap.window,
+            "snapshot_version": snap.version,
+            "snapshot_dtype": snap.dtype,
+            "snapshot_bytes": snap.nbytes(),
+        }
+        if self.clock is not None:
+            out["snapshot_age"] = self.age()
+        return out

@@ -1,0 +1,474 @@
+"""Posterior serving tier (``repro.serve``) — the ISSUE-7 contracts.
+
+The load-bearing assertions:
+
+* snapshot ISOLATION: a published snapshot is bit-stable under continued
+  training, and a training run with serving readers attached is BITWISE
+  identical to one without (the double-buffered swap never touches
+  training state);
+* bf16 snapshots are exactly HALF the fp32 resident bytes — live
+  (``PosteriorSnapshot.nbytes``) and modeled (``serve_roofline``);
+* the staleness SLO refuses (strict) or flags (policy="flag") answers
+  from a snapshot older than ``max_staleness`` windows;
+* the padding-bucket apply cache compiles one program per touched
+  ``(bucket, shape, mc)`` key — trace count pinned, replays add zero.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (
+    DataSpec,
+    ExperimentSpec,
+    InferenceSpec,
+    RunSpec,
+    ServeSpec,
+    TopologySpec,
+    build_session,
+)
+from repro.launch.costmodel import serve_roofline
+from repro.serve import (
+    PosteriorSnapshot,
+    SnapshotStore,
+    StalenessSLOError,
+)
+
+N_AGENTS = 3
+
+
+def _tiny_spec(n_rounds=3, seed=0, serve=None, gossip=True):
+    """3-agent ring (gossip: snapshots carry real staleness telemetry) or
+    star (synchronous), dim-8 3-class task — seconds on CPU."""
+    if gossip:
+        topo = TopologySpec.gossip("ring", {"n": N_AGENTS})
+        data = DataSpec(
+            dataset_params=dict(n_classes=3, dim=8, n_train_per_class=30),
+            partition_params=dict(n_agents=N_AGENTS),
+            batch_size=4, local_updates=2,
+        )
+    else:
+        topo = TopologySpec.star(n_edge=2, a=0.5)
+        data = DataSpec(
+            dataset_params=dict(n_classes=3, dim=8, n_train_per_class=30),
+            partition="star",
+            partition_params=dict(center_labels=[1, 2], edge_labels=[0],
+                                  n_edge=2),
+            batch_size=4, local_updates=2,
+        )
+    return ExperimentSpec(
+        topology=topo,
+        data=data,
+        inference=InferenceSpec(hidden=8, depth=1, lr=1e-2),
+        run=RunSpec(n_rounds=n_rounds, seed=seed),
+        serve=serve or ServeSpec(),
+    )
+
+
+@pytest.fixture(scope="module")
+def trained():
+    sess = build_session(_tiny_spec())
+    sess.run()
+    return sess
+
+
+# ---------------------------------------------------------------------------
+# snapshot isolation
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_bit_stable_under_training():
+    """ISSUE acceptance (a-half): mutating training state after snapshot()
+    never changes the snapshot's buffers or served outputs."""
+    sess = build_session(_tiny_spec())
+    sess.run()
+    snap = sess.snapshot()
+    mean0 = np.asarray(snap.posterior.mean).copy()
+    rho0 = np.asarray(snap.posterior.rho).copy()
+    # mc=0: the deterministic point estimate — any drift in served outputs
+    # can only come from the snapshot buffers themselves
+    server = sess.attach_server(mc_samples=0, bucket_sizes=(4,))
+    x = np.asarray(sess.data.x_test[:4])
+    probs0, _ = server.query(x, agent=0)
+    probs0 = np.asarray(probs0).copy()
+
+    sess.run(n_rounds=3)  # trains on — the published snapshot must not move
+    assert not np.array_equal(
+        np.asarray(sess.posterior().mean), mean0
+    ), "training should have moved the live posterior"
+    np.testing.assert_array_equal(np.asarray(snap.posterior.mean), mean0)
+    np.testing.assert_array_equal(np.asarray(snap.posterior.rho), rho0)
+    probs1, _ = server.query(x, agent=0)
+    np.testing.assert_array_equal(np.asarray(probs1), probs0)
+
+
+def test_training_bitwise_identical_with_serving_attached():
+    """ISSUE acceptance (a): the training trajectory with a serving reader
+    attached (snapshots published + queries served mid-run) is BITWISE the
+    trajectory without one."""
+    plain = build_session(_tiny_spec(n_rounds=0))
+    served = build_session(_tiny_spec(n_rounds=0))
+    server = None
+    x = np.asarray(served.data.x_test[:3])
+    for r in range(4):
+        plain.round()
+        served.round()
+        # reader activity between every round: publish + serve
+        served.snapshot(dtype="bf16" if r % 2 else "f32")
+        if server is None:
+            server = served.attach_server(mc_samples=2, bucket_sizes=(2, 4))
+        server.query(x, agent=r % N_AGENTS)
+    p, s = plain.posterior(), served.posterior()
+    np.testing.assert_array_equal(np.asarray(p.mean), np.asarray(s.mean))
+    np.testing.assert_array_equal(np.asarray(p.rho), np.asarray(s.rho))
+    np.testing.assert_array_equal(
+        np.asarray(jax.random.key_data(plain.key)),
+        np.asarray(jax.random.key_data(served.key)),
+    )
+
+
+def test_double_buffer_swap_keeps_old_reader():
+    """A reader holding the previous snapshot keeps serving it after a new
+    publish (the double buffer's whole point)."""
+    sess = build_session(_tiny_spec())
+    sess.run()
+    old = sess.snapshot()
+    sess.run(n_rounds=2)
+    new = sess.snapshot()
+    assert new.version == old.version + 1
+    assert sess.serve_store.current() is new
+    # the old reference is untouched and distinct
+    assert old.window != new.window
+    assert not np.array_equal(
+        np.asarray(old.posterior.mean), np.asarray(new.posterior.mean)
+    )
+
+
+# ---------------------------------------------------------------------------
+# bf16 residency
+# ---------------------------------------------------------------------------
+
+
+def test_bf16_snapshot_halves_live_and_modeled_hbm(trained):
+    """ISSUE acceptance (b): bf16 snapshots halve the snapshot HBM — in the
+    live buffers and in serve_roofline's model."""
+    s32 = trained.snapshot(dtype="f32")
+    s16 = trained.snapshot(dtype="bf16")
+    assert s32.nbytes() == 2 * s16.nbytes()
+    assert s16.posterior.mean.dtype == jnp.bfloat16
+    n_params = int(s32.posterior.mean.shape[1])
+    r32 = serve_roofline(N_AGENTS, n_params, snapshot_dtype="f32")
+    r16 = serve_roofline(N_AGENTS, n_params, snapshot_dtype="bf16")
+    assert r32["snapshot_hbm_bytes"] == 2 * r16["snapshot_hbm_bytes"]
+    assert r16["snapshot_saving_vs_f32"] == 2.0
+    # the live resident bytes match the model exactly
+    assert s16.nbytes() == r16["snapshot_hbm_bytes"]
+    assert s32.nbytes() == r32["snapshot_hbm_bytes"]
+
+
+def test_bf16_snapshot_serves_close_to_f32(trained):
+    """The bf16-resident snapshot decodes to fp32 inside the apply: served
+    probabilities stay close to the f32 snapshot's (loose tolerance — bf16
+    has ~3 decimal digits)."""
+    x = np.asarray(trained.data.x_test[:6])
+    trained.snapshot(dtype="f32")
+    server = trained.attach_server(mc_samples=0, bucket_sizes=(8,))
+    p32, _ = server.query(x, agent=0)
+    trained.snapshot(dtype="bf16")
+    p16, _ = server.query(x, agent=0)
+    np.testing.assert_allclose(
+        np.asarray(p32), np.asarray(p16), atol=5e-2
+    )
+    np.testing.assert_allclose(np.asarray(p16).sum(-1), 1.0, atol=1e-3)
+
+
+def test_f32_snapshot_is_identity_dtype(trained):
+    snap = trained.snapshot(dtype="f32")
+    assert snap.dtype == "f32"
+    assert snap.posterior.mean.dtype == jnp.float32
+    np.testing.assert_array_equal(
+        np.asarray(snap.posterior.mean), np.asarray(trained.posterior().mean)
+    )
+
+
+# ---------------------------------------------------------------------------
+# staleness SLO
+# ---------------------------------------------------------------------------
+
+
+def test_staleness_slo_strict_refuses():
+    """ISSUE acceptance (c): a snapshot older than max_staleness windows is
+    refused under the strict policy."""
+    sess = build_session(_tiny_spec(
+        serve=ServeSpec(max_staleness=2, staleness_policy="strict",
+                        mc_samples=1),
+    ))
+    sess.run()
+    sess.snapshot()
+    server = sess.attach_server()
+    x = np.asarray(sess.data.x_test[:2])
+    probs, meta = server.query(x)  # age 0: fine
+    assert meta["slo_ok"] and meta["snapshot_age"] == 0
+    sess.run(n_rounds=2)
+    _, meta = server.query(x)  # age 2 == bound: still fine
+    assert meta["slo_ok"] and meta["snapshot_age"] == 2
+    sess.run(n_rounds=1)
+    with pytest.raises(StalenessSLOError, match="3 windows stale"):
+        server.query(x)
+    assert server.n_slo_breaches == 1
+    # republishing restores service
+    sess.snapshot()
+    _, meta = server.query(x)
+    assert meta["slo_ok"] and meta["snapshot_age"] == 0
+
+
+def test_staleness_slo_flag_serves_marked():
+    """ISSUE acceptance (c): policy="flag" serves the stale answer but marks
+    it slo_ok=False and counts the breach."""
+    sess = build_session(_tiny_spec(
+        serve=ServeSpec(max_staleness=1, staleness_policy="flag",
+                        mc_samples=1),
+    ))
+    sess.run()
+    sess.snapshot()
+    server = sess.attach_server()
+    sess.run(n_rounds=3)
+    x = np.asarray(sess.data.x_test[:2])
+    probs, meta = server.query(x)
+    assert not meta["slo_ok"]
+    assert meta["snapshot_age"] == 3
+    assert server.n_slo_breaches == 1
+    np.testing.assert_allclose(np.asarray(probs).sum(-1), 1.0, atol=1e-5)
+
+
+def test_unbounded_slo_never_breaches(trained):
+    trained.snapshot()
+    server = trained.attach_server(max_staleness=None, mc_samples=0,
+                                   bucket_sizes=(4,))
+    ok, age = server.check_slo()
+    assert ok and server.n_slo_breaches == 0
+
+
+def test_query_before_publish_raises():
+    sess = build_session(_tiny_spec(n_rounds=0))
+    server = sess.attach_server()
+    with pytest.raises(RuntimeError, match="no snapshot published"):
+        server.query(np.zeros((2, 8), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# padding buckets + the compiled-once apply cache
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_trace_count_pinned(trained):
+    """ISSUE satellite: arbitrary ragged request streams hit a SMALL fixed
+    set of compiled programs — one trace per touched (bucket, shape, mc)
+    key, zero retraces on replay."""
+    trained.snapshot(dtype="f32")
+    server = trained.attach_server(mc_samples=2, bucket_sizes=(2, 4, 8))
+    x = np.asarray(trained.data.x_test)
+    stream = [x[: n % 9 + 1] for n in range(17)]  # sizes 1..9, ragged
+    for rows in stream:
+        server.query(rows, agent=0)
+    # sizes 1..9 under buckets (2,4,8): plans touch buckets {2, 4, 8} only
+    assert server.n_traces == 3
+    before = server.n_traces
+    for rows in stream:  # replay: every program already compiled
+        server.query(rows, agent=1)  # different agent row: same programs
+    assert server.n_traces == before
+    # a new mc size touches the same buckets -> new keys, new traces
+    server.query(x[:5], agent=0, mc_samples=5)
+    assert server.n_traces == before + 1  # plan for 5 rows: one slab of 8
+
+
+def test_bucket_plan_shapes(trained):
+    trained.snapshot()
+    server = trained.attach_server(bucket_sizes=(2, 4, 8))
+    assert server._bucket_plan(0) == []
+    assert server._bucket_plan(1) == [2]
+    assert server._bucket_plan(8) == [8]
+    assert server._bucket_plan(9) == [8, 2]
+    assert server._bucket_plan(21) == [8, 8, 8]  # 16 full + 5 -> pad to 8
+
+
+def test_request_reassembly_matches_unbatched(trained):
+    """Micro-batched ragged requests come back per request, in order, equal
+    to serving each alone (same snapshot, mc=0 so no key sensitivity)."""
+    trained.snapshot(dtype="f32")
+    server = trained.attach_server(mc_samples=0, bucket_sizes=(2, 4))
+    x = np.asarray(trained.data.x_test)
+    reqs = [x[:3], x[3:4], x[4:9]]
+    outs, _ = server.serve(reqs, agents=[0, 1, 0])
+    for r, out in zip(reqs, outs):
+        assert out.shape == (r.shape[0], 3)
+    solo0, _ = server.query(reqs[0], agent=0)
+    np.testing.assert_allclose(
+        np.asarray(outs[0]), np.asarray(solo0), rtol=1e-6, atol=1e-7
+    )
+    solo1, _ = server.query(reqs[1], agent=1)
+    np.testing.assert_allclose(
+        np.asarray(outs[1]), np.asarray(solo1), rtol=1e-6, atol=1e-7
+    )
+
+
+def test_point_estimate_matches_session_predictive(trained):
+    """The served L=0 path is the Session's own n_mc=0 point estimate."""
+    trained.snapshot(dtype="f32")
+    server = trained.attach_server(mc_samples=0, bucket_sizes=(8,))
+    x = np.asarray(trained.data.x_test[:6])
+    for agent in range(N_AGENTS):
+        served, _ = server.query(x, agent=agent)
+        direct = trained.predictive(agent, x, n_mc=0)
+        np.testing.assert_allclose(
+            np.asarray(served), np.asarray(direct), rtol=1e-6, atol=1e-7
+        )
+
+
+def test_bad_requests_rejected(trained):
+    trained.snapshot()
+    server = trained.attach_server(bucket_sizes=(4,))
+    x = np.zeros((2, 8), np.float32)
+    with pytest.raises(ValueError, match="agent 7 out of range"):
+        server.query(x, agent=7)
+    with pytest.raises(ValueError, match="agent ids"):
+        server.serve([x, x], agents=[0])
+    with pytest.raises(ValueError, match="wrap single rows"):
+        server.serve([np.zeros((8,), np.float32)])
+    with pytest.raises(ValueError, match="ascending"):
+        trained.attach_server(bucket_sizes=(4, 2))
+    with pytest.raises(ValueError, match="staleness_policy"):
+        trained.attach_server(staleness_policy="maybe")
+
+
+# ---------------------------------------------------------------------------
+# spec plumbing + telemetry + checkpoints
+# ---------------------------------------------------------------------------
+
+
+def test_serve_spec_validation_and_doc_roundtrip():
+    spec = _tiny_spec(serve=ServeSpec(
+        snapshot_dtype="bf16", mc_samples=4, bucket_sizes=[2, 8],
+        max_staleness=3, staleness_policy="flag",
+    ))
+    spec.validate()
+    assert spec.serve.bucket_sizes == (2, 8)  # list normalized to tuple
+    spec2 = ExperimentSpec.from_doc(spec.to_doc())
+    assert spec2.serve == spec.serve
+    # a pre-serving checkpoint doc (no "serve" key) gets the defaults
+    doc = spec.to_doc()
+    del doc["serve"]
+    spec3 = ExperimentSpec.from_doc(doc)
+    assert spec3.serve == ServeSpec()
+    for bad in (
+        ServeSpec(snapshot_dtype="f64"),
+        ServeSpec(mc_samples=-1),
+        ServeSpec(bucket_sizes=()),
+        ServeSpec(bucket_sizes=(4, 4)),
+        ServeSpec(max_staleness=-2),
+        ServeSpec(staleness_policy="never"),
+    ):
+        with pytest.raises(ValueError):
+            bad.validate()
+
+
+def test_snapshot_carries_gossip_telemetry(trained):
+    snap = trained.snapshot()
+    assert snap.telemetry["window"] == trained.round_idx
+    assert "staleness" in snap.telemetry
+    assert {"p50", "p90", "max"} <= set(snap.telemetry["staleness"])
+    assert snap.telemetry["merges_total"] >= 0
+
+
+def test_evaluate_exposes_serving_block():
+    """ISSUE satellite: Session.evaluate() surfaces the serving telemetry
+    (snapshot age, SLO breaches) next to the staleness/fault metrics."""
+    sess = build_session(_tiny_spec(
+        serve=ServeSpec(max_staleness=0, staleness_policy="flag",
+                        mc_samples=1),
+    ))
+    sess.run()
+    assert "serving" not in sess.evaluate(n_mc=1)  # no tier attached yet
+    sess.snapshot()
+    server = sess.attach_server()
+    sess.run(n_rounds=1)
+    server.query(np.asarray(sess.data.x_test[:2]))  # 1 window stale: breach
+    out = sess.evaluate(n_mc=1)
+    serving = out["serving"]
+    assert serving["slo"]["breaches"] == 1
+    assert serving["snapshot_age"] == 1
+    assert serving["published"] == 1
+    assert serving["requests"] == 1
+    assert "staleness" in out  # the gossip block still rides alongside
+
+
+def test_snapshot_checkpoint_roundtrip(tmp_path, trained):
+    """save/restore_snapshot round-trips both residencies bit-exactly,
+    provenance included."""
+    for dt in ("f32", "bf16"):
+        snap = trained.snapshot(dtype=dt)
+        path = os.path.join(tmp_path, f"snap_{dt}.ckpt")
+        snap.save(path)
+        back = PosteriorSnapshot.load(path)
+        assert back.dtype == dt
+        assert back.window == snap.window
+        assert back.version == snap.version
+        assert back.telemetry == snap.telemetry
+        assert back.posterior.mean.dtype == snap.posterior.mean.dtype
+        np.testing.assert_array_equal(
+            np.asarray(back.posterior.mean.astype(jnp.float32)),
+            np.asarray(snap.posterior.mean.astype(jnp.float32)),
+        )
+        assert (back.posterior.layout.to_doc()
+                == snap.posterior.layout.to_doc())
+    with pytest.raises(ValueError, match="not a posterior-snapshot"):
+        trained.save(os.path.join(tmp_path, "sess.ckpt"))
+        PosteriorSnapshot.load(os.path.join(tmp_path, "sess.ckpt"))
+
+
+def test_store_age_and_version():
+    store = SnapshotStore()
+    with pytest.raises(RuntimeError, match="no snapshot published"):
+        store.current()
+    assert store.telemetry() == {"published": 0}
+    sess = build_session(_tiny_spec(n_rounds=0))
+    sess.round()
+    snap = sess.snapshot()
+    st = sess.serve_store
+    assert st.age() == 0
+    sess.round()
+    sess.round()
+    assert st.age() == 2
+    assert st.age(now=10) == 9
+    sess.snapshot()
+    assert st.version == 2 and st.age() == 0
+
+
+def test_synchronous_engine_serves_too():
+    """The serving tier is engine-agnostic: the synchronous star engine has
+    no gossip telemetry but snapshots and serves the same way."""
+    sess = build_session(_tiny_spec(gossip=False))
+    sess.run()
+    snap = sess.snapshot(dtype="bf16")
+    assert snap.telemetry == {}  # no snapshot_meta hook on this engine
+    server = sess.attach_server(mc_samples=1, bucket_sizes=(4,))
+    probs, meta = server.query(np.asarray(sess.data.x_test[:3]), agent=1)
+    assert np.asarray(probs).shape == (3, 3)
+    assert meta["slo_ok"]
+
+
+def test_conjugate_linreg_has_no_serving_path():
+    spec = ExperimentSpec(
+        topology=TopologySpec.complete(4),
+        data=DataSpec(dataset="linreg", batch_size=10),
+        inference=InferenceSpec(method="conjugate_linreg"),
+        run=RunSpec(n_rounds=1, seed=0),
+    )
+    sess = build_session(spec)
+    sess.run()
+    with pytest.raises(ValueError, match="serves flat"):
+        sess.snapshot()
+    with pytest.raises(ValueError, match="classification model"):
+        sess.attach_server()
