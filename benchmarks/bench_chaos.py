@@ -31,9 +31,10 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import time
 
 import numpy as np
+
+from repro.obs.trace import CompileWarmTimer
 
 DEFAULT_JSON = "BENCH_chaos.json"
 
@@ -92,13 +93,13 @@ def _combined_chaos(n: int = 6, n_rounds: int = 8) -> dict:
 
     s = build_session(_chaos_spec(n, "quarantine", _FAULTS,
                                   n_rounds=n_rounds))
-    t0 = time.perf_counter()
-    recs = [s.round()]
-    compile_us = (time.perf_counter() - t0) * 1e6
-    t0 = time.perf_counter()
-    for _ in range(n_rounds - 1):
-        recs.append(s.round())
-    wall_us = (time.perf_counter() - t0) * 1e6
+    t = CompileWarmTimer()
+    with t.compile():
+        recs = [s.round()]
+    with t.warm():
+        for _ in range(n_rounds - 1):
+            recs.append(s.round())
+    compile_us, wall_us = t.compile_us, t.warm_us
     # every reported (trained-agent) loss finite; idle/crashed windows may
     # legitimately report None
     losses = [r["loss"] for r in recs if r["loss"] is not None]
@@ -109,7 +110,7 @@ def _combined_chaos(n: int = 6, n_rounds: int = 8) -> dict:
         f"quarantine let garbage reach a resident posterior: {health}"
     assert s.engine.n_traces == 1, "guarded window retraced"
     tel = s.evaluate(n_mc=1)
-    faults = tel["faults"]
+    faults = tel["engine"]["faults"]
     assert faults["quarantined"]["total"] > 0, \
         "chaos run quarantined nothing — the injection is not exercising " \
         "the guard"
@@ -117,13 +118,13 @@ def _combined_chaos(n: int = 6, n_rounds: int = 8) -> dict:
         "chaos run never crashed an agent"
     return {
         "n_agents": n,
-        "windows": int(tel["windows"]),
+        "windows": int(tel["engine"]["windows"]),
         "final_loss": losses[-1],
         "n_crashed_per_round": [int(r.get("n_crashed", 0)) for r in recs],
         "health": health,
         "faults": faults,
-        "staleness": tel["staleness"],
-        "merges": tel["merges"],
+        "staleness": tel["engine"]["staleness"],
+        "merges": tel["engine"]["merges"],
         "n_traces": int(s.engine.n_traces),
         "compile_us": compile_us,
         "wall_us_per_window": wall_us / (n_rounds - 1),
@@ -222,11 +223,11 @@ def _fault_rate_sweep(n: int = 6, n_rounds: int = 8) -> list[dict]:
         out.append({
             "crash_rate": crash_rate,
             "final_loss": losses[-1],
-            "uptime_frac_mean": tel["faults"].get("uptime", {}).get(
+            "uptime_frac_mean": tel["engine"]["faults"].get("uptime", {}).get(
                 "frac_mean", 1.0),
-            "merges_total": tel["merges"]["total"],
-            "quarantined_total": tel["faults"].get("quarantined", {}).get(
-                "total", 0),
+            "merges_total": tel["engine"]["merges"]["total"],
+            "quarantined_total": tel["engine"]["faults"].get(
+                "quarantined", {}).get("total", 0),
             "avg_acc": tel["avg_acc"],
         })
     # graceful degradation: more churn => fewer windows up, fewer merges

@@ -1,0 +1,128 @@
+"""Compare two ``BENCH_*.json`` documents and flag timing regressions
+(`benchmarks/run.py bench-diff OLD.json NEW.json`).
+
+Every benchmark in this harness emits a nested JSON document whose timing
+leaves follow one naming convention: wall-clock microseconds carry a
+``_us`` token (``compile_us``, ``wall_us_per_window``, ``p50_us``) and
+modeled times a ``seconds`` token (``roofline_seconds``).  This tool
+flattens both documents, pairs the common timing leaves by dotted path,
+and flags every leaf where the new value exceeds the old by more than the
+threshold (default +25%) AND by an absolute floor (default 50 us — tiny
+CPU timings jitter by more than any sane relative threshold).
+
+Non-timing leaves (counts, accuracies, rates) are ignored: those are
+correctness signals with their own asserts inside each benchmark.
+
+Advisory by default (exit 0 with a report); ``--strict`` exits 1 on any
+regression so CI can gate on it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+DEFAULT_THRESHOLD = 0.25  # +25% relative
+DEFAULT_FLOOR_US = 50.0   # ignore absolute deltas below this
+
+
+def _flatten(node, prefix: str = "") -> dict[str, float]:
+    """Dotted-path -> numeric-leaf map (bools excluded)."""
+    out: dict[str, float] = {}
+    if isinstance(node, dict):
+        for k, v in node.items():
+            out.update(_flatten(v, f"{prefix}.{k}" if prefix else str(k)))
+    elif isinstance(node, (list, tuple)):
+        for i, v in enumerate(node):
+            out.update(_flatten(v, f"{prefix}.{i}"))
+    elif isinstance(node, bool):
+        pass
+    elif isinstance(node, (int, float)):
+        out[prefix] = float(node)
+    return out
+
+
+def _is_timing(path: str) -> bool:
+    """True when any underscore-token of any path segment is a timing unit."""
+    tokens: list[str] = []
+    for seg in path.split("."):
+        tokens.extend(seg.split("_"))
+    return "us" in tokens or "seconds" in tokens
+
+
+def diff(old_doc: dict, new_doc: dict,
+         threshold: float = DEFAULT_THRESHOLD,
+         floor_us: float = DEFAULT_FLOOR_US) -> dict:
+    """Pair common timing leaves; return all rows + the regressed subset."""
+    old = {k: v for k, v in _flatten(old_doc).items() if _is_timing(k)}
+    new = {k: v for k, v in _flatten(new_doc).items() if _is_timing(k)}
+    rows, regressions = [], []
+    for path in sorted(set(old) & set(new)):
+        o, n = old[path], new[path]
+        if not (math.isfinite(o) and math.isfinite(n)):
+            continue
+        # modeled roofline terms are in seconds; lift to us for the floor
+        delta = (n - o) * (1e6 if "seconds" in path else 1.0)
+        ratio = (n / o) if o > 0 else math.inf
+        regressed = bool(n > o * (1.0 + threshold) and delta > floor_us)
+        row = {"path": path, "old": o, "new": n, "ratio": ratio,
+               "regressed": regressed}
+        rows.append(row)
+        if regressed:
+            regressions.append(row)
+    return {
+        "n_compared": len(rows),
+        "n_old_only": len(set(old) - set(new)),
+        "n_new_only": len(set(new) - set(old)),
+        "threshold": threshold,
+        "rows": rows,
+        "regressions": regressions,
+    }
+
+
+def run(old_path: str, new_path: str,
+        threshold: float = DEFAULT_THRESHOLD,
+        floor_us: float = DEFAULT_FLOOR_US,
+        strict: bool = False) -> dict:
+    with open(old_path) as f:
+        old_doc = json.load(f)
+    with open(new_path) as f:
+        new_doc = json.load(f)
+    rep = diff(old_doc, new_doc, threshold=threshold, floor_us=floor_us)
+    print(f"# bench-diff {old_path} -> {new_path}: "
+          f"{rep['n_compared']} timing leaves compared "
+          f"({rep['n_old_only']} only-old, {rep['n_new_only']} only-new), "
+          f"threshold +{threshold:.0%}")
+    print("path,old,new,ratio,flag")
+    for row in rep["rows"]:
+        flag = "REGRESSED" if row["regressed"] else "ok"
+        print(f"{row['path']},{row['old']:.1f},{row['new']:.1f},"
+              f"{row['ratio']:.2f},{flag}")
+    if rep["regressions"]:
+        print(f"# {len(rep['regressions'])} timing regression(s) flagged",
+              file=sys.stderr)
+        if strict:
+            sys.exit(1)
+    else:
+        print("# no timing regressions")
+    return rep
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("old", help="baseline BENCH_*.json")
+    ap.add_argument("new", help="candidate BENCH_*.json")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="relative regression threshold (default 0.25)")
+    ap.add_argument("--floor-us", type=float, default=DEFAULT_FLOOR_US,
+                    help="ignore absolute deltas below this many us")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 when any regression is flagged")
+    args = ap.parse_args(argv)
+    run(args.old, args.new, threshold=args.threshold,
+        floor_us=args.floor_us, strict=args.strict)
+
+
+if __name__ == "__main__":
+    main()

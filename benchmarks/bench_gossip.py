@@ -41,7 +41,6 @@ CSV rows.
 from __future__ import annotations
 
 import json
-import time
 
 import jax
 import jax.numpy as jnp
@@ -64,18 +63,15 @@ from repro.launch.consensus_opt import (
     window_shard_offsets,
 )
 from repro.launch.costmodel import gossip_window_roofline
+from repro.obs.trace import CompileWarmTimer, median_us
 
 DEFAULT_JSON = "BENCH_gossip.json"
 
 
 def _time(fn, args, iters: int = 5) -> float:
+    # warm once (compile), then the obs.trace median-of-warm-calls helper
     jax.block_until_ready(fn(*args))
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        ts.append((time.perf_counter() - t0) * 1e6)
-    return float(np.median(ts))
+    return float(median_us(fn, *args, iters=iters))
 
 
 def _all_active_equivalence() -> dict:
@@ -165,23 +161,24 @@ def _poisson_smoke() -> dict:
     s = build_session(spec)
     # warm up ONE window before the timer: the first call pays the jit
     # compile, which on tiny CPU shapes dwarfs the run (the seed benchmark's
-    # 4.09 s "wall" was ~all compile) — report it separately
-    t0 = time.perf_counter()
-    first = s.round()
-    compile_us = (time.perf_counter() - t0) * 1e6
-    t0 = time.perf_counter()
-    hist = s.run(n_rounds - 1, eval_every=n_rounds - 1)
-    wall_us = (time.perf_counter() - t0) * 1e6
+    # 4.09 s "wall" was ~all compile) — report it separately via the
+    # obs.trace compile/warm split (the reusable form of this very pattern)
+    t = CompileWarmTimer()
+    with t.compile():
+        first = s.round()
+    with t.warm():
+        hist = s.run(n_rounds - 1, eval_every=n_rounds - 1)
+    compile_us, wall_us = t.compile_us, t.warm_us
     tel = s.evaluate()
     assert np.isfinite(hist[-1]["loss"])
     assert s.engine.n_traces == 1, "window retraced: not one jitted call"
     return {
-        "windows": tel["windows"],
+        "windows": tel["engine"]["windows"],
         "loss": hist[-1]["loss"],
         "n_trained": hist[-1]["n_trained"],
         "avg_acc": tel["avg_acc"],
-        "staleness": tel["staleness"],
-        "merges": tel["merges"],
+        "staleness": tel["engine"]["staleness"],
+        "merges": tel["engine"]["merges"],
         "n_traces": s.engine.n_traces,
         "compile_us": compile_us,
         "wall_us_total": wall_us,  # warm: windows 2..n_rounds only
@@ -238,12 +235,12 @@ def _delay_sweep() -> list[dict]:
                  "inner": {"kind": "poisson", "rate": 0.8, "seed": 1},
                  "latency": {"kind": "constant", "delay": delay}}
         s = build_session(_smoke_spec(n, clock, n_rounds=n_rounds))
-        t0 = time.perf_counter()
-        s.round()
-        compile_us = (time.perf_counter() - t0) * 1e6
-        t0 = time.perf_counter()
-        hist = s.run(n_rounds - 1, eval_every=n_rounds - 1)
-        wall_us = (time.perf_counter() - t0) * 1e6
+        t = CompileWarmTimer()
+        with t.compile():
+            s.round()
+        with t.warm():
+            hist = s.run(n_rounds - 1, eval_every=n_rounds - 1)
+        compile_us, wall_us = t.compile_us, t.warm_us
         tel = s.evaluate()
         assert s.engine.n_traces == 1, "delayed window retraced"
         win = s.engine.clock.window(n_rounds - 1)
@@ -251,8 +248,8 @@ def _delay_sweep() -> list[dict]:
             "delay": delay,
             "hist_slots": s.engine.hist_slots,
             "loss": hist[-1]["loss"],
-            "staleness": tel["staleness"],
-            "merges_total": tel["merges"]["total"],
+            "staleness": tel["engine"]["staleness"],
+            "merges_total": tel["engine"]["merges"]["total"],
             "compile_us": compile_us,
             "wall_us_per_window": wall_us / (n_rounds - 1),
             "roofline": gossip_window_roofline(

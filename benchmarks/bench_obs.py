@@ -1,0 +1,259 @@
+"""Observability-layer smoke (`benchmarks/run.py obs-smoke`).
+
+Four parts, pinning the ROADMAP "Observability" contracts:
+
+1. **Disabled-span overhead**: with tracing off ``Tracer.span`` returns a
+   shared null context manager, so instrumentation left in hot host loops
+   is free — the per-span overhead is measured and asserted tiny.
+2. **Zero-perturbation bitwise ladder**: the SAME gossip spec run with
+   ``ObsSpec(enabled=True)`` vs unset must produce bitwise-identical
+   posteriors and identical jit trace counts — observation never perturbs
+   the training math (the engine-level twin of ``tests/test_obs.py``).
+3. **Theory-vs-measured convergence**: on a static 4-agent bidirectional
+   ring with ``lr=0`` and per-agent inits the round map reduces to the
+   plain W-average, so network disagreement must decay at the spectral
+   rate ``-log lambda_max(W)`` (``core.theory.consensus_contraction_rate``).
+   The tracker's measured log-linear slope is asserted a finite O(1)
+   multiple of theory (``rate_attainment``); bounds are loose because the
+   least-squares fit includes the faster-decaying transient modes.
+   This run also emits the sample JSONL trace CI uploads.
+4. **Exporter golden**: the Prometheus rendering of a deterministic
+   registry is compared byte-for-byte against a golden string — export
+   stability is part of the ``obs.metrics`` contract.
+
+Output: ``BENCH_obs.json`` + the sample trace ``BENCH_obs_trace.jsonl``
+and the harness's ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+DEFAULT_JSON = "BENCH_obs.json"
+DEFAULT_TRACE = "BENCH_obs_trace.jsonl"
+
+# max tolerated per-span overhead of a DISABLED tracer.  The null span is a
+# shared contextlib.nullcontext, so the real cost is one method call + the
+# with-statement (~0.1-0.3 us on CPython); 5 us leaves slack for a loaded
+# CI host while still catching any accidental allocation on the off path.
+MAX_DISABLED_SPAN_US = 5.0
+
+_EXPORTER_GOLDEN = (
+    '# TYPE serve_latency_us histogram\n'
+    'serve_latency_us_bucket{mc="1",le="10"} 0\n'
+    'serve_latency_us_bucket{mc="1",le="100"} 1\n'
+    'serve_latency_us_bucket{mc="1",le="1000"} 1\n'
+    'serve_latency_us_bucket{mc="1",le="+Inf"} 1\n'
+    'serve_latency_us_sum{mc="1"} 40\n'
+    'serve_latency_us_count{mc="1"} 1\n'
+    'serve_latency_us_bucket{mc="8",le="10"} 1\n'
+    'serve_latency_us_bucket{mc="8",le="100"} 1\n'
+    'serve_latency_us_bucket{mc="8",le="1000"} 2\n'
+    'serve_latency_us_bucket{mc="8",le="+Inf"} 2\n'
+    'serve_latency_us_sum{mc="8"} 257\n'
+    'serve_latency_us_count{mc="8"} 2\n'
+    '# TYPE session_loss gauge\n'
+    'session_loss 0.25\n'
+    '# HELP session_rounds training rounds completed\n'
+    '# TYPE session_rounds counter\n'
+    'session_rounds_total 3\n'
+    '# TYPE engine_name_info gauge\n'
+    'engine_name_info{value="gossip"} 1\n'
+)
+
+
+def _span_overhead(n: int = 50_000) -> dict:
+    """Per-span cost of the disabled vs enabled tracer (host-only loop)."""
+    from repro.obs.trace import Tracer
+
+    off = Tracer(enabled=False)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        with off.span("probe"):
+            pass
+    off_us = (time.perf_counter() - t0) * 1e6 / n
+    assert not off.spans, "disabled tracer recorded spans"
+    assert off_us < MAX_DISABLED_SPAN_US, (
+        f"disabled span overhead {off_us:.3f} us/span exceeds the "
+        f"{MAX_DISABLED_SPAN_US} us budget — the off path is no longer free"
+    )
+
+    on = Tracer(enabled=True)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        with on.span("probe"):
+            pass
+    on_us = (time.perf_counter() - t0) * 1e6 / n
+    assert len(on.spans) == n
+    return {"disabled_us_per_span": off_us, "enabled_us_per_span": on_us,
+            "n_spans": n}
+
+
+def _gossip_spec(n: int = 6, n_rounds: int = 6, obs: bool = False):
+    """A small async-gossip spec; the instrumented engine's bitwise probe."""
+    from repro.api import (
+        DataSpec, ExperimentSpec, InferenceSpec, ObsSpec, RunSpec,
+        TopologySpec,
+    )
+
+    clock = {
+        "kind": "failure_injected",
+        "inner": {"kind": "poisson", "rate": 0.8, "seed": 1},
+        "drop_rate": 0.1,
+    }
+    return ExperimentSpec(
+        topology=TopologySpec.gossip("bidirectional_ring", {"n": n},
+                                     clock=clock),
+        data=DataSpec(
+            dataset_params=dict(n_classes=3, dim=8, n_train_per_class=30),
+            partition="iid", partition_params=dict(n_agents=n),
+            batch_size=4, local_updates=2,
+        ),
+        inference=InferenceSpec(hidden=8, depth=1, lr=1e-2),
+        run=RunSpec(n_rounds=n_rounds, seed=0),
+        obs=ObsSpec(enabled=obs),
+    )
+
+
+def _zero_perturbation(n_rounds: int = 6) -> dict:
+    """obs-enabled vs unset on the gossip engine: bitwise posteriors,
+    identical jit trace counts."""
+    from repro.api import build_session
+
+    posts, traces = {}, {}
+    for enabled in (False, True):
+        s = build_session(_gossip_spec(n_rounds=n_rounds, obs=enabled))
+        for _ in range(n_rounds):
+            s.round()
+        posts[enabled] = s.posterior()
+        traces[enabled] = int(s.engine.n_traces)
+    np.testing.assert_array_equal(
+        np.asarray(posts[False].mean), np.asarray(posts[True].mean)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(posts[False].rho), np.asarray(posts[True].rho)
+    )
+    assert traces[False] == traces[True], (
+        f"observability changed the trace count: {traces}"
+    )
+    return {"bitwise": True, "n_traces": traces[True]}
+
+
+def _rate_experiment(
+    n: int = 4, n_rounds: int = 12, trace_out: str | None = DEFAULT_TRACE
+) -> dict:
+    """Static ring, lr=0, per-agent inits: consensus is the plain W-average,
+    so measured disagreement decay must track -log lambda_max(W)."""
+    from repro.api import (
+        DataSpec, ExperimentSpec, InferenceSpec, ObsSpec, RunSpec,
+        TopologySpec, build_session,
+    )
+
+    spec = ExperimentSpec(
+        topology=TopologySpec(kind="bidirectional_ring", params={"n": n}),
+        data=DataSpec(
+            dataset_params=dict(n_classes=3, dim=8, n_train_per_class=30),
+            partition="iid", partition_params=dict(n_agents=n),
+            batch_size=4, local_updates=1,
+        ),
+        inference=InferenceSpec(hidden=8, depth=1, lr=0.0, shared_init=False),
+        run=RunSpec(n_rounds=n_rounds, seed=0),
+        obs=ObsSpec(enabled=True, jsonl_path=trace_out),
+    )
+    s = build_session(spec)
+    s.run()
+    rep = s.obs.convergence.report()
+    theory = rep["theory_rate"]
+    att = rep["rate_attainment"]
+    assert theory is not None and np.isfinite(theory) and theory > 0, (
+        f"static ring must yield a finite spectral rate, got {theory}"
+    )
+    assert att is not None and np.isfinite(att), (
+        f"rate_attainment must be finite on the static ring, got {att}"
+    )
+    # loose O(1) bounds: the least-squares slope over the whole run includes
+    # the faster-contracting non-dominant eigenmodes, so attainment sits
+    # above 1 early and approaches 1 from above as the run lengthens
+    assert 0.5 < att < 4.0, (
+        f"measured/theory contraction ratio {att:.3f} outside loose bounds "
+        f"(measured {rep['measured_rate']:.4f}, theory {theory:.4f})"
+    )
+    dashboard = s.dashboard()  # renders from the registry, flushes the sink
+    n_events = s.obs.sink.n_events if s.obs.sink is not None else 0
+    if trace_out:
+        assert n_events > 0, "JSONL sink recorded no events"
+    return {
+        "n_agents": n,
+        "n_rounds": n_rounds,
+        "theory_rate": theory,
+        "measured_rate": rep["measured_rate"],
+        "rate_attainment": att,
+        "overlay": rep["overlay"],
+        "latest": rep["latest"],
+        "trace_events": n_events,
+        "trace_path": trace_out,
+        "dashboard_lines": len(dashboard.splitlines()),
+    }
+
+
+def _exporter_golden() -> dict:
+    """Byte-for-byte golden check of the Prometheus text exporter."""
+    from repro.obs.metrics import MetricsRegistry
+
+    reg = MetricsRegistry()
+    reg.counter("session.rounds", help="training rounds completed").inc(3)
+    reg.gauge("session.loss").set(0.25)
+    h = reg.histogram("serve.latency_us", buckets=(10.0, 100.0, 1000.0))
+    h.observe(7.0, mc="8")
+    h.observe(250.0, mc="8")
+    h.observe(40.0, mc="1")
+    reg.info("engine.name", "gossip")
+    text = reg.to_prometheus()
+    assert text == _EXPORTER_GOLDEN, (
+        "exporter output drifted from the golden:\n"
+        + "".join(
+            f"  {'==' if a == b else '!='} {a!r} vs {b!r}\n"
+            for a, b in zip(text.splitlines(), _EXPORTER_GOLDEN.splitlines())
+        )
+    )
+    return {"ok": True, "n_lines": len(text.splitlines())}
+
+
+def run(json_out: str | None = DEFAULT_JSON,
+        trace_out: str | None = DEFAULT_TRACE) -> dict:
+    import jax
+
+    overhead = _span_overhead()
+    print(f"obs_span_overhead,{overhead['disabled_us_per_span']:.4f},"
+          f"enabled={overhead['enabled_us_per_span']:.4f}us;"
+          f"budget={MAX_DISABLED_SPAN_US}us")
+    bitwise = _zero_perturbation()
+    print(f"obs_zero_perturbation,0.0,bitwise=1;"
+          f"n_traces={bitwise['n_traces']}")
+    rate = _rate_experiment(trace_out=trace_out)
+    print(f"obs_rate_attainment,0.0,"
+          f"measured={rate['measured_rate']:.4f};"
+          f"theory={rate['theory_rate']:.4f};"
+          f"attainment={rate['rate_attainment']:.3f};"
+          f"trace_events={rate['trace_events']}")
+    golden = _exporter_golden()
+    print(f"obs_exporter_golden,0.0,ok=1;lines={golden['n_lines']}")
+    doc = {
+        "benchmark": "observability_layer",
+        "backend": jax.default_backend(),
+        "span_overhead": overhead,
+        "zero_perturbation": bitwise,
+        "rate_experiment": rate,
+        "exporter_golden": golden,
+    }
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"# wrote {json_out}")
+    return doc
+
+
+if __name__ == "__main__":
+    run()

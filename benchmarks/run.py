@@ -45,6 +45,15 @@ Subcommands:
             replay, served point estimate vs Session.predictive, then
             p50/p99 latency + QPS sweeps vs MC ensemble size L and bucket
             policy; emits BENCH_serve.json
+  run.py obs-smoke [--json-out F]                observability layer smoke:
+            disabled-span overhead asserted free, obs-enabled vs unset
+            bitwise ladder on the gossip engine, theory-vs-measured
+            convergence rate_attainment on a static ring, Prometheus
+            exporter golden check; emits BENCH_obs.json + a sample JSONL
+            trace (BENCH_obs_trace.jsonl)
+  run.py bench-diff OLD.json NEW.json            compare two BENCH_*.json
+            documents and flag timing regressions (advisory; --strict to
+            gate)
 """
 from __future__ import annotations
 
@@ -56,7 +65,9 @@ import traceback
 from benchmarks import (
     bench_chaos,
     bench_consensus,
+    bench_diff,
     bench_gossip,
+    bench_obs,
     bench_serve,
     calibration,
     fig1_linreg,
@@ -141,14 +152,21 @@ def main(argv=None) -> None:
     ap.add_argument(
         "cmd", nargs="?",
         choices=["figures", "bench", "api-smoke", "gossip-smoke",
-                 "chaos-smoke", "serve-smoke"],
+                 "chaos-smoke", "serve-smoke", "obs-smoke", "bench-diff"],
         default="figures",
         help="figures (default): paper figures; bench: consensus perf "
         "sweep; api-smoke: declarative-API smoke; gossip-smoke: async "
         "gossip runtime smoke (all-active equivalence + Poisson run); "
         "chaos-smoke: fault-tolerance chaos harness (churn + corruption "
         "under quarantine); serve-smoke: posterior serving tier (snapshot "
-        "halving + trace pinning + latency/QPS sweeps)",
+        "halving + trace pinning + latency/QPS sweeps); obs-smoke: "
+        "observability layer (span overhead + bitwise ladder + "
+        "rate_attainment + exporter golden); bench-diff: compare two "
+        "BENCH_*.json for timing regressions",
+    )
+    ap.add_argument(
+        "paths", nargs="*",
+        help="bench-diff only: the OLD.json NEW.json pair to compare",
     )
     ap.add_argument("--only", nargs="*", choices=list(ALL), default=None)
     ap.add_argument(
@@ -159,6 +177,10 @@ def main(argv=None) -> None:
     ap.add_argument(
         "--full", action="store_true",
         help="bench only: run the full sweep instead of the quick CI smoke",
+    )
+    ap.add_argument(
+        "--strict", action="store_true",
+        help="bench-diff only: exit 1 when a timing regression is flagged",
     )
     args = ap.parse_args(argv)
 
@@ -173,6 +195,14 @@ def main(argv=None) -> None:
         return
     if args.cmd == "serve-smoke":
         bench_serve.run(json_out=args.json_out or bench_serve.DEFAULT_JSON)
+        return
+    if args.cmd == "obs-smoke":
+        bench_obs.run(json_out=args.json_out or bench_obs.DEFAULT_JSON)
+        return
+    if args.cmd == "bench-diff":
+        if len(args.paths) != 2:
+            ap.error("bench-diff needs exactly two paths: OLD.json NEW.json")
+        bench_diff.run(args.paths[0], args.paths[1], strict=args.strict)
         return
     if args.cmd == "bench":
         bench_consensus.run(

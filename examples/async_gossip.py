@@ -49,6 +49,7 @@ from repro.api import (
     DataSpec,
     ExperimentSpec,
     InferenceSpec,
+    ObsSpec,
     RunSpec,
     TopologySpec,
     build_session,
@@ -84,7 +85,7 @@ SPEC = ExperimentSpec(
 
 def _print_history(hist):
     for rec in hist:
-        st = rec["staleness"]
+        st = rec["engine"]["staleness"]
         loss = "  idle " if rec["loss"] is None else f"{rec['loss']:7.3f}"
         print(
             f"window {rec['round']:3d}  loss {loss}  "
@@ -102,7 +103,7 @@ def main():
     session = build_session(SPEC)  # validates the activation union eagerly
     hist = session.run(eval_fn=lambda s: s.evaluate())
     _print_history(hist)
-    tel = session.evaluate()
+    tel = session.evaluate()["engine"]
     print(
         f"\n{tel['windows']} event windows, "
         f"{tel['merges']['total']} merges "
@@ -112,6 +113,13 @@ def main():
         "Despite asynchronous, unreliable links every agent classifies all "
         "labels — the paper's consensus claim survives the gossip regime.\n"
     )
+    # the same numbers, observed live: rerun with the observability layer
+    # attached (ObsSpec is a pure observer — bit-identical trajectories)
+    observed = build_session(dataclasses.replace(
+        SPEC, obs=ObsSpec(enabled=True),
+    ))
+    observed.run()
+    print(observed.dashboard(), "\n")
 
     # -- delayed delivery: every message arrives 2 windows late -------------
     delayed_spec = dataclasses.replace(
@@ -124,7 +132,7 @@ def main():
     )
     delayed = build_session(delayed_spec)
     d_hist = delayed.run(eval_fn=lambda s: s.evaluate())
-    d_tel = delayed.evaluate()
+    d_tel = delayed.evaluate()["engine"]
     print(
         f"Delayed delivery (k={d_tel['max_delay']} windows, "
         f"{delayed.engine.hist_slots}-slot posterior history ring): "
@@ -139,7 +147,7 @@ def main():
     )
     sharded = build_session(sharded_spec)
     s_hist = sharded.run(eval_fn=lambda s: s.evaluate())
-    s_tel = sharded.evaluate()
+    s_tel = sharded.evaluate()["engine"]
     import numpy as np
 
     bitwise = bool(
@@ -164,7 +172,7 @@ def main():
     )
     wired = build_session(wire_spec)
     w_hist = wired.run(eval_fn=lambda s: s.evaluate())
-    w_tel = wired.evaluate()
+    w_tel = wired.evaluate()["engine"]
     dev = float(
         np.abs(
             np.asarray(wired.posterior().mean)
@@ -204,7 +212,7 @@ def main():
     )
     chaotic = build_session(chaos_spec)
     c_hist = chaotic.run(eval_fn=lambda s: s.evaluate())
-    c_tel = chaotic.evaluate()
+    c_tel = chaotic.evaluate()["engine"]
     faults = c_tel["faults"]
     health = chaotic.health()
     n_crashed = sum(rec.get("n_crashed", 0) for rec in c_hist)

@@ -13,6 +13,14 @@ agent counts) and returns an engine-backed ``Session``; swap
 production ``launch.steps`` path, or change ``TopologySpec`` to move the
 same run onto any other graph.
 
+To watch a run instead of just reading its result, attach the
+observability layer — ``ExperimentSpec(obs=ObsSpec(enabled=True))`` gives
+``session.obs`` (metrics registry, wall-clock spans, live convergence
+tracking vs theory) and ``session.dashboard()``; the pure-observer
+contract keeps the trajectory bitwise identical.  The
+``convergence_demo`` below overlays a measured disagreement decay against
+the ring's spectral prediction in ~15 lines.
+
 Next steps: ``examples/async_gossip.py`` (event-driven asynchronous
 runtime) and ``examples/serve_batched.py`` (the serving quickstart —
 publish a posterior snapshot and serve batched MC-predictive traffic
@@ -26,6 +34,7 @@ from repro.api import (
     DataSpec,
     ExperimentSpec,
     InferenceSpec,
+    ObsSpec,
     RunSpec,
     TopologySpec,
     build_session,
@@ -47,6 +56,30 @@ SPEC = ExperimentSpec(
 )
 
 
+def convergence_demo():
+    """Theory-vs-measured in ~15 lines: on a static ring with lr=0 and
+    per-agent inits, consensus is a plain W-average, so disagreement must
+    decay at the spectral rate -log lambda_max(W) — watch it happen."""
+    spec = ExperimentSpec(
+        topology=TopologySpec(kind="bidirectional_ring", params={"n": 4}),
+        data=DataSpec(dataset_params=dict(n_classes=3, dim=8, n_train_per_class=30),
+                      partition="iid", partition_params=dict(n_agents=4),
+                      batch_size=4, local_updates=1),
+        inference=InferenceSpec(hidden=8, depth=1, lr=0.0, shared_init=False),
+        run=RunSpec(n_rounds=10, seed=0),
+        obs=ObsSpec(enabled=True),
+    )
+    session = build_session(spec)
+    session.run()
+    report = session.obs.convergence.report()
+    for row in report["overlay"]:
+        print(f"  round {row['round']:2d}  measured {row['measured']:.3e}  "
+              f"predicted {row['predicted']:.3e}")
+    print(f"  measured rate {report['measured_rate']:.4f} vs theory "
+          f"{report['theory_rate']:.4f} -> attainment "
+          f"{report['rate_attainment']:.2f}")
+
+
 def main():
     session = build_session(SPEC)
     W = SPEC.topology.w_schedule()(0)
@@ -59,6 +92,10 @@ def main():
     final = hist[-1]["avg_acc"]
     print(f"\nfinal average accuracy {final:.3f} — edge agents classify labels "
           "1-3 they never observed locally (the paper's central claim).")
+
+    print("\nconvergence overlay (lr=0 ring: measured decay vs Theorem-1 "
+          "spectral rate):")
+    convergence_demo()
 
 
 if __name__ == "__main__":

@@ -21,6 +21,10 @@ every count do not):
     after 3 more windows: snapshot_age=3 slo_ok=False
     after republish: snapshot_age=0 slo_ok=True
     evaluate() serving block: published=2 slo_breaches=1
+    === session dashboard ... ===       (observability summary: loop/gossip/
+    ...                                  serving counters + warm/compile
+                                         span table; ObsSpec is enabled in
+                                         the spec below as a pure observer)
 """
 import numpy as np
 
@@ -28,6 +32,7 @@ from repro.api import (
     DataSpec,
     ExperimentSpec,
     InferenceSpec,
+    ObsSpec,
     RunSpec,
     ServeSpec,
     TopologySpec,
@@ -54,6 +59,10 @@ def main():
             max_staleness=2,         # SLO: refuse/flag >2-window-old answers
             staleness_policy="flag",
         ),
+        # pure observer: request spans + serve counters land in the
+        # registry, and the dashboard below reads them — the trained
+        # posteriors are bitwise what they'd be without it
+        obs=ObsSpec(enabled=True),
     )
     sess = build_session(spec)
     hist = sess.run(eval_every=spec.run.n_rounds)  # history: final round only
@@ -101,6 +110,11 @@ def main():
     serving = sess.evaluate(n_mc=2)["serving"]
     print(f"evaluate() serving block: published={serving['published']} "
           f"slo_breaches={serving['slo']['breaches']}")
+
+    # the same numbers from the metrics registry, as a terminal summary:
+    # loop counters, gossip staleness, serving state, and the span table
+    print()
+    print(sess.dashboard())
 
 
 if __name__ == "__main__":

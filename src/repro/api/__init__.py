@@ -53,6 +53,7 @@ from repro.api.spec import (
     DataSpec,
     ExperimentSpec,
     InferenceSpec,
+    ObsSpec,
     RunSpec,
     ServeSpec,
     TopologySpec,
@@ -69,6 +70,7 @@ __all__ = [
     "LaunchEngine",
     "MODELS",
     "ModelFns",
+    "ObsSpec",
     "RunSpec",
     "ServeSpec",
     "Session",

@@ -25,6 +25,7 @@ selected automatically by ``InferenceSpec.method``.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any, Callable
 
@@ -76,6 +77,14 @@ def build_session(spec: ExperimentSpec) -> "Session":
     key = jax.random.key(spec.run.seed)
     key, k_init = jax.random.split(key)
     state = engine.init(k_init)
+    obs = None
+    if spec.obs.enabled:
+        from repro.obs import Observability
+
+        obs = Observability.from_spec(spec)
+        # engines expose a host-side hook; attaching is a pure-observer
+        # operation (the engine only reads it at dispatch boundaries)
+        engine.obs = obs
     return Session(
         spec=spec,
         engine=engine,
@@ -84,7 +93,17 @@ def build_session(spec: ExperimentSpec) -> "Session":
         state=state,
         key=key,
         round_idx=0,
+        _obs=obs,
     )
+
+
+_NO_SPAN = contextlib.nullcontext()
+
+
+def _span(obs, name: str, **attrs):
+    """A tracer span when observability is on, else a shared no-op
+    context (one ``is None`` check on the uninstrumented path)."""
+    return obs.tracer.span(name, **attrs) if obs is not None else _NO_SPAN
 
 
 @dataclasses.dataclass
@@ -102,6 +121,15 @@ class Session:
     _w_schedule: Any = dataclasses.field(default=None, repr=False)
     _serve_store: Any = dataclasses.field(default=None, repr=False)
     _server: Any = dataclasses.field(default=None, repr=False)
+    _obs: Any = dataclasses.field(default=None, repr=False)
+
+    @property
+    def obs(self):
+        """The session's ``repro.obs.Observability`` bundle (registry,
+        tracer, convergence tracker), or ``None`` when ``spec.obs`` is
+        disabled — the default, in which case nothing is recorded and the
+        run is bitwise identical to an uninstrumented build."""
+        return self._obs
 
     def _spec_w_schedule(self):
         """The topology's round-indexed W callable, materialized once (the
@@ -129,12 +157,39 @@ class Session:
         Fault-aware engines (a gossip clock with a ``"faults"`` model)
         additionally report ``n_crashed`` — agents down this window.  A
         crashed agent skips local training, so its NaN sentinel loss is
-        already excluded from the ``loss`` mean like any idle agent's."""
+        already excluded from the ``loss`` mean like any idle agent's.
+
+        With observability enabled (``spec.obs``) the round is wrapped in a
+        ``session.round`` tracer span — END-TO-END accurate wall clock (the
+        loss materialization below synchronizes with the device) with
+        compile-vs-warm attribution from the engine's retrace counter — and
+        the loop counters/gauges land in the metrics registry.  All of it
+        observes values this method computes anyway: the training math is
+        identical either way (pinned by tests/test_obs.py)."""
+        obs = self._obs
+        if obs is None:
+            return self._round_impl(W)
+        tr = obs.tracer
+        n_traces0 = getattr(self.engine, "n_traces", None)
+        first = obs.registry.counter("session.rounds").value() == 0
+        with tr.span("session.round", round=self.round_idx):
+            rec = self._round_impl(W)
+        if tr.enabled and tr.spans:
+            retraced = (n_traces0 is not None
+                        and getattr(self.engine, "n_traces") > n_traces0)
+            if retraced or (n_traces0 is None and first):
+                tr.spans[-1].attrs["compile"] = True
+        self._obs_after_round(rec)
+        return rec
+
+    def _round_impl(self, W=None) -> dict:
         r = self.round_idx
         if W is None:
-            W = self._spec_w_schedule()(r)
+            with _span(self._obs, "session.w_build", round=r):
+                W = self._spec_w_schedule()(r)
         self.key, k_batch, k_round = jax.random.split(self.key, 3)
-        batches = self.data.sampler(k_batch, r)
+        with _span(self._obs, "session.batches", round=r):
+            batches = self.data.sampler(k_batch, r)
         self.state, losses = self.engine.run_round(
             self.state, batches, jnp.asarray(W), k_round
         )
@@ -150,6 +205,35 @@ class Session:
         if crashed is not None:
             rec["n_crashed"] = int(np.asarray(crashed).sum())
         return rec
+
+    def _obs_after_round(self, rec: dict) -> None:
+        """Post-round registry/convergence bookkeeping (obs enabled only).
+        Pure observer: reads ``rec`` and (on convergence-sample rounds) the
+        posterior buffers."""
+        obs = self._obs
+        reg = obs.registry
+        reg.counter("session.rounds", "communication rounds run").inc()
+        reg.gauge("session.n_trained", "agents trained last round").set(
+            rec["n_trained"]
+        )
+        if rec["loss"] is not None:
+            reg.gauge("session.loss", "mean trained-agent loss").set(
+                rec["loss"]
+            )
+            reg.histogram("session.loss_dist", "per-round loss").observe(
+                rec["loss"]
+            )
+        if "n_crashed" in rec:
+            reg.counter(
+                "session.crashed_agent_windows", "agent-windows down"
+            ).inc(rec["n_crashed"])
+        conv = obs.convergence
+        if conv is not None and (
+            (rec["round"] - 1) % obs.spec.convergence_every == 0
+        ):
+            with obs.tracer.span("obs.convergence", round=rec["round"]):
+                stats = conv.update(self.posterior(), rec["round"])
+            reg.ingest("convergence", stats)
 
     def run(
         self,
@@ -179,12 +263,13 @@ class Session:
             self.spec.run.eval_every if eval_every is None else eval_every
         )
         history: list[dict] = []
-        for i in range(n):
-            rec = self.round(W=w_for_round(self.round_idx))
-            if eval_every and ((i + 1) % eval_every == 0 or i == n - 1):
-                if eval_fn is not None:
-                    rec.update(eval_fn(self))
-                history.append(rec)
+        with _span(self._obs, "session.run", n_rounds=n):
+            for i in range(n):
+                rec = self.round(W=w_for_round(self.round_idx))
+                if eval_every and ((i + 1) % eval_every == 0 or i == n - 1):
+                    if eval_fn is not None:
+                        rec.update(eval_fn(self))
+                    history.append(rec)
         self.history.extend(history)
         return history
 
@@ -255,9 +340,19 @@ class Session:
             dtype = self.spec.serve.snapshot_dtype
         meta_fn = getattr(self.engine, "snapshot_meta", None)
         telemetry = meta_fn(self.state) if meta_fn is not None else {}
-        return self.serve_store.publish(
-            post, window=self.round_idx, dtype=dtype, telemetry=telemetry,
-        )
+        obs = self._obs
+        with _span(obs, "serve.publish", window=self.round_idx, dtype=dtype):
+            snap = self.serve_store.publish(
+                post, window=self.round_idx, dtype=dtype, telemetry=telemetry,
+            )
+        if obs is not None:
+            obs.registry.counter(
+                "serve.published", "snapshots published"
+            ).inc()
+            obs.registry.gauge(
+                "serve.snapshot_bytes", "front-buffer residency"
+            ).set(snap.nbytes())
+        return snap
 
     def attach_server(self, **overrides):
         """A ``serve.PredictiveServer`` bound to this session's snapshot
@@ -285,6 +380,8 @@ class Session:
         self._server = PredictiveServer(
             self.serve_store, self.model.logits_fn, **kwargs
         )
+        # host-side observer hook: request spans + counters in the registry
+        self._server.obs = self._obs
         return self._server
 
     def health(self) -> dict:
@@ -319,19 +416,111 @@ class Session:
         """Held-out test metrics per agent: MC-predictive accuracy for
         classification, global-test MSE for linreg.  Engines exposing a
         ``telemetry(state)`` hook (the gossip runtime: staleness percentiles,
-        merge counts) have it merged into the result, and a serving tier
-        (published snapshots / an attached ``PredictiveServer``) adds a
-        ``"serving"`` block — snapshot age/version/bytes and SLO breach
-        counts next to the fault and staleness metrics."""
-        out = self._evaluate_metrics(n_mc=n_mc, key=key)
-        telemetry = getattr(self.engine, "telemetry", None)
-        if telemetry is not None:
-            out.update(telemetry(self.state))
-        if self._server is not None:
-            out["serving"] = self._server.telemetry()
-        elif self._serve_store is not None:
-            out["serving"] = self._serve_store.telemetry()
+        merge counts, fault/quarantine counters) contribute an ``"engine"``
+        block, and a serving tier (published snapshots / an attached
+        ``PredictiveServer``) a ``"serving"`` block — snapshot
+        age/version/bytes and SLO breach counts next to the fault and
+        staleness metrics.
+
+        Each producer owns its NAMESPACE: engine telemetry lands under
+        ``out["engine"]``, never splatted into the top level — a telemetry
+        key can therefore never clobber a metric key (or vice versa;
+        regression-pinned by tests/test_obs.py).  With observability
+        enabled every block is also ingested into the metrics registry
+        under the same namespace, so the dashboard/exporter read the exact
+        numbers returned here."""
+        obs = self._obs
+        with _span(obs, "session.evaluate", n_mc=n_mc):
+            out = self._evaluate_metrics(n_mc=n_mc, key=key)
+            telemetry = getattr(self.engine, "telemetry", None)
+            if telemetry is not None:
+                out["engine"] = telemetry(self.state)
+            if self._server is not None:
+                out["serving"] = self._server.telemetry()
+            elif self._serve_store is not None:
+                out["serving"] = self._serve_store.telemetry()
+        if obs is not None:
+            for ns in ("engine", "serving"):
+                if ns in out:
+                    obs.registry.ingest(ns, out[ns])
+            for k in ("avg_acc", "avg_mse"):
+                if k in out:
+                    obs.registry.gauge(f"eval.{k}").set(out[k])
         return out
+
+    def dashboard(self) -> str:
+        """Compact terminal summary of the run so far: loop counters, the
+        engine's staleness/merge/fault registry reads, serving state, the
+        convergence verdict (measured decay rate vs the graph's theoretical
+        rate), and the warm/compile span table.  Returns a printable string;
+        works with observability disabled (a one-line pointer at
+        ``ObsSpec``) so examples can call it unconditionally."""
+        lines = [
+            f"=== session dashboard · engine={self.engine.name} "
+            f"round={self.round_idx} ==="
+        ]
+        obs = self._obs
+        if obs is None:
+            lines.append(
+                "observability disabled — enable with "
+                "ExperimentSpec(obs=ObsSpec(enabled=True))"
+            )
+            return "\n".join(lines)
+        reg = obs.registry
+        loss = reg.gauge("session.loss").value()
+        n_tr = reg.gauge("session.n_trained").value()
+        lines.append(
+            f"rounds {int(reg.counter('session.rounds').value())}"
+            f"  loss {loss:.4f}  n_trained {int(n_tr)}"
+        )
+        g_windows = reg.counter("gossip.windows").value()
+        if g_windows:
+            lines.append(
+                f"gossip: windows {int(g_windows)}"
+                f"  jit_traces {int(reg.gauge('gossip.jit_traces').value())}"
+                f"  staleness p50/p90/max "
+                f"{reg.gauge('engine.staleness.p50').value():.0f}/"
+                f"{reg.gauge('engine.staleness.p90').value():.0f}/"
+                f"{reg.gauge('engine.staleness.max').value():.0f}"
+                f"  merges {int(reg.gauge('engine.merges.total').value())}"
+            )
+        published = reg.counter("serve.published").value()
+        if published:
+            lines.append(
+                f"serving: published {int(published)}"
+                f"  snapshot_bytes "
+                f"{int(reg.gauge('serve.snapshot_bytes').value())}"
+                f"  requests {int(reg.counter('serve.requests').value())}"
+                f"  slo_breaches "
+                f"{int(reg.gauge('serving.slo.breaches').value())}"
+            )
+        if obs.convergence is not None and obs.convergence.stats:
+            rep = obs.convergence.report()
+            latest = rep["latest"]
+            line = (
+                f"convergence: disagreement {latest['disagreement']:.3e}"
+            )
+            if "kl_to_mean" in latest:
+                line += f"  KL(q_i||q_bar) {latest['kl_to_mean']:.3e}"
+            if rep["measured_rate"] is not None:
+                line += f"  measured_rate {rep['measured_rate']:.4f}"
+            if rep["theory_rate"] is not None:
+                line += f"  theory_rate {rep['theory_rate']:.4f}"
+            if rep["rate_attainment"] is not None:
+                line += f"  rate_attainment {rep['rate_attainment']:.2f}"
+            lines.append(line)
+        summ = obs.tracer.summary()
+        for name in sorted(summ):
+            for mode in ("warm", "compile"):
+                if mode in summ[name]:
+                    s = summ[name][mode]
+                    lines.append(
+                        f"span {name:<22s} {mode:<7s} n {s['n']:>4d}"
+                        f"  p50 {s['p50_us']:>10.1f}us"
+                        f"  max {s['max_us']:>10.1f}us"
+                    )
+        obs.flush()
+        return "\n".join(lines)
 
     def _evaluate_metrics(self, n_mc: int = 4, key=None) -> dict:
         if self.data.kind == "linreg":

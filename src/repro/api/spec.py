@@ -486,6 +486,36 @@ class ServeSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class ObsSpec:
+    """The observability contract (ROADMAP "Observability"; ``repro.obs``).
+
+    OFF by default, and a pure observer when on: enabling observability
+    never changes trajectories, jit trace counts, or checkpoint leaf
+    structure (pinned by ``tests/test_obs.py``).  With ``enabled=True`` the
+    session carries an ``Observability`` bundle (``session.obs``): a
+    ``MetricsRegistry`` every telemetry number lands in, a wall-clock
+    ``Tracer`` over the round lifecycle (``trace``), and a
+    ``ConvergenceTracker`` sampling network disagreement / KL-to-network-
+    mean every ``convergence_every`` rounds (``convergence``) — overlaid
+    against ``core.theory``'s predicted decay for static topologies.
+    ``jsonl_path`` streams metric events and spans to an append-only JSONL
+    file.  ``session.dashboard()`` renders the compact terminal summary.
+    """
+
+    enabled: bool = False
+    trace: bool = True  # wall-clock spans (compile-vs-warm attributed)
+    convergence: bool = True  # per-round disagreement/KL tracking
+    convergence_every: int = 1  # rounds between convergence samples
+    jsonl_path: str | None = None  # stream events/spans to this JSONL file
+
+    def validate(self) -> None:
+        if self.convergence_every < 1:
+            raise ValueError("convergence_every must be >= 1 (rounds)")
+        if self.jsonl_path is not None and not isinstance(self.jsonl_path, str):
+            raise ValueError("jsonl_path must be a path string or None")
+
+
+@dataclasses.dataclass(frozen=True)
 class RunSpec:
     """Run envelope: length, seed, engine, eval cadence."""
 
@@ -504,19 +534,22 @@ class RunSpec:
 
 @dataclasses.dataclass(frozen=True)
 class ExperimentSpec:
-    """One experiment = topology x data x inference x run (+ serving)."""
+    """One experiment = topology x data x inference x run (+ serving,
+    observability)."""
 
     topology: TopologySpec = dataclasses.field(default_factory=TopologySpec)
     data: DataSpec = dataclasses.field(default_factory=DataSpec)
     inference: InferenceSpec = dataclasses.field(default_factory=InferenceSpec)
     run: RunSpec = dataclasses.field(default_factory=RunSpec)
     serve: ServeSpec = dataclasses.field(default_factory=ServeSpec)
+    obs: ObsSpec = dataclasses.field(default_factory=ObsSpec)
 
     def validate(self) -> None:
         self.data.validate()
         self.inference.validate()
         self.run.validate()
         self.serve.validate()
+        self.obs.validate()
         if self.inference.method == "conjugate_linreg" and self.data.dataset != "linreg":
             raise ValueError("conjugate_linreg inference requires dataset='linreg'")
         if self.data.dataset == "linreg" and self.inference.method != "conjugate_linreg":
@@ -593,8 +626,9 @@ class ExperimentSpec:
             data=DataSpec(**doc["data"]),
             inference=InferenceSpec(**doc["inference"]),
             run=RunSpec(**doc["run"]),
-            # absent in pre-serving checkpoints: default ServeSpec
+            # absent in pre-serving / pre-observability checkpoints: defaults
             serve=ServeSpec(**doc.get("serve") or {}),
+            obs=ObsSpec(**doc.get("obs") or {}),
         )
 
 

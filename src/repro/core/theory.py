@@ -80,3 +80,27 @@ def gaussian_divergence_gap(
 def predicted_decay_curve(K: float, n: np.ndarray, eps: float = 0.0) -> np.ndarray:
     """Theorem 1 bound: max wrong-parameter belief < exp(-n (K - eps))."""
     return np.exp(-np.asarray(n) * (K - eps))
+
+
+def consensus_contraction_rate(W: np.ndarray) -> float:
+    """Per-round exponential decay rate of network DISAGREEMENT under
+    repeated averaging with a static W: the disagreement component lives in
+    the eigenspace orthogonal to the Perron root, so
+    ``disagreement_n ~ lambda_max^n = exp(-n * rate)`` with
+    ``rate = -log(lambda_max(W))``.
+
+    This is the spectral (zero-learning) analogue of ``rate_K``: it feeds
+    the same ``predicted_decay_curve(rate, n)`` overlay that the
+    observability convergence tracker (``repro.obs.convergence``) compares
+    measured disagreement decay against.  A disconnected W (lambda_max = 1)
+    contracts nothing: rate 0.  A single pass of a complete uniform W
+    (lambda_max = 0) contracts everything: rate inf.
+    """
+    lam = lambda_max(W)
+    if lam >= 1.0:
+        return 0.0
+    # eigensolver noise: a uniform W's non-Perron eigenvalues come back as
+    # ~1e-16 garbage, which -log would turn into a huge-but-finite rate
+    if lam <= 1e-12:
+        return float("inf")
+    return float(-np.log(lam))

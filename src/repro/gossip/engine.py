@@ -74,6 +74,7 @@ runtime is literally the all-edges special case of this one.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any
 
@@ -136,6 +137,15 @@ def _largest_divisor_leq(n: int, cap: int) -> int:
         if n % s == 0:
             return s
     return 1
+
+
+_NO_SPAN = contextlib.nullcontext()
+
+
+def _span(obs, name: str, **attrs):
+    """A tracer span when an ``Observability`` is attached, else a shared
+    no-op context — the uninstrumented path pays one ``is None`` check."""
+    return obs.tracer.span(name, **attrs) if obs is not None else _NO_SPAN
 
 
 class GossipEngine:
@@ -247,6 +257,10 @@ class GossipEngine:
         # adds zero ops (and zero trace changes) to existing runs
         self._guarded = guarded = self.quarantine or self.faults is not None
         self.n_traces = 0
+        # host-side observability hook (repro.obs.Observability), attached
+        # by build_session when ObsSpec is enabled; never touches the jitted
+        # window — spans/counters record at the dispatch boundary only
+        self.obs = None
 
         def local_phase(state: GossipState, batches, W, key, up=None):
             """Shared pre-consensus window phase: per-agent local VI steps +
@@ -534,57 +548,94 @@ class GossipEngine:
                 jnp.asarray(fm), jnp.asarray(fr))
 
     def run_round(self, state, batches, W, key):
+        obs = self.obs
+        r = int(state.round)
         W = jnp.asarray(W)
-        extra = self._fault_arrays(int(state.round)) if self._guarded else ()
+        ppermute = (self.consensus_impl == "ppermute"
+                    and self.consensus_mode == "gaussian")
+        with _span(obs, "gossip.window_build", round=r):
+            extra = self._fault_arrays(r) if self._guarded else ()
+            win = (self._window_for(state, W)
+                   if (self.hist_slots or ppermute) else None)
         if self.hist_slots:
-            win = self._window_for(state, W)
-            return self._window(
-                state, batches, W, key,
-                jnp.asarray(win.edges), jnp.asarray(win.weights),
-                jnp.asarray(win.delays), *extra,
-            )
-        if self.consensus_impl == "ppermute" and self.consensus_mode == "gaussian":
-            win = self._window_for(state, W)
-            state, losses = self._window(state, batches, W, key, *extra)
-            post = state.posterior
-            if not self._guarded:
-                post = consensus_flat_masked(
-                    post, W, jnp.asarray(win.active),
-                    mode="ppermute", mesh=self._mesh, axis="agents",
-                    window=win, wire_dtype=self.wire_dtype,
+            # ONE fused jitted call: local phase + event-gather consensus
+            # (dispatch-side wall clock; Session.round owns the synced span)
+            with _span(obs, "gossip.window", impl="delayed", round=r):
+                out = self._window(
+                    state, batches, W, key,
+                    jnp.asarray(win.edges), jnp.asarray(win.weights),
+                    jnp.asarray(win.delays), *extra,
                 )
-                return dataclasses.replace(state, posterior=post), losses
-            up, corrupt, fm, fr = extra
-            c = corrupt[:, None]
-            mean_src = jnp.where(c, fm[:, None], post.mean)
-            rho_src = jnp.where(c, fr[:, None], post.rho)
-            active = jnp.asarray(win.active)
-            if self.quarantine:
-                post, valid_src = consensus_flat_masked_quarantined(
-                    post, W, active, mean_src=mean_src, rho_src=rho_src,
-                    mode="ppermute", mesh=self._mesh, axis="agents",
-                    window=win, wire_dtype=self.wire_dtype,
+            self._obs_after_window(obs)
+            return out
+        if ppermute:
+            with _span(obs, "gossip.local_phase", impl="ppermute", round=r):
+                state, losses = self._window(state, batches, W, key, *extra)
+            with _span(obs, "gossip.consensus", impl="ppermute", round=r):
+                state, losses = self._ppermute_consensus(
+                    state, losses, W, win, extra
                 )
-                state = dataclasses.replace(
-                    state, posterior=post,
-                    n_quarantined=(state.n_quarantined
-                                   + (~valid_src).astype(jnp.int32)),
-                )
-            else:
-                merged = consensus_flat_masked(
-                    dataclasses.replace(post, mean=mean_src, rho=rho_src),
-                    W, active, mode="ppermute", mesh=self._mesh,
-                    axis="agents", window=win, wire_dtype=self.wire_dtype,
-                )
-                act = active[:, None]
-                post = dataclasses.replace(
-                    post,
-                    mean=jnp.where(act, merged.mean, post.mean),
-                    rho=jnp.where(act, merged.rho, post.rho),
-                )
-                state = dataclasses.replace(state, posterior=post)
+            self._obs_after_window(obs)
             return state, losses
-        return self._window(state, batches, W, key, *extra)
+        # dense masked path: local phase + consensus fused in one call
+        with _span(obs, "gossip.window", impl="masked", round=r):
+            out = self._window(state, batches, W, key, *extra)
+        self._obs_after_window(obs)
+        return out
+
+    def _obs_after_window(self, obs) -> None:
+        """Registry bookkeeping after one window (host-side, pure observer)."""
+        if obs is None:
+            return
+        obs.registry.counter(
+            "gossip.windows", "event windows executed"
+        ).inc()
+        obs.registry.gauge(
+            "gossip.jit_traces", "distinct window traces (retrace telemetry)"
+        ).set(self.n_traces)
+
+    def _ppermute_consensus(self, state, losses, W, win, extra):
+        """The host-level sharded consensus dispatch (the one window
+        execution whose consensus is a separate program from the local
+        phase — which is why it gets its own span in ``run_round``)."""
+        post = state.posterior
+        if not self._guarded:
+            post = consensus_flat_masked(
+                post, W, jnp.asarray(win.active),
+                mode="ppermute", mesh=self._mesh, axis="agents",
+                window=win, wire_dtype=self.wire_dtype,
+            )
+            return dataclasses.replace(state, posterior=post), losses
+        up, corrupt, fm, fr = extra
+        c = corrupt[:, None]
+        mean_src = jnp.where(c, fm[:, None], post.mean)
+        rho_src = jnp.where(c, fr[:, None], post.rho)
+        active = jnp.asarray(win.active)
+        if self.quarantine:
+            post, valid_src = consensus_flat_masked_quarantined(
+                post, W, active, mean_src=mean_src, rho_src=rho_src,
+                mode="ppermute", mesh=self._mesh, axis="agents",
+                window=win, wire_dtype=self.wire_dtype,
+            )
+            state = dataclasses.replace(
+                state, posterior=post,
+                n_quarantined=(state.n_quarantined
+                               + (~valid_src).astype(jnp.int32)),
+            )
+        else:
+            merged = consensus_flat_masked(
+                dataclasses.replace(post, mean=mean_src, rho=rho_src),
+                W, active, mode="ppermute", mesh=self._mesh,
+                axis="agents", window=win, wire_dtype=self.wire_dtype,
+            )
+            act = active[:, None]
+            post = dataclasses.replace(
+                post,
+                mean=jnp.where(act, merged.mean, post.mean),
+                rho=jnp.where(act, merged.rho, post.rho),
+            )
+            state = dataclasses.replace(state, posterior=post)
+        return state, losses
 
     def posterior(self, state) -> FlatPosterior:
         return state.posterior

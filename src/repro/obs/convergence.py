@@ -1,0 +1,192 @@
+"""Theory-vs-measured convergence tracking (paper Theorem 1, live).
+
+The paper's headline result is a RATE: beliefs concentrate like
+``exp(-n K)`` with ``K`` a pure function of the graph (``core.theory``).
+This module measures the live network's convergence every round and
+overlays it against that prediction:
+
+* ``network_stats(mean, rho)`` — ONE fused jitted reduction over the flat
+  ``[N, P]`` posterior buffers (the canonical runtime format; no pytree
+  round trips, no per-leaf dispatch) producing:
+
+  - ``disagreement``: RMS deviation of the per-agent mean vectors from the
+    network average — the consensus residual whose decay slope is the
+    measured contraction rate;
+  - ``rho_disagreement``: same reduction over the rho buffer;
+  - ``kl_to_mean``: mean over agents of ``KL(q_i || q_bar)`` where
+    ``q_bar`` is the moment-matched network-average diagonal Gaussian —
+    the distribution-level distance the paper's consensus claim is about.
+
+* ``ConvergenceTracker`` — accumulates the per-round stats and reports the
+  measured log-linear decay slope next to the theoretical rate: an
+  explicit ``K`` (e.g. ``core.theory.rate_K`` from divergence gaps) or,
+  for a static W, the spectral consensus rate
+  ``core.theory.consensus_contraction_rate(W)``.  ``report()`` returns the
+  ``predicted_decay_curve`` overlay anchored at the first measured point
+  and the ``rate_attainment`` ratio (measured / theory; ~1.0 means the
+  live network contracts exactly as fast as the graph says it must).
+
+The tracker is a pure observer: it only ever READS posterior buffers, and
+its jitted reduction is a separate program from the training step, so
+enabling it cannot perturb the training math (pinned by
+``tests/test_obs.py``).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.numerics import COMPUTE_DTYPE, softplus
+from repro.core.theory import consensus_contraction_rate, predicted_decay_curve
+
+_TINY = 1e-30
+
+
+@jax.jit
+def _gaussian_stats(mean: jax.Array, rho: jax.Array):
+    """Fused disagreement + KL reduction over the [N, P] buffers."""
+    mean = mean.astype(COMPUTE_DTYPE)
+    rho = rho.astype(COMPUTE_DTYPE)
+    mu_bar = jnp.mean(mean, axis=0, keepdims=True)            # [1, P]
+    dev = mean - mu_bar
+    disagreement = jnp.sqrt(jnp.mean(jnp.square(dev)))
+    rho_bar = jnp.mean(rho, axis=0, keepdims=True)
+    rho_dis = jnp.sqrt(jnp.mean(jnp.square(rho - rho_bar)))
+    # moment-matched network-average Gaussian: var_bar = mean_i var_i
+    var = jnp.square(softplus(rho))                           # [N, P]
+    var_bar = jnp.mean(var, axis=0, keepdims=True)            # [1, P]
+    # KL(q_i || q_bar) for diagonal Gaussians, summed over P, meaned over N
+    ratio = var / var_bar
+    kl_per_agent = 0.5 * jnp.sum(
+        ratio - 1.0 - jnp.log(ratio) + jnp.square(dev) / var_bar, axis=-1
+    )
+    return disagreement, rho_dis, jnp.mean(kl_per_agent)
+
+
+@jax.jit
+def _mean_stats(mean: jax.Array):
+    """Disagreement-only reduction (posteriors without a rho buffer)."""
+    mean = mean.astype(COMPUTE_DTYPE)
+    mean = mean.reshape(mean.shape[0], -1)
+    mu_bar = jnp.mean(mean, axis=0, keepdims=True)
+    return jnp.sqrt(jnp.mean(jnp.square(mean - mu_bar)))
+
+
+def network_stats(mean, rho=None) -> dict:
+    """Per-round network convergence stats from flat buffers (one fused
+    jitted reduction; see module docstring for the three quantities)."""
+    if rho is not None:
+        d, rd, kl = _gaussian_stats(jnp.asarray(mean), jnp.asarray(rho))
+        return {
+            "disagreement": float(d),
+            "rho_disagreement": float(rd),
+            "kl_to_mean": float(kl),
+        }
+    return {"disagreement": float(_mean_stats(jnp.asarray(mean)))}
+
+
+class ConvergenceTracker:
+    """Accumulate per-round network stats; overlay measured decay against
+    the theoretical rate.
+
+    ``W``: static mixing matrix — theory rate is
+    ``consensus_contraction_rate(W)``.  ``K``: explicit rate (wins over
+    ``W``; pass ``core.theory.rate_K(...)`` here for the belief-decay
+    overlay).  ``eps``: the Theorem-1 slack forwarded to
+    ``predicted_decay_curve``.
+    """
+
+    def __init__(self, W=None, K: float | None = None, eps: float = 0.0):
+        if K is not None:
+            self.theory_rate: float | None = float(K)
+        elif W is not None:
+            self.theory_rate = consensus_contraction_rate(np.asarray(W))
+        else:
+            self.theory_rate = None
+        self.eps = float(eps)
+        self.rounds: list[int] = []
+        self.stats: list[dict] = []
+
+    # -- accumulation --------------------------------------------------------
+
+    def update(self, posterior: Any, round_idx: int | None = None) -> dict:
+        """Record one round.  ``posterior`` is anything with a flat
+        ``[N, P]`` ``.mean`` buffer (``FlatPosterior`` also contributes its
+        ``.rho`` for the KL stat); returns the stats dict recorded."""
+        mean = getattr(posterior, "mean", None)
+        if mean is None or callable(mean):  # raw [N, P] buffer (ndarray.mean
+            mean = posterior                # is a method, not a field)
+        rho = getattr(posterior, "rho", None)
+        rec = network_stats(mean, rho)
+        self.rounds.append(
+            len(self.rounds) if round_idx is None else int(round_idx)
+        )
+        self.stats.append(rec)
+        return rec
+
+    def series(self) -> dict:
+        """Column view: ``{"round": [...], "disagreement": [...], ...}``."""
+        out: dict[str, list] = {"round": list(self.rounds)}
+        for k in ("disagreement", "rho_disagreement", "kl_to_mean"):
+            if self.stats and k in self.stats[0]:
+                out[k] = [s[k] for s in self.stats]
+        return out
+
+    # -- theory overlay ------------------------------------------------------
+
+    def measured_rate(self, metric: str = "disagreement") -> float | None:
+        """Log-linear decay slope of ``metric`` (per round), least-squares
+        over the recorded points; None with < 2 usable points or a
+        flat/degenerate series."""
+        pts = [
+            (r, s[metric]) for r, s in zip(self.rounds, self.stats)
+            if metric in s and math.isfinite(s[metric]) and s[metric] > _TINY
+        ]
+        if len(pts) < 2:
+            return None
+        t = np.asarray([p[0] for p in pts], np.float64)
+        logd = np.log(np.asarray([p[1] for p in pts], np.float64))
+        slope = np.polyfit(t, logd, 1)[0]
+        return float(-slope)
+
+    def overlay(self, metric: str = "disagreement") -> list[dict]:
+        """Measured vs predicted rows: the ``predicted_decay_curve`` of the
+        theory rate, anchored at the first measured point."""
+        if self.theory_rate is None or not self.stats:
+            return []
+        pts = [
+            (r, s[metric]) for r, s in zip(self.rounds, self.stats)
+            if metric in s
+        ]
+        if not pts:
+            return []
+        t0, d0 = pts[0]
+        rows = []
+        for r, d in pts:
+            pred = d0 * float(
+                predicted_decay_curve(self.theory_rate, r - t0, self.eps)
+            )
+            rows.append({"round": r, "measured": d, "predicted": pred})
+        return rows
+
+    def report(self, metric: str = "disagreement") -> dict:
+        """The convergence verdict: measured rate, theory rate, their ratio
+        (``rate_attainment``), the overlay rows, and the latest stats."""
+        measured = self.measured_rate(metric)
+        attainment = None
+        if (measured is not None and self.theory_rate is not None
+                and math.isfinite(self.theory_rate) and self.theory_rate > 0):
+            attainment = measured / self.theory_rate
+        return {
+            "metric": metric,
+            "n_rounds": len(self.rounds),
+            "measured_rate": measured,
+            "theory_rate": self.theory_rate,
+            "rate_attainment": attainment,
+            "overlay": self.overlay(metric),
+            "latest": self.stats[-1] if self.stats else None,
+        }

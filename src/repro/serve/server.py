@@ -116,6 +116,9 @@ class PredictiveServer:
         self.n_slo_breaches = 0
         self._batch_counter = 0
         self._lat_us: list[float] = []
+        # host-side observability hook (repro.obs.Observability); attached
+        # by Session.attach_server — spans/counters only, never in the jit
+        self.obs = None
 
     # -- staleness SLO -------------------------------------------------------
 
@@ -277,6 +280,31 @@ class PredictiveServer:
         self._lat_us.append(lat_us)
         self.n_requests += len(reqs)
         self.n_rows += sum(int(r.shape[0]) for r in reqs)
+        if self.obs is not None:
+            reg = self.obs.registry
+            reg.counter("serve.requests", "requests served").inc(len(reqs))
+            reg.counter("serve.rows", "rows served").inc(
+                sum(int(r.shape[0]) for r in reqs)
+            )
+            reg.histogram(
+                "serve.latency_us", "per-call serve latency"
+            ).observe(lat_us, mc=str(mc))
+            if not slo_ok:
+                reg.counter("serve.slo_breaches").inc()
+            tr = self.obs.tracer
+            if tr.enabled:
+                # the batch already synced (block_until_ready above): record
+                # the measured [t0, t0+lat] interval as one span directly
+                from repro.obs.trace import Span
+
+                tr.spans.append(Span(
+                    name="serve.request",
+                    t0_us=(t0 - tr._epoch) * 1e6,
+                    dur_us=lat_us,
+                    depth=tr._depth,
+                    attrs={"rows": sum(int(r.shape[0]) for r in reqs),
+                           "mc": mc, "slo_ok": slo_ok},
+                ))
         meta = {
             "snapshot_window": snap.window,
             "snapshot_version": snap.version,

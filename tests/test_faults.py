@@ -361,7 +361,7 @@ def test_quarantine_contains_injection_strict_propagates():
     assert np.isfinite(np.asarray(s_q.posterior().rho)).all()
     assert hs["n_healthy"] < n, "strict survived: injection too weak"
     # telemetry: the guard counted its drops
-    tel = s_q.evaluate(n_mc=1)
+    tel = s_q.evaluate(n_mc=1)["engine"]
     assert tel["faults"]["policy"] == "quarantine"
     assert tel["faults"]["quarantined"]["total"] > 0
     assert len(tel["faults"]["uptime"]["per_agent"]) == n
@@ -634,7 +634,7 @@ def test_gossip_engine_ppermute_quarantine_session():
     for _ in range(4):
         s.round()
     assert s.health()["all_ok"], s.health()
-    tel = s.evaluate(n_mc=1)
+    tel = s.evaluate(n_mc=1)["engine"]
     assert tel["faults"]["quarantined"]["total"] >= 0
     print("OK")
     """))

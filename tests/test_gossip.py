@@ -328,7 +328,7 @@ def test_all_edges_gossip_reproduces_synchronous_bitwise():
     np.testing.assert_array_equal(
         np.asarray(s_g.posterior().rho), np.asarray(s_s.posterior().rho)
     )
-    tel = s_g.evaluate()
+    tel = s_g.evaluate()["engine"]
     assert tel["staleness"]["max"] == 0  # every agent merged every window
     assert tel["merges"]["min"] == 3
 
@@ -439,7 +439,7 @@ def test_staleness_telemetry_counts_unmerged_windows():
     assert age[0] == 0 and age[1] == 0
     merges = np.asarray(s.state.n_merges)
     np.testing.assert_array_equal(merges, [4, 4, 0, 0])
-    tel = s.evaluate()
+    tel = s.evaluate()["engine"]
     assert tel["staleness"]["max"] == 4 and tel["windows"] == 4
 
 
@@ -1084,7 +1084,7 @@ def test_gossip_engine_ppermute_impl_bitwise_vs_masked():
                                   np.asarray(s_p.posterior().mean))
     np.testing.assert_array_equal(np.asarray(s_m.posterior().rho),
                                   np.asarray(s_p.posterior().rho))
-    assert s_p.evaluate()["consensus_shards"] == 8
+    assert s_p.evaluate()["engine"]["consensus_shards"] == 8
     print("OK")
     """)
 

@@ -17,12 +17,22 @@ from repro.core.graphs import (
     torus_w,
 )
 from repro.core.theory import (
+    consensus_contraction_rate,
     lambda_max,
+    predicted_decay_curve,
     rate_K,
     sample_complexity,
     spectral_gap,
     stationary_distribution,
 )
+
+# a 3-agent path graph, hand-diagonalizable: eigenvalues {1, 1/2, 0},
+# stationary distribution (1/4, 1/2, 1/4) (solve v = vW by hand)
+W_CHAIN3 = np.array([
+    [0.50, 0.50, 0.00],
+    [0.25, 0.50, 0.25],
+    [0.00, 0.50, 0.50],
+])
 
 
 def test_star_centrality_matches_paper():
@@ -118,6 +128,62 @@ def test_sample_complexity_scales_with_gap():
     na = sample_complexity(9, 10, 0.05, 0.1, 2.0, Wa)
     nb = sample_complexity(9, 10, 0.05, 0.1, 2.0, Wb)
     assert nb < na  # larger spectral gap -> fewer samples
+
+
+def test_three_agent_chain_hand_computed():
+    """Every Theorem-1 graph quantity on a W small enough to diagonalize by
+    hand: eigenvalues {1, 1/2, 0}, stationary (1/4, 1/2, 1/4)."""
+    np.testing.assert_allclose(
+        stationary_distribution(W_CHAIN3), [0.25, 0.5, 0.25], atol=1e-10
+    )
+    assert lambda_max(W_CHAIN3) == pytest.approx(0.5, abs=1e-10)
+    assert spectral_gap(W_CHAIN3) == pytest.approx(0.5, abs=1e-10)
+
+
+def test_three_agent_rate_K_hand_computed():
+    """K = min over wrong hypotheses of the v-weighted divergence sum:
+    with v = (1/4, 1/2, 1/4) and two wrong hypotheses whose per-agent gaps
+    sum to 0.25 and 0.30, K is the smaller (eq. 7)."""
+    v = stationary_distribution(W_CHAIN3)
+    I = np.array([          # [N=3, n_star=1, n_wrong=2]
+        [[0.4, 0.2]],       # agent 0: gaps to wrong hypotheses t=0, t=1
+        [[0.1, 0.4]],       # agent 1 (most central)
+        [[0.4, 0.2]],       # agent 2
+    ])
+    # hand sums: t=0: .25*.4 + .5*.1 + .25*.4 = 0.25
+    #            t=1: .25*.2 + .5*.4 + .25*.2 = 0.30  ->  K = min = 0.25
+    assert rate_K(v, I) == pytest.approx(0.25, abs=1e-12)
+
+
+def test_predicted_decay_curve_hand_computed():
+    np.testing.assert_allclose(
+        predicted_decay_curve(0.5, np.array([0, 1, 2])),
+        [1.0, np.exp(-0.5), np.exp(-1.0)],
+    )
+    # the eps slack slows the predicted decay
+    assert predicted_decay_curve(0.5, 2, eps=0.1) == pytest.approx(
+        np.exp(-0.8)
+    )
+
+
+def test_consensus_contraction_rate_edges_and_consistency():
+    # chain: rate = -log(1/2); one averaging pass shrinks disagreement 2x
+    assert consensus_contraction_rate(W_CHAIN3) == pytest.approx(np.log(2.0))
+    assert np.exp(-consensus_contraction_rate(W_CHAIN3)) == pytest.approx(
+        lambda_max(W_CHAIN3)
+    )
+    # disconnected (identity): lambda_max = 1, nothing contracts
+    assert consensus_contraction_rate(np.eye(3)) == 0.0
+    # complete uniform: lambda_max = 0, one pass reaches exact consensus
+    assert consensus_contraction_rate(complete_w(4)) == np.inf
+    # the empirical power-iteration check: disagreement after n averaging
+    # passes decays like exp(-n * rate)
+    x = np.array([1.0, 0.0, -1.0])
+    rate = consensus_contraction_rate(W_CHAIN3)
+    for n in (1, 4, 8):
+        y = np.linalg.matrix_power(W_CHAIN3, n) @ x
+        spread = np.abs(y - y.mean()).max()
+        assert spread <= np.abs(x - x.mean()).max() * np.exp(-n * rate) + 1e-12
 
 
 def test_max_in_degree():

@@ -401,7 +401,9 @@ def test_evaluate_exposes_serving_block():
     assert serving["snapshot_age"] == 1
     assert serving["published"] == 1
     assert serving["requests"] == 1
-    assert "staleness" in out  # the gossip block still rides alongside
+    # the gossip block still rides alongside, namespaced under "engine"
+    # (PR 8: engine telemetry no longer splats into the top level)
+    assert "staleness" in out["engine"]
 
 
 def test_snapshot_checkpoint_roundtrip(tmp_path, trained):

@@ -500,8 +500,8 @@ def test_gossip_engine_wire_f32_bitwise_and_bf16_runs():
         np.asarray(s_def.posterior().rho), np.asarray(s_f32.posterior().rho)
     )
     assert np.isfinite(hist[-1]["loss"])
-    assert s_bf.evaluate()["wire_dtype"] == "bf16"
-    assert "wire_dtype" not in s_f32.evaluate()
+    assert s_bf.evaluate()["engine"]["wire_dtype"] == "bf16"
+    assert "wire_dtype" not in s_f32.evaluate()["engine"]
     np.testing.assert_allclose(
         np.asarray(s_bf.posterior().mean), np.asarray(s_f32.posterior().mean),
         rtol=0.1, atol=0.1,
@@ -555,7 +555,7 @@ def test_bf16_history_ring_session_and_checkpoint(tmp_path):
         _gossip_session_spec(clock=clock, n_rounds=6, history_dtype="bf16")
     )
     assert s.state.hist_mean.dtype == jnp.bfloat16
-    assert s.evaluate()["history_dtype"] == "bf16"
+    assert s.evaluate()["engine"]["history_dtype"] == "bf16"
     s.run(3)
     path = os.path.join(tmp_path, "bf16hist.ckpt")
     s.save(path)
@@ -663,6 +663,6 @@ def test_gossip_engine_ppermute_bf16_matches_masked_bf16():
                                   np.asarray(s_p.posterior().mean))
     np.testing.assert_array_equal(np.asarray(s_m.posterior().rho),
                                   np.asarray(s_p.posterior().rho))
-    assert s_p.evaluate()["wire_dtype"] == "bf16"
+    assert s_p.evaluate()["engine"]["wire_dtype"] == "bf16"
     print("OK")
     """))
