@@ -38,12 +38,20 @@ import numpy as np
 
 from repro.core.flat import (
     FlatLayout,
+    FlatPosterior,
     consensus_flat,
+    consensus_flat_reference,
+    consensus_flat_segments,
     consensus_flat_sparse,
     flat_posterior_from_pytree,
     neighbor_tables,
 )
-from repro.core.graphs import bidirectional_ring_w, complete_w, star_w
+from repro.core.graphs import (
+    bidirectional_ring_w,
+    complete_w,
+    star_w,
+    watts_strogatz_sparse,
+)
 from repro.core.posterior import GaussianPosterior, consensus_all_agents
 from repro.launch.costmodel import consensus_roofline
 
@@ -207,6 +215,141 @@ def wire_sweep(
     return out
 
 
+def assert_no_dense_square(closed_jaxpr, n: int) -> None:
+    """Assert the jaxpr allocates NO [n, n] intermediate anywhere — the
+    O(E)-memory contract of the sparse path, checked on the actual traced
+    computation rather than trusted.  Recurses into sub-jaxprs (scan / cond
+    / pjit bodies)."""
+
+    def walk(jaxpr):
+        for eqn in jaxpr.eqns:
+            for v in list(eqn.invars) + list(eqn.outvars):
+                shape = getattr(getattr(v, "aval", None), "shape", ())
+                if tuple(shape).count(n) >= 2:
+                    raise AssertionError(
+                        f"sparse path allocated a dense {tuple(shape)} "
+                        f"intermediate (n={n}) in {eqn.primitive}"
+                    )
+            for param in eqn.params.values():
+                for sub in param if isinstance(param, (list, tuple)) else [param]:
+                    inner = getattr(sub, "jaxpr", None)
+                    if inner is not None:
+                        walk(inner)
+
+    walk(closed_jaxpr.jaxpr)
+
+
+def _flat_posts(seed: int, n: int, p: int) -> FlatPosterior:
+    """Plain [N, P] posterior buffers (no ragged pytree: the population-scale
+    sweep times the consensus, not the flatten)."""
+    rng = np.random.default_rng(seed)
+    layout = FlatLayout.for_pytree({"w": jnp.zeros((p,))})
+    return FlatPosterior(
+        mean=jnp.asarray(rng.normal(size=(n, p)), jnp.float32),
+        rho=jnp.asarray(rng.normal(size=(n, p)) * 0.3 - 1.0, jnp.float32),
+        layout=layout,
+    )
+
+
+def _segments_equivalence(n: int = 24, p: int = 96, seed: int = 5) -> dict:
+    """Pin ``consensus_flat_segments`` against the dense reference on a
+    small Watts-Strogatz graph, per wire dtype.  The wire-rounded exchange
+    values are bitwise the reference's (same ``wire_roundtrip`` chain); the
+    scatter accumulates in edge order vs the matmul's column order, so the
+    comparison is elementwise at fp32 reduction-order tolerance."""
+    g = watts_strogatz_sparse(n, k=4, beta=0.3, seed=seed)
+    posts = _flat_posts(seed, n, p)
+    W = jnp.asarray(g.to_dense(), jnp.float32)
+    dst, src, w = (jnp.asarray(a) for a in g.edge_arrays())
+    out = {}
+    for wire in ("f32", "bf16", "f16"):
+        ref_m, ref_r = consensus_flat_reference(
+            posts.mean, posts.rho, W, wire_dtype=wire
+        )
+        got = consensus_flat_segments(posts, dst, src, w, wire_dtype=wire)
+        err = max(
+            float(jnp.max(jnp.abs(got.mean - ref_m))),
+            float(jnp.max(jnp.abs(got.rho - ref_r))),
+        )
+        tol = 1e-4  # fp32 reduction-order tolerance (per-element)
+        assert err <= tol, f"segments vs dense reference ({wire}): {err} > {tol}"
+        out[wire] = err
+    return out
+
+
+# Population-scale sparse sweep: (n_agents, p, k, beta) on Watts-Strogatz.
+# Only O(E) representations exist on this path — asserted on the jaxpr.
+SEGMENTS_QUICK_SWEEP = [(10_000, 32, 6, 0.1)]
+SEGMENTS_FULL_SWEEP = [
+    (10_000, 64, 6, 0.1),
+    (30_000, 64, 6, 0.1),
+    (100_000, 32, 6, 0.1),  # N = 10^5: ~7e5 directed edges, still O(E)
+]
+
+
+def segments_sweep(quick: bool = False, iters: int = 5, seed: int = 0) -> dict:
+    """The N = 10^4..10^5 edge-native sweep: time
+    ``consensus_flat_segments`` on sparse small-world graphs no dense path
+    could even allocate, against the E-parameterized roofline."""
+    sweep = SEGMENTS_QUICK_SWEEP if quick else SEGMENTS_FULL_SWEEP
+    entries = []
+    for n, p, k, beta in sweep:
+        t0 = time.perf_counter()
+        g = watts_strogatz_sparse(n, k=k, beta=beta, seed=seed)
+        build_s = time.perf_counter() - t0
+        # host-side O(E) contract: every graph array is E- or N-sized
+        for arr in (g.indptr, g.indices, g.weights):
+            assert arr.size <= max(g.n_edges, n + 1)
+        dst, src, w = (jnp.asarray(a) for a in g.edge_arrays())
+        posts = _flat_posts(seed, n, p)
+        fn = jax.jit(
+            lambda fp, d, s, ww: consensus_flat_segments(fp, d, s, ww).mean
+        )
+        # device-side O(E) contract: no [N, N] aval anywhere in the trace
+        assert_no_dense_square(jax.make_jaxpr(fn)(posts, dst, src, w), n)
+        us = _time(fn, (posts, dst, src, w), iters)
+        roof = consensus_roofline(
+            n, p, 1, max_degree=g.max_in_degree, n_edges=g.n_edges
+        )
+        entries.append({
+            "n_agents": n,
+            "p": p,
+            "k": k,
+            "beta": beta,
+            "n_edges": g.n_edges,
+            "max_in_degree": g.max_in_degree,
+            "graph_build_seconds": build_s,
+            "us_flat_segments": us,
+            "roofline": roof,
+            "no_dense_alloc_asserted": True,
+        })
+        print(
+            f"bench_consensus_segments[{n}x{p}:ws{k}],"
+            f"{us:.1f},"
+            f"E={g.n_edges};model_bytes={roof['hbm_bytes']['flat_segments']:.0f}"
+        )
+    # measured-vs-modeled scaling between consecutive sweep points: the
+    # E-parameterized model should track the measured growth far better
+    # than any N^2 law (recorded, not asserted — CI wall-clock is noisy)
+    scaling = []
+    for a, b in zip(entries, entries[1:]):
+        scaling.append({
+            "from": f"{a['n_agents']}x{a['p']}",
+            "to": f"{b['n_agents']}x{b['p']}",
+            "measured_ratio": b["us_flat_segments"] / a["us_flat_segments"],
+            "modeled_ratio": (
+                b["roofline"]["hbm_bytes"]["flat_segments"]
+                / a["roofline"]["hbm_bytes"]["flat_segments"]
+            ),
+            "n2_ratio": (b["n_agents"] / a["n_agents"]) ** 2,
+        })
+    return {
+        "equivalence_max_err": _segments_equivalence(),
+        "sweep": entries,
+        "scaling": scaling,
+    }
+
+
 # (n_agents, p, topology, n_leaves) — n_leaves is a first-class axis: the
 # leaf-loop baseline pays per-leaf dispatch, so shallow pytrees (few big
 # leaves) are its best case and deep-model pytrees (hundreds of leaves, the
@@ -245,6 +388,7 @@ def run(quick: bool = False, json_out: str | None = DEFAULT_JSON) -> dict:
             f"{rec['us']['flat_fused']:.1f},"
             f"speedup={rec['speedup_flat_vs_leaf_loop']:.2f}x"
         )
+    segments = segments_sweep(quick=quick, iters=3 if quick else 5)
     wire = wire_sweep(iters=3 if quick else 5)
     for rec in wire:
         print(
@@ -258,6 +402,7 @@ def run(quick: bool = False, json_out: str | None = DEFAULT_JSON) -> dict:
         "backend": jax.default_backend(),
         "quick": quick,
         "results": results,
+        "segments": segments,
         "wire": wire,
         "summary": {
             "max_speedup_flat_vs_leaf_loop": max(

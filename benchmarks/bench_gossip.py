@@ -34,6 +34,19 @@ Five parts, mirroring what the ROADMAP Async section promises:
    f32 wire asserted bitwise-identical to the no-wire baseline, and the
    bf16 path asserted bitwise-consistent ACROSS executions (masked ==
    ppermute — the equivalence ladder per wire dtype).
+7. **Sparse scale sweep** (``sparse_scale``): edge-native gossip windows
+   at N >= 10^4 on Watts-Strogatz graphs.  Each window is a pure
+   function of ``(seed, round)``: thinned-Poisson fired-edge indices
+   (``gossip.clocks.thinned_poisson_indices``, O(fired) work), a
+   conserve-rule window edge list (fired in-edges at their graph
+   weights + a self edge absorbing the unfired in-mass of each active
+   row), and ``consensus_flat_segments`` over those [E_w] arrays with
+   the active-row mask.  No [N, N] object exists on host (array-size
+   assertion) or on device (jaxpr walk via
+   ``bench_consensus.assert_no_dense_square``); the
+   ``gossip_window_roofline(..., n_event_edges=...)`` EDGE-NATIVE model
+   is recorded next to measured wall-clock, plus a small-N equivalence
+   probe against the dense masked reference.
 
 Output: ``BENCH_gossip.json`` + the harness's ``name,us_per_call,derived``
 CSV rows.
@@ -41,6 +54,7 @@ CSV rows.
 from __future__ import annotations
 
 import json
+import time
 
 import jax
 import jax.numpy as jnp
@@ -51,9 +65,18 @@ from repro.core.flat import (
     FlatPosterior,
     consensus_flat,
     consensus_flat_masked,
+    consensus_flat_segments,
 )
-from repro.core.graphs import bidirectional_ring_w
-from repro.gossip.clocks import PoissonClock, _directed_edges
+from repro.core.graphs import (
+    SparseGraph,
+    bidirectional_ring_w,
+    watts_strogatz_sparse,
+)
+from repro.gossip.clocks import (
+    PoissonClock,
+    _directed_edges,
+    thinned_poisson_indices,
+)
 from repro.kernels.consensus import (
     consensus_fused_masked,
     consensus_fused_network,
@@ -383,7 +406,176 @@ def _wire_sweep(n: int = 8, p: int = 1 << 14) -> list[dict]:
     return out
 
 
-def run(json_out: str | None = DEFAULT_JSON) -> dict:
+def _sparse_window(g: SparseGraph, nonself, rate: float, seed: int, r: int):
+    """Conserve-rule gossip window — a pure function of ``(seed, r)``.
+
+    ``nonself`` is the precomputed ``(dst, src, w)`` triple of the graph's
+    non-self directed edges.  Fired edges are drawn by thinned-Poisson
+    index sampling (O(fired) work, never a per-edge [E] coin-flip pass
+    materialised per round — though here even [E] would be fine; the point
+    is the shared (seed, round) keying with the engine clocks).  Each
+    fired in-edge keeps its graph weight; every active row gets one self
+    edge absorbing its unfired in-mass so window rows stay row-stochastic.
+
+    Returns ``(dst, src, w, active)``: window edge arrays (fired edges
+    first, then the per-active-row self edges) and the [N] bool merge
+    mask.  Inactive rows contribute no edges at all — the segment-sum
+    consensus passes them through via the mask.
+    """
+    dst_ns, src_ns, w_ns = nonself
+    rng = np.random.default_rng([seed, r])
+    fired = thinned_poisson_indices(rng, int(dst_ns.shape[0]), rate)
+    f_dst = dst_ns[fired]
+    f_src = src_ns[fired]
+    f_w = w_ns[fired]
+    active = np.zeros(g.n_agents, dtype=bool)
+    active[f_dst] = True
+    rows = np.nonzero(active)[0].astype(np.int32)
+    in_mass = np.zeros(g.n_agents, dtype=np.float64)
+    np.add.at(in_mass, f_dst, f_w.astype(np.float64))
+    self_w = (1.0 - in_mass[rows]).astype(np.float32)
+    dst = np.concatenate([f_dst, rows])
+    src = np.concatenate([f_src, rows])
+    w = np.concatenate([f_w, self_w])
+    return dst, src, w, active
+
+
+def _sparse_window_equivalence(n: int = 24, p: int = 64,
+                               seed: int = 3) -> float:
+    """Small-N probe: the edge-native window must match the dense masked
+    reference on the SAME conserve-rule effective weights (fp32
+    reduction-order tolerance — scatter adds in edge order, the dense
+    pass in column order)."""
+    from benchmarks.bench_consensus import _flat_posts
+
+    g = watts_strogatz_sparse(n, k=4, beta=0.3, seed=seed)
+    dst, src, w = g.edge_arrays()
+    ns = dst != src
+    nonself = (dst[ns], src[ns], w[ns])
+    max_err = 0.0
+    for r in range(3):
+        d, s, ww, active = _sparse_window(g, nonself, 0.3, seed, r)
+        posts = _flat_posts(seed + r, n, p)
+        got = consensus_flat_segments(
+            posts, jnp.asarray(d), jnp.asarray(s), jnp.asarray(ww),
+            active=jnp.asarray(active),
+        )
+        n_fired = int(d.shape[0]) - int(active.sum())
+        W_eff = np.eye(n, dtype=np.float32)
+        W_eff[d[:n_fired], s[:n_fired]] = ww[:n_fired]
+        rows = d[n_fired:]
+        W_eff[rows, rows] = ww[n_fired:]
+        ref = consensus_flat_masked(
+            posts, jnp.asarray(W_eff), jnp.asarray(active))
+        err = max(float(jnp.max(jnp.abs(got.mean - ref.mean))),
+                  float(jnp.max(jnp.abs(got.rho - ref.rho))))
+        max_err = max(max_err, err)
+    assert max_err <= 1e-4, f"sparse window vs dense masked err {max_err}"
+    return max_err
+
+
+# (n_agents, p, ws_k, ws_beta, per-edge rate) — sparse-only scale points;
+# the dense engine cannot even allocate W at these sizes (N=1e5 f32 W
+# would be 40 GB), which is exactly the point of the edge-native path.
+_SPARSE_SCALE_QUICK = [(10_000, 32, 6, 0.1, 0.05)]
+_SPARSE_SCALE_FULL = [
+    (10_000, 64, 6, 0.1, 0.05),
+    (30_000, 64, 6, 0.1, 0.05),
+    (100_000, 32, 6, 0.1, 0.05),
+]
+
+
+def sparse_scale_sweep(quick: bool = False, iters: int = 5,
+                       seed: int = 0) -> dict:
+    """Edge-native gossip windows at N >= 10^4: Watts-Strogatz graphs,
+    thinned-Poisson fired edges, segment-sum window consensus.  Asserts
+    O(E) peak graph memory on host (array-size bound) and the absence of
+    any [N, N] intermediate on device (jaxpr walk)."""
+    from benchmarks.bench_consensus import _flat_posts, assert_no_dense_square
+
+    equivalence_max_err = _sparse_window_equivalence()
+    configs = _SPARSE_SCALE_QUICK if quick else _SPARSE_SCALE_FULL
+    entries = []
+    for n, p, k, beta, rate in configs:
+        t0 = time.perf_counter()
+        g = watts_strogatz_sparse(n, k=k, beta=beta, seed=seed)
+        graph_build_s = time.perf_counter() - t0
+        dst, src, w = g.edge_arrays()
+        ns = dst != src
+        nonself = (dst[ns], src[ns], w[ns])
+        t0 = time.perf_counter()
+        d, s, ww, active = _sparse_window(g, nonself, rate, seed, 0)
+        window_build_s = time.perf_counter() - t0
+        d2, s2, w2, a2 = _sparse_window(g, nonself, rate, seed, 0)
+        assert (np.array_equal(d, d2) and np.array_equal(s, s2)
+                and np.array_equal(ww, w2) and np.array_equal(active, a2)), \
+            "window is not a pure function of (seed, round)"
+        # peak graph memory is O(E): every host array the window touches
+        # is bounded by the edge count (or N+1 for indptr / the mask) —
+        # nothing [N, N]-shaped exists anywhere in this sweep
+        for arr in (g.indptr, g.indices, g.weights, dst, src, w, d, s, ww):
+            assert arr.size <= max(g.n_edges, n + 1), "graph array not O(E)"
+        assert active.size == n
+        posts = _flat_posts(seed, n, p)
+        dj, sj, wj = jnp.asarray(d), jnp.asarray(s), jnp.asarray(ww)
+        aj = jnp.asarray(active)
+        fn = jax.jit(lambda q, dd, ss, wv, aa: consensus_flat_segments(
+            q, dd, ss, wv, active=aa).mean)
+        assert_no_dense_square(jax.make_jaxpr(fn)(posts, dj, sj, wj, aj), n)
+        us = _time(fn, (posts, dj, sj, wj, aj), iters=iters)
+        participating = np.zeros(n, dtype=bool)
+        participating[d] = True
+        participating[s] = True
+        roof = gossip_window_roofline(
+            n, p,
+            n_participating=int(participating.sum()),
+            n_merging=int(active.sum()),
+            n_event_edges=int(d.shape[0]),
+        )
+        entries.append({
+            "n_agents": n,
+            "p": p,
+            "ws_k": k,
+            "ws_beta": beta,
+            "rate": rate,
+            "n_edges": g.n_edges,
+            "n_window_edges": int(d.shape[0]),
+            "n_merging": int(active.sum()),
+            "graph_build_seconds": graph_build_s,
+            "window_build_seconds": window_build_s,
+            "us_window_segments": us,
+            "roofline": roof,
+            "no_dense_alloc_asserted": True,
+            "window_pure_fn_of_seed_round": True,
+        })
+        print(f"gossip_sparse[n={n};p={p};Ew={int(d.shape[0])}],{us:.1f},"
+              f"merging={int(active.sum())};"
+              f"model_s={roof['roofline_seconds']['window_segments']:.2e}")
+    # measured-vs-modeled scaling between consecutive points: the
+    # E-parameterized window model should track measured growth far
+    # better than any N^2 law (recorded, not asserted — CI noise)
+    scaling = []
+    for a, b in zip(entries, entries[1:]):
+        scaling.append({
+            "from": f"{a['n_agents']}x{a['p']}",
+            "to": f"{b['n_agents']}x{b['p']}",
+            "measured_ratio": (
+                b["us_window_segments"] / a["us_window_segments"]
+            ),
+            "modeled_ratio": (
+                b["roofline"]["hbm_bytes"]["window_segments"]
+                / a["roofline"]["hbm_bytes"]["window_segments"]
+            ),
+            "n2_ratio": (b["n_agents"] / a["n_agents"]) ** 2,
+        })
+    return {
+        "equivalence_max_err": equivalence_max_err,
+        "sweep": entries,
+        "scaling": scaling,
+    }
+
+
+def run(json_out: str | None = DEFAULT_JSON, full: bool = False) -> dict:
     equiv = _all_active_equivalence()
     print(f"gossip_equivalence,0.0,"
           f"kernel_err={equiv['kernel_max_err']};"
@@ -418,6 +610,7 @@ def run(json_out: str | None = DEFAULT_JSON) -> dict:
               f"ici_bytes="
               f"{rec['roofline']['ici_bytes']['window_ppermute']:.0f};"
               f"bitwise_masked_eq_ppermute=1")
+    sparse = sparse_scale_sweep(quick=not full, iters=5 if full else 3)
     doc = {
         "benchmark": "gossip_event_windows",
         "backend": jax.default_backend(),
@@ -428,6 +621,7 @@ def run(json_out: str | None = DEFAULT_JSON) -> dict:
         "delay_sweep": delay,
         "shard_sweep": shard,
         "wire_sweep": wire,
+        "sparse_scale": sparse,
     }
     if json_out:
         with open(json_out, "w") as f:

@@ -176,7 +176,8 @@ def main(argv=None) -> None:
     )
     ap.add_argument(
         "--full", action="store_true",
-        help="bench only: run the full sweep instead of the quick CI smoke",
+        help="bench / gossip-smoke: run the full sweep (segment-sum and "
+        "sparse-scale points up to N=1e5) instead of the quick CI smoke",
     )
     ap.add_argument(
         "--strict", action="store_true",
@@ -188,7 +189,8 @@ def main(argv=None) -> None:
         api_smoke()
         return
     if args.cmd == "gossip-smoke":
-        bench_gossip.run(json_out=args.json_out or bench_gossip.DEFAULT_JSON)
+        bench_gossip.run(json_out=args.json_out or bench_gossip.DEFAULT_JSON,
+                         full=args.full)
         return
     if args.cmd == "chaos-smoke":
         bench_chaos.run(json_out=args.json_out or bench_chaos.DEFAULT_JSON)

@@ -34,7 +34,16 @@ _NAMED_TOPOLOGIES = {
     "torus": graphs.torus_w,
     "complete": graphs.complete_w,
     "erdos": graphs.erdos_w,
+    # dense bridges of the sparse small-world generators, so they work as
+    # named kinds and gossip bases at moderate N; use kind="sparse" at scale
+    "watts_strogatz": graphs.watts_strogatz_w,
+    "barabasi_albert": graphs.barabasi_albert_w,
 }
+
+#: Above this agent count a ``kind="sparse"`` topology refuses to derive a
+#: dense W: a [4096, 4096] f64 matrix is 128 MiB and anything past it is the
+#: O(N^2) regime the edge-native runtime exists to avoid.
+SPARSE_DENSE_GUARD = 4096
 
 
 def _freeze(d: dict | None) -> dict:
@@ -59,7 +68,24 @@ class TopologySpec:
       ``{"base": "explicit", "w": [[...]]}`` — and ``clock`` is the plain-
       dict activation-clock description of ``repro.gossip.clocks
       .build_clock``; selects the ``GossipEngine``, one event window per
-      round).
+      round), or ``sparse`` (edge-native CSR topology: ``params`` carries a
+      generator name + its kwargs, e.g. ``{"generator": "watts_strogatz",
+      "n": 10_000, "k": 6, "beta": 0.1}``; see below).
+
+    kind="sparse" (population scale, N = 10^4+):
+      ``params["generator"]`` names a ``repro.core.graphs.SPARSE_GENERATORS``
+      builder — ``ring | bidirectional_ring | grid | torus | star`` (the
+      named topologies without the [N, N] allocation) or the small-world
+      generators ``watts_strogatz`` (n, k, beta, seed) and
+      ``barabasi_albert`` (n, m, seed); the remaining params are the
+      builder's kwargs.  The doc is plain data (checkpoint-embeddable) and
+      ``validate()`` runs entirely on the CSR arrays — row-stochasticity and
+      the iterative strong-connectivity check — without materializing W.
+      ``sparse_graph()`` returns the memoized ``SparseGraph``; a dense W is
+      derived lazily (``w_schedule()``/``_static_list()``) and ONLY below
+      ``SPARSE_DENSE_GUARD`` agents — above it, drive the edge-native
+      runtime directly (``SparseGraph.edge_arrays()`` +
+      ``core.flat.consensus_flat_segments``).
     """
 
     kind: str = "complete"
@@ -101,6 +127,14 @@ class TopologySpec:
     @classmethod
     def from_callable(cls, fn: Callable[[int], Any], n_agents: int) -> "TopologySpec":
         return cls(kind="callable", schedule=fn, agents=n_agents)
+
+    @classmethod
+    def sparse(cls, generator: str, **params) -> "TopologySpec":
+        """Edge-native CSR topology (``kind="sparse"``): ``generator`` names
+        a ``graphs.SPARSE_GENERATORS`` builder, ``params`` are its kwargs —
+        e.g. ``TopologySpec.sparse("watts_strogatz", n=10_000, k=6,
+        beta=0.1, seed=0)``."""
+        return cls(kind="sparse", params={"generator": generator, **params})
 
     @classmethod
     def gossip(
@@ -193,8 +227,49 @@ class TopologySpec:
         object.__setattr__(self, "_clock_cache", clock)
         return clock
 
+    def sparse_graph(self):
+        """kind="sparse": the memoized, eagerly validated ``SparseGraph``.
+
+        Construction runs the generator AND its Assumption-1 validation on
+        the CSR arrays (O(E) memory, iterative connectivity check) — the
+        sparse analogue of ``check_w`` on the named dense builders."""
+        if self.kind != "sparse":
+            raise ValueError("sparse_graph() is only defined for kind='sparse'")
+        cached = getattr(self, "_sparse_cache", None)
+        if cached is not None:
+            return cached
+        params = _freeze(self.params)
+        generator = params.pop("generator", None)
+        if generator is None:
+            raise ValueError(
+                "TopologySpec(kind='sparse') requires params={'generator': "
+                f"...}}; known generators: {sorted(graphs.SPARSE_GENERATORS)}"
+            )
+        try:
+            graph = graphs.build_sparse(generator, **params)
+        except TypeError as e:
+            raise ValueError(
+                f"sparse generator {generator!r} params mismatch: {e}"
+            ) from e
+        object.__setattr__(self, "_sparse_cache", graph)
+        return graph
+
     def _static_list(self) -> list | None:
-        """The full W list for non-callable kinds (None for ``callable``)."""
+        """The full W list for non-callable kinds (None for ``callable``).
+
+        kind="sparse" derives its dense W HERE — lazily, and only below
+        ``SPARSE_DENSE_GUARD`` agents."""
+        if self.kind == "sparse":
+            graph = self.sparse_graph()
+            if graph.n_agents > SPARSE_DENSE_GUARD:
+                raise ValueError(
+                    f"sparse topology has N={graph.n_agents} agents, above "
+                    f"the dense-materialization guard ({SPARSE_DENSE_GUARD}): "
+                    "refusing to allocate [N, N]; drive the edge-native "
+                    "runtime instead (sparse_graph().edge_arrays() + "
+                    "core.flat.consensus_flat_segments)"
+                )
+            return [graph.to_dense()]
         if self.kind in _NAMED_TOPOLOGIES:
             try:
                 return [_NAMED_TOPOLOGIES[self.kind](**_freeze(self.params))]
@@ -216,7 +291,7 @@ class TopologySpec:
             return None
         raise ValueError(
             f"unknown topology kind {self.kind!r}; known: "
-            f"{sorted(_NAMED_TOPOLOGIES) + ['explicit', 'schedule', 'time_varying_star', 'callable', 'gossip']}"
+            f"{sorted(_NAMED_TOPOLOGIES) + ['explicit', 'schedule', 'time_varying_star', 'callable', 'gossip', 'sparse']}"
         )
 
     def w_schedule(self) -> Callable[[int], np.ndarray]:
@@ -242,6 +317,8 @@ class TopologySpec:
             return self.agents
         if self.kind == "gossip":
             return int(self.base_w().shape[0])
+        if self.kind == "sparse":
+            return self.sparse_graph().n_agents
         return int(np.asarray(self._static_list()[0]).shape[0])
 
     def validate(self) -> None:
@@ -258,6 +335,10 @@ class TopologySpec:
         """
         if self.kind == "gossip":
             self.gossip_clock().validate()
+            return
+        if self.kind == "sparse":
+            # O(E) throughout: generator + CSR validation, never a dense W
+            self.sparse_graph().validate(require_connected=True)
             return
         if self.kind == "callable":
             W0 = np.asarray(self.schedule(0), np.float64)

@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import graphs as _graphs
 from repro.core.numerics import (
     COMPUTE_DTYPE,
     canonical_wire_dtype,
@@ -587,6 +588,84 @@ def consensus_flat_delayed(
     return FlatPosterior(mean=mean_out, rho=rho_out, layout=posts.layout)
 
 
+# Peak [E, BLOCK] gather intermediate cap for the segment path (elements).
+# 2^24 f32 elements = 64 MiB per buffer — cache-friendly on CPU, far below
+# any [N, N] materialization at the population scales this path serves.
+_SEGMENT_GATHER_ELEMS = 1 << 24
+
+
+def consensus_flat_segments(
+    posts: FlatPosterior,
+    dst: jax.Array,
+    src: jax.Array,
+    weights: jax.Array,
+    *,
+    active: jax.Array | None = None,
+    block: int | None = None,
+    wire_dtype=None,
+) -> FlatPosterior:
+    """Edge-native eq. (6): segment-sum consensus over flat [E] edge arrays.
+
+    The sparse-first counterpart of ``consensus_flat_reference`` — the graph
+    arrives as ``(dst, src, weights)`` edge lists (self-loops INCLUDED, e.g.
+    ``SparseGraph.edge_arrays()``), never as a dense ``[N, N]`` W.  Per lane
+    block: gather each edge's source sufficient statistics, scatter-add
+    (``segment_sum``) into the destination rows
+
+        prec_out[i] = sum_{e: dst_e = i} w_e * prec_x[src_e]
+        pm_out[i]   = sum_{e: dst_e = i} w_e * (prec * mu)_x[src_e]
+
+    with the (prec, prec*mu) buffers rounded through ``wire_dtype`` at the
+    exchange boundary exactly as in ``_eq6_block`` (structural no-op at
+    f32) and fp32 accumulation throughout.  Peak memory is O(E * block):
+    the default ``block`` shrinks with E so the gather intermediate stays
+    under ``_SEGMENT_GATHER_ELEMS`` elements — no path here is O(N^2).
+
+    Agrees with the dense reference elementwise to fp32 reduction-order
+    tolerance on every wire dtype (the scatter accumulates in edge order,
+    the matmul in column order); rows whose accumulation is a single term
+    and the wire-rounded exchange values themselves are bitwise identical.
+
+    Zero-weight pad edges (any valid dst/src) contribute exactly nothing,
+    matching the ``consensus_flat_delayed`` event-list convention.
+    ``active`` masks rows gossip-style: inactive rows pass through bitwise.
+    """
+    wire_dtype = canonical_wire_dtype(wire_dtype)
+    n, p = posts.mean.shape
+    n_edges = int(dst.shape[0])
+    w_e = weights[:, None].astype(COMPUTE_DTYPE)
+    act = None if active is None else (active > 0)[:, None]
+    if block is None:
+        block = max(128, min(XLA_BLOCK, _SEGMENT_GATHER_ELEMS // max(n_edges, 1)))
+
+    def blk(m_in, r_in):
+        prec = 1.0 / jnp.square(softplus(r_in))
+        prec_x = wire_roundtrip(prec, wire_dtype)
+        pm_x = wire_roundtrip(prec * m_in, wire_dtype)
+        acc_prec = jnp.zeros_like(prec).at[dst].add(w_e * prec_x[src])
+        acc_pm = jnp.zeros_like(prec).at[dst].add(w_e * pm_x[src])
+        m_o = acc_pm / acc_prec
+        r_o = softplus_inv(jax.lax.rsqrt(acc_prec))
+        if act is None:
+            return m_o, r_o
+        return jnp.where(act, m_o, m_in), jnp.where(act, r_o, r_in)
+
+    if p <= block:
+        mean_out, rho_out = blk(posts.mean, posts.rho)
+        return FlatPosterior(mean=mean_out, rho=rho_out, layout=posts.layout)
+    n_blocks = -(-p // block)
+    if n_blocks > _MAX_UNROLL:
+        block = -(-p // _MAX_UNROLL)
+    mean_out = jnp.empty_like(posts.mean)
+    rho_out = jnp.empty_like(posts.rho)
+    for s in range(0, p, block):
+        e = min(s + block, p)
+        m_o, r_o = blk(posts.mean[:, s:e], posts.rho[:, s:e])
+        mean_out = jax.lax.dynamic_update_slice(mean_out, m_o, (0, s))
+        rho_out = jax.lax.dynamic_update_slice(rho_out, r_o, (0, s))
+    return FlatPosterior(mean=mean_out, rho=rho_out, layout=posts.layout)
+
+
 def consensus_flat_masked_sparse(
     posts: FlatPosterior,
     neighbors: jax.Array,
@@ -636,17 +715,14 @@ def neighbor_tables(W: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
     with the agent's own id at weight 0.0 (reads a tile the agent already
     touches, contributes nothing).  Host-side/static: call once per topology,
     not per round.
+
+    Delegates to the one CSR construction
+    (``graphs.SparseGraph.from_dense(...).neighbor_tables()``) shared with
+    ``graphs.neighbor_lists`` / ``graphs.max_in_degree`` — sparse-native
+    callers skip the dense bridge and call the method on their
+    ``SparseGraph`` directly.
     """
-    Wn = np.asarray(W)
-    n = Wn.shape[0]
-    rows = [np.nonzero(Wn[i])[0] for i in range(n)]
-    d = max((len(r) for r in rows), default=1) or 1
-    neighbors = np.tile(np.arange(n, dtype=np.int32)[:, None], (1, d))
-    weights = np.zeros((n, d), np.float32)
-    for i, r in enumerate(rows):
-        neighbors[i, : len(r)] = r
-        weights[i, : len(r)] = Wn[i, r]
-    return neighbors, weights
+    return _graphs.SparseGraph.from_dense(np.asarray(W)).neighbor_tables()
 
 
 def _sparse_reference(mean, rho, neighbors, weights, block: int = XLA_BLOCK,

@@ -31,6 +31,18 @@ Three kernels, all computing
   agent's own row), giving HBM traffic proportional to the window's
   active-edge fraction (``launch.costmodel.gossip_window_roofline``).
 
+The padded neighbor tables both sparse kernels scalar-prefetch come from
+THE one CSR construction — ``core.graphs.SparseGraph.neighbor_tables()``
+(``core.flat.neighbor_tables`` is its dense-W bridge) — so the kernel view
+of a topology can never disagree with the graph layer's.  The [N, N]-free
+counterpart for N = 10^4+ populations is ``core.flat
+.consensus_flat_segments``: a segment-sum over ``SparseGraph.edge_arrays()``
+[E] edge lists with the identical exchange-boundary wire contract.  It
+stays an XLA scatter path by design — TPU Pallas has no efficient
+data-dependent scatter primitive, and at deg(i) << N the gather/segment-sum
+is memory-bound XLA already handles well — while these Pallas kernels own
+the dense/VMEM-resident regime (N <= a few thousand).
+
 Flat-buffer layout contract (shared with ``core.flat.FlatPosterior``):
   * axis 0 is the agent axis (N rows), axis 1 the flattened parameter axis
     (P fp32 lanes, leaf-major in layout order);

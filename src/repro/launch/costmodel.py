@@ -45,6 +45,7 @@ def consensus_roofline(
     bytes_per_el: int = 4,
     *,
     wire_dtype: str = "f32",
+    n_edges: int | None = None,
 ) -> dict[str, Any]:
     """Analytic HBM traffic of one consensus round (eq. 6), per execution
     strategy, for the memory-bound roofline.  Used by
@@ -77,6 +78,18 @@ def consensus_roofline(
     — bf16 exactly halves them (asserted by unit test).  Reported in the
     ``wire`` block; the HBM terms stay at ``bytes_per_el`` (the buffers
     are fp32-resident, only the exchange compresses).
+
+    E-PARAMETERIZATION (``n_edges`` — self-loops included, i.e.
+    ``SparseGraph.n_edges``): every sparse term is really a function of the
+    directed edge count E, not of N^2.  ``flat_segments`` is the
+    edge-native ``core.flat.consensus_flat_segments`` traffic — gather both
+    statistics' source row per edge, write both network buffers — and the
+    edge-parameterized wire collective moves only the E - N off-diagonal
+    rows instead of the dense N(N-1).  When ``n_edges`` is omitted it is
+    derived as ``n_agents * max_degree`` (the padded-table bound), which
+    makes ``flat_segments`` coincide with ``flat_sparse``; pass the true E
+    for ragged-degree graphs (Watts-Strogatz, Barabasi-Albert), where the
+    padded bound overcounts.
     """
     wire_el = _wire_bytes_per_el(wire_dtype)
     row_bytes = n_params * bytes_per_el  # one agent, one buffer
@@ -84,34 +97,43 @@ def consensus_roofline(
     touches_leaf_loop = 12.0  # ~6 round-trips over both buffers
     touches_fused = 4.0  # read mean+rho, write mean+rho
     deg = n_agents if max_degree is None else max_degree
+    n_edges_eff = int(n_agents * deg) if n_edges is None else int(n_edges)
     bytes_leaf_loop = touches_leaf_loop * net_bytes
     bytes_fused = touches_fused * net_bytes
     # sparse: each agent reads deg(i) neighbor rows of both buffers; writes
     # are the same 2 network-sized buffers as the dense fused kernel
     bytes_sparse = 2.0 * n_agents * deg * row_bytes + 2.0 * net_bytes
+    # segments: 2 E-row gathers (prec, prec*mu sources) + 2 network writes —
+    # O(E), never O(N^2); equals bytes_sparse when E = N * deg
+    bytes_segments = 2.0 * n_edges_eff * row_bytes + 2.0 * net_bytes
     out = {
         "n_agents": n_agents,
         "n_params": n_params,
         "n_leaves": n_leaves,
+        "n_edges": n_edges_eff,
         "hbm_bytes": {
             "leaf_loop": bytes_leaf_loop,
             "flat_fused": bytes_fused,
             "flat_sparse": bytes_sparse,
+            "flat_segments": bytes_segments,
         },
         "hbm_passes": {  # in fused-pass units (1.0 = one read+write of both buffers)
             "leaf_loop": touches_leaf_loop / touches_fused,
             "flat_fused": 1.0,
             "flat_sparse": bytes_sparse / bytes_fused,
+            "flat_segments": bytes_segments / bytes_fused,
         },
         "roofline_seconds": {
             "leaf_loop": bytes_leaf_loop / HBM_BW,
             "flat_fused": bytes_fused / HBM_BW,
             "flat_sparse": bytes_sparse / HBM_BW,
+            "flat_segments": bytes_segments / HBM_BW,
         },
         "model_speedup_fused_vs_leaf_loop": bytes_leaf_loop / bytes_fused,
         # collective exchange of (prec, prec*mu) over a sharded agent axis:
         # ring all-gather of both statistics = 2 x net x (N-1)/N per agent
-        # -> 2 x N x (N-1) x row bytes globally, at the WIRE itemsize
+        # -> 2 x N x (N-1) x row bytes globally, at the WIRE itemsize;
+        # the edge-parameterized form moves only the E - N off-diagonal rows
         "wire": {
             "dtype": wire_dtype,
             "bytes_per_el": wire_el,
@@ -120,6 +142,9 @@ def consensus_roofline(
             ),
             "collective_bytes_f32": (
                 2.0 * n_agents * (n_agents - 1) * n_params * 4
+            ),
+            "collective_bytes_edges": (
+                2.0 * max(n_edges_eff - n_agents, 0) * n_params * wire_el
             ),
         },
     }
@@ -143,6 +168,7 @@ def gossip_window_roofline(
     n_stale_events: int = 0,
     wire_dtype: str = "f32",
     history_dtype: str = "f32",
+    n_event_edges: int | None = None,
 ) -> dict[str, Any]:
     """Analytic HBM traffic of ONE gossip event window (repro.gossip), for
     the active-edge masked consensus (``consensus_fused_masked_sparse``).
@@ -189,6 +215,15 @@ def gossip_window_roofline(
     stay at ``bytes_per_el`` (fp32-resident buffers); ``history_dtype``
     independently sizes the ring's resident footprint and its per-window
     traffic (bf16 halves the resident ring).
+
+    EDGE-NATIVE term (``n_event_edges`` — the window's fired NON-SELF event
+    count, ``EventWindow.n_events`` or the thinned-Poisson fired count):
+    the segment-sum window (``consensus_flat_segments`` over fired edges +
+    the merging rows' self edges) gathers one (prec, prec*mu) source row
+    pair per fired edge plus each merging row's own pair, and writes the
+    merging rows — ``window_segments`` is a pure function of
+    (E_fired, n_merging, P), with NO N term at all: the roofline the
+    N = 10^4+ sparse sweep in BENCH_gossip.json tracks.
     """
     if n_merging is None:
         n_merging = n_participating
@@ -248,6 +283,19 @@ def gossip_window_roofline(
         ),
     }
     out["wire_dtype"] = wire_dtype
+    if n_event_edges is not None:
+        if n_event_edges < 0:
+            raise ValueError("n_event_edges must be >= 0")
+        bytes_segments = (
+            2.0 * (n_event_edges + n_merging) * row_bytes
+            + 2.0 * n_merging * row_bytes
+        )
+        out["n_event_edges"] = int(n_event_edges)
+        out["hbm_bytes"]["window_segments"] = bytes_segments
+        out["hbm_passes"]["window_segments"] = (
+            bytes_segments / bytes_dense if bytes_dense else 0.0
+        )
+        out["roofline_seconds"]["window_segments"] = bytes_segments / HBM_BW
     if delay_depth > 0:
         out["delay_depth"] = delay_depth
         out["history_dtype"] = history_dtype
