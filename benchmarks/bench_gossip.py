@@ -47,6 +47,18 @@ Five parts, mirroring what the ROADMAP Async section promises:
    ``gossip_window_roofline(..., n_event_edges=...)`` EDGE-NATIVE model
    is recorded next to measured wall-clock, plus a small-N equivalence
    probe against the dense masked reference.
+8. **Engine sparse smoke** (``engine_sparse_smoke``): the FULL
+   ``repro.api`` surface at N=10^4 — a Watts-Strogatz Poisson
+   ``TopologySpec(kind="sparse", clock=...)`` session on
+   ``consensus_impl="segments"`` runs round/evaluate/save/load end to
+   end.  The jitted window program is re-traced on the engine's OWN
+   captured arguments and walked with ``assert_no_dense_square`` (no
+   [N, N] on device), every host array the window carries is asserted
+   O(E) (nothing [N, N]-shaped on host either), and the clock's
+   window-build host time is measured at N=1e4 vs N=3e4 and asserted to
+   scale with the fired-edge count, not N^2.  A small-N probe pins the
+   segments engine to the dense masked engine per wire dtype (fp32
+   reduction-order tolerance — both sum the same wire-quantized values).
 
 Output: ``BENCH_gossip.json`` + the harness's ``name,us_per_call,derived``
 CSV rows.
@@ -74,6 +86,7 @@ from repro.core.graphs import (
 )
 from repro.gossip.clocks import (
     PoissonClock,
+    SparsePoissonClock,
     _directed_edges,
     thinned_poisson_indices,
 )
@@ -575,6 +588,194 @@ def sparse_scale_sweep(quick: bool = False, iters: int = 5,
     }
 
 
+def _engine_session_spec(n: int, k: int, beta: float, rate: float,
+                         e_max: int | None, n_rounds: int,
+                         impl: str = "segments", wire: str = "f32"):
+    """A spec-driven sparse-clock gossip session: 2 training rows per agent
+    (the sweep times the window machinery, not SGD) on a Watts-Strogatz
+    graph with a thinned-Poisson edge clock.  ``e_max`` declares the
+    per-window fired-edge cap, shrinking the engine's static [E_max]
+    buffers below the all-edges default."""
+    from repro.api import (
+        DataSpec, ExperimentSpec, InferenceSpec, RunSpec, TopologySpec,
+    )
+
+    return ExperimentSpec(
+        topology=TopologySpec.sparse(
+            "watts_strogatz", n=n, k=k, beta=beta, seed=1,
+            clock={"kind": "poisson", "rate": rate, "seed": 3,
+                   "e_max": e_max},
+        ),
+        data=DataSpec(
+            dataset_params=dict(n_classes=2, dim=8, n_train_per_class=n,
+                                seed=0),
+            partition="iid", partition_params=dict(n_agents=n),
+            batch_size=2, local_updates=1,
+        ),
+        inference=InferenceSpec(hidden=8, depth=1, lr=1e-2,
+                                consensus_impl=impl, wire_dtype=wire),
+        run=RunSpec(n_rounds=n_rounds, seed=0),
+    )
+
+
+def _engine_wire_equivalence(n: int = 16, n_rounds: int = 2) -> list[dict]:
+    """Below SPARSE_DENSE_GUARD the same SparseWindow runs edge-native
+    (segments) or densified via ``w_eff`` (masked) — per wire dtype, both
+    cast payloads to the wire BEFORE reduction, so the posteriors must
+    agree to fp32 reduction-order tolerance (not wire tolerance)."""
+    from repro.api import build_session
+
+    out = []
+    for wire in ("f32", "bf16", "f16"):
+        posts = {}
+        for impl in ("segments", "masked"):
+            s = build_session(_engine_session_spec(
+                n, k=4, beta=0.2, rate=1.0, e_max=None,
+                n_rounds=n_rounds, impl=impl, wire=wire))
+            s.run()
+            posts[impl] = s.posterior()
+        err = max(
+            float(jnp.max(jnp.abs(
+                posts["segments"].mean - posts["masked"].mean))),
+            float(jnp.max(jnp.abs(
+                posts["segments"].rho - posts["masked"].rho))),
+        )
+        assert err <= 1e-4, \
+            f"segments vs masked engine err {err} at wire {wire}"
+        out.append({"wire_dtype": wire, "n_agents": n,
+                    "n_rounds": n_rounds, "max_err": err})
+    return out
+
+
+def _window_build_seconds(n: int, k: int, beta: float, rate: float,
+                          windows: int = 10, reps: int = 3) -> dict:
+    """Median host seconds to build ``windows`` consecutive SparseWindows
+    (memo defeated by distinct rounds), warm — the O(fired + N) claim,
+    measured."""
+    g = watts_strogatz_sparse(n, k=k, beta=beta, seed=1)
+    clock = SparsePoissonClock(g, rate=rate, seed=3)
+    clock._build_window(0)  # warm (rng/bincount setup paths)
+    times = []
+    n_events = 0
+    for rep in range(reps):
+        t0 = time.perf_counter()
+        for r in range(windows):
+            win = clock._build_window(1 + rep * windows + r)
+            n_events += win.n_events
+        times.append(time.perf_counter() - t0)
+    return {
+        "n_agents": n,
+        "n_edges": clock.n_edges,
+        "avg_fired": n_events / (reps * windows),
+        "seconds_per_window": float(np.median(times)) / windows,
+    }
+
+
+def engine_sparse_smoke(full: bool = False) -> dict:
+    """Acceptance probe: the GossipEngine runs a Watts-Strogatz Poisson
+    session at N=10^4 end to end — round, evaluate, save, load — with no
+    [N, N] object on the window path (device: jaxpr walk over the
+    engine's own traced window program; host: array-size bound on the
+    SparseWindow)."""
+    import os
+    import tempfile
+
+    from benchmarks.bench_consensus import assert_no_dense_square
+    from repro.api import Session, build_session
+
+    n, k, beta, rate, e_max = 10_000, 6, 0.1, 0.05, 8192
+    spec = _engine_session_spec(n, k, beta, rate, e_max, n_rounds=4)
+    t0 = time.perf_counter()
+    s = build_session(spec)
+    build_s = time.perf_counter() - t0
+    assert s.engine.consensus_impl == "segments"  # auto would pick it too
+
+    # capture the EXACT arguments the engine hands its jitted window fn,
+    # so the jaxpr walk certifies the program that actually ran
+    orig = s.engine._window
+    cap = {}
+
+    def shim(*args):
+        cap["args"] = args
+        return orig(*args)
+
+    s.engine._window = shim
+    t0 = time.perf_counter()
+    first = s.round()
+    compile_s = time.perf_counter() - t0
+    s.engine._window = orig
+    assert_no_dense_square(jax.make_jaxpr(orig)(*cap["args"]), n)
+
+    # host side: every array a SparseWindow carries is O(E_max) or O(N) —
+    # nothing [N, N]-shaped exists anywhere on the window path
+    win = s.engine.clock.window(0)
+    for arr in (win.dst, win.src, win.weights):
+        assert arr.size == e_max, "window edge buffer not at the e_max cap"
+    for arr in (win.self_weight, win.active):
+        assert arr.size == n
+    assert not hasattr(win, "_w_eff_cache"), "dense w_eff was derived"
+
+    t0 = time.perf_counter()
+    warm = [s.round() for _ in range(2)]
+    warm_s = (time.perf_counter() - t0) / 2
+    assert all(np.isfinite(r["loss"]) for r in [first] + warm)
+    assert s.engine.n_traces == 1, "sparse window retraced"
+
+    t0 = time.perf_counter()
+    tel = s.evaluate(n_mc=0)  # deterministic point predictive per agent
+    evaluate_s = time.perf_counter() - t0
+
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "ckpt.msgpack")
+        t0 = time.perf_counter()
+        s.save(path)
+        s2 = Session.load(path)
+        save_load_s = time.perf_counter() - t0
+        assert bool(jnp.all(s2.posterior().mean == s.posterior().mean)
+                    & jnp.all(s2.posterior().rho == s.posterior().rho)), \
+            "checkpoint round-trip is not bitwise"
+        resumed = s2.round()  # the loaded session keeps gossiping
+        assert np.isfinite(resumed["loss"])
+
+    # window-build host time must scale with the fired-edge count: tripling
+    # N (and E, and the expected fired count) may not cost anywhere near
+    # the 9x an [N, N] build would
+    small = _window_build_seconds(n, k, beta, rate)
+    big = _window_build_seconds(3 * n, k, beta, rate)
+    ratio = big["seconds_per_window"] / small["seconds_per_window"]
+    assert ratio < 4.5, \
+        f"window build scaled {ratio:.1f}x for 3x N (O(N^2) would be 9x)"
+
+    p = int(s.posterior().mean.shape[-1])
+    roof = gossip_window_roofline(
+        n, p,
+        n_participating=int(win.participating().sum()),
+        n_merging=int(win.active.sum()),
+        n_event_edges=win.n_events,
+        n_padded_edges=win.e_max,
+    )
+    return {
+        "n_agents": n, "ws_k": k, "ws_beta": beta, "rate": rate,
+        "e_max": e_max, "p": p,
+        "n_window_events": win.n_events,
+        "n_merging": int(win.active.sum()),
+        "build_seconds": build_s,
+        "compile_seconds": compile_s,
+        "round_seconds_warm": warm_s,
+        "evaluate_seconds": evaluate_s,
+        "save_load_seconds": save_load_s,
+        "loss": warm[-1]["loss"],
+        "avg_acc": tel["avg_acc"],
+        "n_traces": s.engine.n_traces,
+        "no_dense_square_on_device": True,
+        "checkpoint_bitwise": True,
+        "window_build": {"small": small, "big": big,
+                         "ratio_for_3x_n": ratio},
+        "wire_equivalence": _engine_wire_equivalence(),
+        "roofline": roof,
+    }
+
+
 def run(json_out: str | None = DEFAULT_JSON, full: bool = False) -> dict:
     equiv = _all_active_equivalence()
     print(f"gossip_equivalence,0.0,"
@@ -611,6 +812,13 @@ def run(json_out: str | None = DEFAULT_JSON, full: bool = False) -> dict:
               f"{rec['roofline']['ici_bytes']['window_ppermute']:.0f};"
               f"bitwise_masked_eq_ppermute=1")
     sparse = sparse_scale_sweep(quick=not full, iters=5 if full else 3)
+    engine_sparse = engine_sparse_smoke(full=full)
+    print(f"gossip_engine_sparse[n={engine_sparse['n_agents']}],"
+          f"{engine_sparse['round_seconds_warm'] * 1e6:.0f},"
+          f"events={engine_sparse['n_window_events']};"
+          f"traces={engine_sparse['n_traces']};"
+          f"build_ratio_3x={engine_sparse['window_build']['ratio_for_3x_n']:.2f};"
+          f"no_dense=1")
     doc = {
         "benchmark": "gossip_event_windows",
         "backend": jax.default_backend(),
@@ -622,6 +830,7 @@ def run(json_out: str | None = DEFAULT_JSON, full: bool = False) -> dict:
         "shard_sweep": shard,
         "wire_sweep": wire,
         "sparse_scale": sparse,
+        "engine_sparse": engine_sparse,
     }
     if json_out:
         with open(json_out, "w") as f:

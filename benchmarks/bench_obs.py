@@ -41,6 +41,8 @@ DEFAULT_TRACE = "BENCH_obs_trace.jsonl"
 MAX_DISABLED_SPAN_US = 5.0
 
 _EXPORTER_GOLDEN = (
+    '# TYPE gossip_quorum counter\n'
+    'gossip_quorum_total{graph="ws \\"k=6\\"\\nbeta=0.1"} 2\n'
     '# TYPE serve_latency_us histogram\n'
     'serve_latency_us_bucket{mc="1",le="10"} 0\n'
     'serve_latency_us_bucket{mc="1",le="100"} 1\n'
@@ -59,6 +61,8 @@ _EXPORTER_GOLDEN = (
     '# HELP session_rounds training rounds completed\n'
     '# TYPE session_rounds counter\n'
     'session_rounds_total 3\n'
+    '# TYPE build_flags_info gauge\n'
+    'build_flags_info{value="x=\\"1\\"\\\\y"} 1\n'
     '# TYPE engine_name_info gauge\n'
     'engine_name_info{value="gossip"} 1\n'
 )
@@ -210,6 +214,10 @@ def _exporter_golden() -> dict:
     h.observe(250.0, mc="8")
     h.observe(40.0, mc="1")
     reg.info("engine.name", "gossip")
+    # exercise every escape the exposition format requires in label values:
+    # double-quote, newline (counter label) and backslash (info value)
+    reg.counter("gossip.quorum").inc(2, graph='ws "k=6"\nbeta=0.1')
+    reg.info("build.flags", 'x="1"\\y')
     text = reg.to_prometheus()
     assert text == _EXPORTER_GOLDEN, (
         "exporter output drifted from the golden:\n"

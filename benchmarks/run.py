@@ -30,7 +30,12 @@ Subcommands:
             shard sweep asserts consensus_ppermute_window bit-identity per
             shard count — run under
             XLA_FLAGS=--xla_force_host_platform_device_count=8 to cover
-            S>1); emits BENCH_gossip.json
+            S>1), plus the edge-native sparse tier: a N=1e4
+            Watts-Strogatz Poisson session end to end on
+            consensus_impl="segments" (round/evaluate/save/load, jaxpr
+            walked for the no-[N,N] contract, window-build host time
+            asserted O(fired) — not O(N^2) — across N=1e4 vs 3e4);
+            emits BENCH_gossip.json
   run.py chaos-smoke [--json-out F]              fault-tolerance chaos
             harness: combined crash/recover churn + link drops + delivery
             latency + NaN/Inf/huge payload corruption under
@@ -156,7 +161,8 @@ def main(argv=None) -> None:
         default="figures",
         help="figures (default): paper figures; bench: consensus perf "
         "sweep; api-smoke: declarative-API smoke; gossip-smoke: async "
-        "gossip runtime smoke (all-active equivalence + Poisson run); "
+        "gossip runtime smoke (all-active equivalence + Poisson run + "
+        "edge-native N=1e4 segments session); "
         "chaos-smoke: fault-tolerance chaos harness (churn + corruption "
         "under quarantine); serve-smoke: posterior serving tier (snapshot "
         "halving + trace pinning + latency/QPS sweeps); obs-smoke: "

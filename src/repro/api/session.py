@@ -64,10 +64,15 @@ def build_session(spec: ExperimentSpec) -> "Session":
             hidden=spec.inference.hidden,
             depth=spec.inference.depth,
         )
-        if spec.topology.kind == "gossip":
+        if spec.topology.kind == "gossip" or (
+            spec.topology.kind == "sparse"
+            and spec.topology.clock is not None
+        ):
             # a gossip topology IS an execution model: one event window per
             # round on the GossipEngine (validate() already rejected other
-            # explicit engine choices)
+            # explicit engine choices).  A sparse topology with a clock is
+            # the edge-native form of the same thing — SparseWindow streams
+            # executed through consensus_flat_segments.
             engine = GossipEngine(spec, model, n_agents)
         elif spec.run.engine == "launch":
             engine = LaunchEngine(spec, model, n_agents)
@@ -190,8 +195,15 @@ class Session:
         self.key, k_batch, k_round = jax.random.split(self.key, 3)
         with _span(self._obs, "session.batches", round=r):
             batches = self.data.sampler(k_batch, r)
+        # engines that declare wants_host_w take the schedule value VERBATIM
+        # (the GossipEngine: host float64 w_eff for the exact active-mask /
+        # f64 schedule-identity checks, or a SparseWindow object on the
+        # edge-native path — jnp.asarray would round to f32 / reject it);
+        # they cast to the device themselves, after the host-side work
+        w_arg = (W if getattr(self.engine, "wants_host_w", False)
+                 else jnp.asarray(W))
         self.state, losses = self.engine.run_round(
-            self.state, batches, jnp.asarray(W), k_round
+            self.state, batches, w_arg, k_round
         )
         self.round_idx = r + 1
         losses = np.asarray(losses)

@@ -86,6 +86,16 @@ class TopologySpec:
       ``SPARSE_DENSE_GUARD`` agents — above it, drive the edge-native
       runtime directly (``SparseGraph.edge_arrays()`` +
       ``core.flat.consensus_flat_segments``).
+
+      An optional ``clock`` dict (``repro.gossip.clocks.build_sparse_clock``
+      kinds: ``poisson | all_edges | failure_injected``, plus a top-level
+      ``"faults"`` entry) turns the sparse topology into the EDGE-NATIVE
+      gossip runtime: ``w_schedule()`` yields the clock's ``SparseWindow``
+      stream (fired [E_w] edge arrays + self-weights + the exact active
+      mask — never a dense W) and the ``GossipEngine`` executes each window
+      through ``core.flat.consensus_flat_segments``
+      (``InferenceSpec.consensus_impl="segments"``, the ``"auto"`` choice
+      for this shape) — the only gossip path that runs above the guard.
     """
 
     kind: str = "complete"
@@ -93,7 +103,7 @@ class TopologySpec:
     w: Any = None
     schedule: Any = None
     agents: int | None = None  # only needed for kind="callable"
-    clock: dict | None = None  # only for kind="gossip"
+    clock: dict | None = None  # kind="gossip" | kind="sparse" (edge-native)
 
     # -- conveniences --------------------------------------------------------
 
@@ -129,12 +139,20 @@ class TopologySpec:
         return cls(kind="callable", schedule=fn, agents=n_agents)
 
     @classmethod
-    def sparse(cls, generator: str, **params) -> "TopologySpec":
+    def sparse(
+        cls, generator: str, clock: dict | None = None, **params
+    ) -> "TopologySpec":
         """Edge-native CSR topology (``kind="sparse"``): ``generator`` names
         a ``graphs.SPARSE_GENERATORS`` builder, ``params`` are its kwargs —
         e.g. ``TopologySpec.sparse("watts_strogatz", n=10_000, k=6,
-        beta=0.1, seed=0)``."""
-        return cls(kind="sparse", params={"generator": generator, **params})
+        beta=0.1, seed=0)``.  Pass ``clock`` (a ``build_sparse_clock`` doc,
+        e.g. ``{"kind": "poisson", "rate": 1.0}``) to gossip on the graph
+        with edge-native event windows."""
+        return cls(
+            kind="sparse",
+            params={"generator": generator, **params},
+            clock=dict(clock) if clock else None,
+        )
 
     @classmethod
     def gossip(
@@ -211,7 +229,12 @@ class TopologySpec:
             raise ValueError(f"gossip base={base!r} params mismatch: {e}") from e
 
     def gossip_clock(self):
-        """kind="gossip": build the activation clock from the spec dicts.
+        """kind="gossip" | kind="sparse"+clock: build the activation clock.
+
+        kind="gossip" builds a dense EventWindow clock over ``base_w()``
+        (``build_clock``); kind="sparse" with a ``clock`` dict builds an
+        edge-native ``SparseClock`` over the CSR graph
+        (``build_sparse_clock`` — windows are ``SparseWindow`` objects).
 
         Memoized on the (frozen) spec: construction eagerly validates every
         distinct trace window, so ``validate()`` and ``w_schedule()`` must
@@ -219,6 +242,17 @@ class TopologySpec:
         cached = getattr(self, "_clock_cache", None)
         if cached is not None:
             return cached
+        if self.kind == "sparse":
+            if self.clock is None:
+                raise ValueError(
+                    "this sparse topology has no clock dict; gossip_clock() "
+                    "needs one (e.g. {'kind': 'poisson', 'rate': 1.0})"
+                )
+            from repro.gossip.clocks import build_sparse_clock
+
+            clock = build_sparse_clock(self.clock, self.sparse_graph())
+            object.__setattr__(self, "_clock_cache", clock)
+            return clock
         from repro.gossip.clocks import build_clock
 
         if self.clock is None:
@@ -304,6 +338,12 @@ class TopologySpec:
         if self.kind == "gossip":
             clock = self.gossip_clock()
             return lambda r: clock.window(r).w_eff
+        if self.kind == "sparse" and self.clock is not None:
+            # edge-native stream: the schedule yields the SparseWindow
+            # OBJECTS themselves (the GossipEngine consumes them verbatim —
+            # ``wants_host_w``); no dense W exists on this path
+            clock = self.gossip_clock()
+            return lambda r: clock.window(r)
         mats = self._static_list()
         return lambda r: mats[r % len(mats)]
 
@@ -339,6 +379,8 @@ class TopologySpec:
         if self.kind == "sparse":
             # O(E) throughout: generator + CSR validation, never a dense W
             self.sparse_graph().validate(require_connected=True)
+            if self.clock is not None:
+                self.gossip_clock().validate()
             return
         if self.kind == "callable":
             W0 = np.asarray(self.schedule(0), np.float64)
@@ -449,7 +491,7 @@ class InferenceSpec:
     kl_scale: float = 1e-3
     n_mc_samples: int = 1
     consensus: str = "gaussian"  # gaussian | mean_only | none
-    consensus_impl: str = "auto"  # auto | masked | ppermute (gossip runtime)
+    consensus_impl: str = "auto"  # auto | masked | ppermute | segments (gossip)
     consensus_shards: int | None = None  # ppermute only; None = auto
     wire_dtype: str = "f32"  # f32 | bf16 | f16: consensus exchange precision
     history_dtype: str | None = None  # delayed gossip ring residency (None=f32)
@@ -463,10 +505,10 @@ class InferenceSpec:
             raise ValueError(f"unknown optimizer {self.optimizer!r}")
         if self.consensus not in ("gaussian", "mean_only", "none"):
             raise ValueError(f"unknown consensus mode {self.consensus!r}")
-        if self.consensus_impl not in ("auto", "masked", "ppermute"):
+        if self.consensus_impl not in ("auto", "masked", "ppermute", "segments"):
             raise ValueError(
                 f"unknown consensus_impl {self.consensus_impl!r}; known: "
-                "auto | masked | ppermute"
+                "auto | masked | ppermute | segments"
             )
         if self.wire_dtype not in ("f32", "bf16", "f16"):
             raise ValueError(
@@ -637,7 +679,12 @@ class ExperimentSpec:
             raise ValueError("dataset='linreg' requires method='conjugate_linreg'")
         if self.inference.method == "conjugate_linreg" and self.run.engine == "launch":
             raise ValueError("the launch engine backs Bayes-by-Backprop inference only")
-        if self.topology.kind == "gossip":
+        # "gossiping" = the GossipEngine drives the run: a dense gossip
+        # topology, or a sparse topology with an edge-native clock attached
+        gossiping = (self.topology.kind == "gossip"
+                     or (self.topology.kind == "sparse"
+                         and self.topology.clock is not None))
+        if gossiping:
             if self.run.engine == "launch":
                 raise ValueError(
                     "a gossip topology runs on the GossipEngine (engine="
@@ -651,7 +698,8 @@ class ExperimentSpec:
         elif self.run.engine == "gossip":
             raise ValueError(
                 "engine='gossip' requires a TopologySpec(kind='gossip') "
-                "(the event windows come from its activation clock)"
+                "or kind='sparse' with a clock "
+                "(the event windows come from the activation clock)"
             )
         if (self.inference.history_dtype is not None
                 and self.topology.kind != "gossip"):
@@ -661,25 +709,40 @@ class ExperimentSpec:
                 "with a delayed clock (it would be silently ignored "
                 "otherwise)"
             )
-        if (self.inference.fault_policy != "strict"
-                and self.topology.kind != "gossip"):
+        if self.inference.fault_policy != "strict" and not gossiping:
             raise ValueError(
                 "fault_policy='quarantine' guards the gossip consensus "
                 "exchange and requires a TopologySpec(kind='gossip') (the "
                 "synchronous engines have no exchange boundary to validate)"
             )
         if self.inference.consensus_impl != "auto":
-            if self.topology.kind != "gossip":
+            if not gossiping:
                 raise ValueError(
                     "consensus_impl selects the gossip window execution and "
-                    "requires a TopologySpec(kind='gossip'); the synchronous "
-                    "engines dispatch via core.posterior.consensus_all_agents"
+                    "requires a TopologySpec(kind='gossip') or kind='sparse' "
+                    "with a clock; the synchronous engines dispatch via "
+                    "core.posterior.consensus_all_agents"
                 )
             if (self.inference.consensus_impl == "ppermute"
                     and self.inference.consensus != "gaussian"):
                 raise ValueError(
                     "consensus_impl='ppermute' shards the gaussian eq.-(6) "
                     "window; mean_only/none consensus run the dense path"
+                )
+            if (self.inference.consensus_impl == "segments"
+                    and self.topology.kind != "sparse"):
+                raise ValueError(
+                    "consensus_impl='segments' executes edge-native "
+                    "SparseWindows and requires a TopologySpec(kind="
+                    "'sparse') with a clock (dense gossip clocks emit "
+                    "[N, N] EventWindows — use 'masked' or 'ppermute')"
+                )
+            if (self.inference.consensus_impl == "segments"
+                    and self.inference.consensus == "mean_only"):
+                raise ValueError(
+                    "consensus_impl='segments' implements gaussian/none "
+                    "consensus; mean_only (the FedAvg baseline) runs on "
+                    "the dense masked path"
                 )
         self.topology.validate()
 

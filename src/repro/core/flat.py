@@ -1068,6 +1068,83 @@ def consensus_flat_delayed_quarantined(
     )
 
 
+def consensus_flat_segments_quarantined(
+    posts: FlatPosterior,
+    dst: jax.Array,
+    src: jax.Array,
+    weights: jax.Array,
+    self_weight: jax.Array,
+    *,
+    active: jax.Array,
+    mean_src: jax.Array | None = None,
+    rho_src: jax.Array | None = None,
+    block: int | None = None,
+    wire_dtype=None,
+    bound: float = QUARANTINE_BOUND,
+) -> tuple[FlatPosterior, jax.Array]:
+    """Quarantine-guarded ``consensus_flat_segments`` for edge-native event
+    windows (``gossip.clocks.SparseWindow``): validate every FIRED edge's
+    wire payload, drop invalid contributions (their weight moves to the
+    dst's self term), keep agents with garbage resident state out of the
+    merge.  Returns ``(posterior, valid_edge [E] bool)``.
+
+    ``dst``/``src``/``weights`` are the window's fired NON-SELF edges
+    (zero-weight pad slots allowed) and ``self_weight`` the per-agent
+    conserve-rule self term; the guard adjusts both in-graph and then
+    delegates to ``consensus_flat_segments`` over the same
+    fired-then-self concatenation the engine's unguarded path builds — so
+    with zero faults (all payloads valid) every argument is bitwise the
+    unguarded call's and the output is BITWISE identical to it, the same
+    equivalence-ladder rung the dense quarantined wrappers pin.
+
+    ``mean_src``/``rho_src`` are the statistics agents actually TRANSMIT
+    (the corruption-injection hook; default: the resident ``posts``).
+    Mirroring ``consensus_flat_masked_quarantined``: an invalid
+    transmission is dropped from every receiving row while the sender's
+    own self term falls back to its TRUE resident statistics
+    (``_sanitized_sources``); an agent whose RESIDENT state is invalid
+    passes through unchanged.
+    """
+    wire_dtype = canonical_wire_dtype(wire_dtype)
+    mean_src = posts.mean if mean_src is None else mean_src
+    rho_src = posts.rho if rho_src is None else rho_src
+    valid_src = payload_validity(
+        mean_src, rho_src, wire_dtype=wire_dtype, bound=bound, mode="xla"
+    )
+    valid_self = payload_validity(
+        posts.mean, posts.rho, wire_dtype=wire_dtype, bound=bound, mode="xla"
+    )
+    mean_x, rho_x = _sanitized_sources(
+        posts, mean_src, rho_src, valid_src, valid_self
+    )
+    n = posts.mean.shape[0]
+    valid_e = valid_src[src]  # [E] fired-edge wire validity
+    w_e = weights.astype(COMPUTE_DTYPE)
+    w_e_g = jnp.where(valid_e, w_e, 0.0)
+    # dropped in-edge mass lands on the dst's self term — rows stay
+    # row-stochastic, the segment form of quarantine_w's diagonal add
+    drop = jnp.zeros((n,), COMPUTE_DTYPE).at[dst].add(w_e - w_e_g)
+    w_self_g = self_weight.astype(COMPUTE_DTYPE) + drop
+    ar = jnp.arange(n, dtype=dst.dtype)
+    act_g = (active > 0) & valid_self
+    out = consensus_flat_segments(
+        FlatPosterior(mean=mean_x, rho=rho_x, layout=posts.layout),
+        jnp.concatenate([dst, ar]),
+        jnp.concatenate([src, ar]),
+        jnp.concatenate([w_e_g, w_self_g]),
+        active=act_g, block=block, wire_dtype=wire_dtype,
+    )
+    v_self = valid_self[:, None]
+    return (
+        FlatPosterior(
+            mean=jnp.where(v_self, out.mean, posts.mean),
+            rho=jnp.where(v_self, out.rho, posts.rho),
+            layout=posts.layout,
+        ),
+        valid_e,
+    )
+
+
 def consensus_flat_sparse(
     posts: FlatPosterior,
     neighbors: jax.Array,

@@ -39,9 +39,22 @@ W-tilde construction, two rules:
   ``time_varying_star_schedule`` whose base rows need not sum to 1):
   ``w_eff[i,i] = 1 - sum_{j fired} W[i,j]``.
 
-Rows with no event are EXACTLY ``e_i`` (diag 1.0) either way — the engine
-derives the activity mask as ``diag(w_eff) < 1`` and the masked consensus
-kernel passes those rows through without touching them.
+Rows with no event are EXACTLY ``e_i`` (diag 1.0) either way.  The
+window's host-computed ``active`` mask is the AUTHORITATIVE activity
+signal: the engine threads it into the jitted window as an explicit
+argument (re-deriving it from the float32-cast diagonal would silently
+drop any fired in-edge whose weight is below f32 resolution — ``1.0 - w``
+rounds back to exactly 1.0 for w < 2^-24) and the masked consensus kernel
+passes inactive rows through without touching them.
+
+Population scale (``SparseWindow`` / ``SparseClock``): above
+``SPARSE_DENSE_GUARD`` agents no ``[N, N]`` matrix may exist, so the
+edge-native clock family samples fired edges directly from a CSR
+``SparseGraph``'s non-self edge list and emits ``SparseWindow``s — fired
+``[E_w]`` dst/src/weight arrays plus the per-agent conserve-rule
+self-weight vector and the explicit ``active`` mask, built in O(fired + N)
+host work per window.  The dense ``w_eff`` survives only as a derived view
+below the guard (the equivalence ladder against the dense masked engine).
 
 Determinism contract: ``window(r)`` is a pure function of ``(seed, r)``
 (fresh ``np.random.default_rng([seed, r])`` per window), so a resumed
@@ -98,6 +111,86 @@ class EventWindow:
         if self.n_events:
             part[self.edges[: self.n_events, 1]] = True
         return part
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseWindow:
+    """One edge-native event window: no ``[N, N]`` anywhere.
+
+    The population-scale counterpart of ``EventWindow``: the window is the
+    fired edge LIST itself — ``[E_max]`` dst/src/weight arrays (zero-padded
+    to the clock's static capacity so every window shares one jit trace) —
+    plus the per-agent ``"conserve"``-rule self-weight vector and the
+    EXPLICIT host-exact ``active`` mask.  The engine folds ``self_weight``
+    into the segment-sum consensus (``core.flat.consensus_flat_segments``)
+    as N additional self edges; an all-fired window's self-weights equal
+    the base diagonal EXACTLY (bitwise), mirroring ``EventWindow``'s
+    all-fired ``w_eff == W`` contract.
+
+    ``active`` is authoritative: inactive rows carry ``self_weight`` 1.0
+    and zero fired in-edges, but the engine never re-derives activity from
+    those weights (the f32 diagonal trick loses sub-2^-24 in-weights).
+
+    ``w_eff`` exists only as a derived dense view BELOW the spec's
+    ``SPARSE_DENSE_GUARD`` — the equivalence-ladder bridge that lets the
+    dense masked engine execute the same window for comparison.
+    """
+
+    index: int
+    dst: np.ndarray  # [E_max] int32 fired-edge destinations, zero-padded
+    src: np.ndarray  # [E_max] int32 fired-edge sources, zero-padded
+    weights: np.ndarray  # [E_max] float32 base mixing weights, 0.0 on pads
+    self_weight: np.ndarray  # [N] float64 conserve diagonal (1.0 on idle rows)
+    active: np.ndarray  # [N] bool, host-exact
+    n_agents: int
+    n_events: int  # real events before padding
+
+    @property
+    def e_max(self) -> int:
+        return int(self.dst.shape[0])
+
+    @property
+    def active_fraction(self) -> float:
+        return float(self.active.mean())
+
+    @property
+    def max_lag(self) -> int:
+        """Sparse clocks are instant-delivery (no latency wrapper yet)."""
+        return 0
+
+    def participating(self) -> np.ndarray:
+        """[N] bool: agents touched by any fired event (as dst or src)."""
+        part = self.active.copy()
+        if self.n_events:
+            part[self.src[: self.n_events]] = True
+        return part
+
+    @property
+    def w_eff(self) -> np.ndarray:
+        """Derived dense [N, N] view (memoized) — the equivalence-ladder
+        bridge to the dense masked engine.  Refuses above the spec's
+        ``SPARSE_DENSE_GUARD``: past it this window must execute
+        edge-native (``consensus_impl="segments"``)."""
+        cached = getattr(self, "_w_eff_cache", None)
+        if cached is not None:
+            return cached
+        from repro.api.spec import SPARSE_DENSE_GUARD
+
+        n = self.n_agents
+        if n > SPARSE_DENSE_GUARD:
+            raise ValueError(
+                f"SparseWindow has N={n} agents, above the dense-"
+                f"materialization guard ({SPARSE_DENSE_GUARD}): refusing to "
+                "derive [N, N] w_eff; execute the window edge-native "
+                "(consensus_impl='segments')"
+            )
+        w = np.zeros((n, n), np.float64)
+        idx = np.arange(n)
+        w[idx, idx] = self.self_weight
+        e = self.n_events
+        w[self.dst[:e], self.src[:e]] = self.weights[:e].astype(np.float64)
+        object.__setattr__(self, "_w_eff_cache", w)
+        return w
 
 
 def window_from_events(
@@ -646,6 +739,287 @@ class DelayedClock(GossipClock):
 
     def union_support(self) -> np.ndarray:
         return self.inner.union_support()
+
+
+# ---------------------------------------------------------------------------
+# edge-native clocks (population scale: SparseGraph -> SparseWindow streams)
+# ---------------------------------------------------------------------------
+
+
+class SparseClock:
+    """Base class: a deterministic stream of edge-native ``SparseWindow``s.
+
+    The sparse analogue of ``GossipClock``, built over a CSR
+    ``SparseGraph`` (arriving pre-validated from the spec layer) instead
+    of a dense base W.  Subclasses implement ``_fired(r, rng) -> [K]
+    int64`` — indices into the graph's NON-SELF directed edge list, unique
+    within a window — and the shared machinery assembles the window in
+    O(fired + N) host work: the conserve-rule self-weights come from two
+    ``np.bincount`` passes over the fired edges against per-graph
+    precomputed off-diagonal row sums, never from a per-row scan (let
+    alone an ``np.eye``).  ``rule="conserve"`` only: an all-fired row's
+    self-weight is EXACTLY the base diagonal (bitwise), a partial row adds
+    its idle in-edge mass onto self, an idle row is exactly ``e_i``
+    (self-weight 1.0, active False).
+
+    Determinism contract: identical to ``GossipClock`` — ``window(r)`` is
+    a pure function of ``(seed, r)`` via ``default_rng([seed, r])``, with
+    the same one-slot memo, fault attachment (vectorized edge-list crash
+    filtering, ``gossip.faults.edge_keep_mask``) and Assumption-1
+    validation (O(E) iterative strong connectivity on the CSR arrays).
+    """
+
+    rule = "conserve"
+
+    def __init__(self, graph: graphs.SparseGraph, seed: int = 0):
+        self.graph = graph
+        self.n_agents = graph.n_agents
+        self.seed = int(seed)
+        self.faults = None
+        self.max_delay = 0
+        dst, src, w32 = graph.edge_arrays()
+        ns = dst != src
+        # fired-edge tables (non-self, edge_arrays order — CSR row-major)
+        self._ns_dst = dst[ns]
+        self._ns_src = src[ns]
+        self._ns_w32 = w32[ns]
+        # f64 twins for exact conserve-rule self-weight arithmetic (the CSR
+        # weights array shares edge_arrays' ordering)
+        w64 = np.asarray(graph.weights, np.float64)
+        self._ns_w64 = w64[ns]
+        n = self.n_agents
+        diag = np.zeros(n, np.float64)
+        diag[dst[~ns]] = w64[~ns]
+        self._w_diag = diag
+        self._offdiag_sum = np.bincount(
+            self._ns_dst, weights=self._ns_w64, minlength=n
+        )
+        self._deg_offdiag = np.bincount(self._ns_dst, minlength=n)
+        #: non-self directed edge count — the fired-index space of _fired
+        self.n_edges = int(self._ns_dst.shape[0])
+        self.e_max = max(self.n_edges, 1)
+
+    # -- subclass hook -------------------------------------------------------
+
+    def _fired(self, r: int, rng: np.random.Generator) -> np.ndarray:
+        """[K] int64 unique indices into the non-self edge list."""
+        raise NotImplementedError
+
+    # -- shared machinery ----------------------------------------------------
+
+    def window(self, r: int) -> SparseWindow:
+        cached = getattr(self, "_last_window", None)
+        if cached is not None and cached[0] == int(r):
+            return cached[1]
+        win = self._build_window(int(r))
+        self._last_window = (int(r), win)
+        return win
+
+    def _build_window(self, r: int) -> SparseWindow:
+        rng = np.random.default_rng([self.seed, r])
+        fired = np.asarray(self._fired(r, rng), np.int64)
+        f_dst = self._ns_dst[fired]
+        f_src = self._ns_src[fired]
+        if self.faults is not None:
+            from repro.gossip.faults import edge_keep_mask
+
+            keep = edge_keep_mask(self.faults, r, f_dst, f_src)
+            fired, f_dst, f_src = fired[keep], f_dst[keep], f_src[keep]
+        n_ev = int(fired.shape[0])
+        if n_ev > self.e_max:
+            raise ValueError(
+                f"window {r} fired {n_ev} edges, above the clock's static "
+                f"e_max={self.e_max}"
+            )
+        n = self.n_agents
+        fired_count = np.bincount(f_dst, minlength=n)
+        fired_sum = np.bincount(
+            f_dst, weights=self._ns_w64[fired], minlength=n
+        )
+        active = fired_count > 0
+        # all-fired rows keep EXACTLY the base diagonal (the bitwise
+        # all-edges contract); partial rows add idle in-edge mass onto self
+        w_self = np.where(
+            fired_count == self._deg_offdiag,
+            self._w_diag,
+            self._w_diag + (self._offdiag_sum - fired_sum),
+        )
+        w_self = np.where(active, w_self, 1.0)
+        if np.any(w_self[active] <= 0.0):
+            bad = int(np.nonzero(active & (w_self <= 0.0))[0][0])
+            raise ValueError(
+                f"window row {bad}: conserve self-weight "
+                f"{w_self[bad]:.6g} <= 0 (base graph is not row-stochastic?)"
+            )
+        cap = self.e_max
+        dst_p = np.zeros(cap, np.int32)
+        src_p = np.zeros(cap, np.int32)
+        wts_p = np.zeros(cap, np.float32)
+        dst_p[:n_ev] = f_dst
+        src_p[:n_ev] = f_src
+        wts_p[:n_ev] = self._ns_w32[fired]
+        return SparseWindow(
+            index=r, dst=dst_p, src=src_p, weights=wts_p,
+            self_weight=w_self, active=active, n_agents=n, n_events=n_ev,
+        )
+
+    def windows(self, n: int) -> list[SparseWindow]:
+        return [self.window(r) for r in range(n)]
+
+    # -- agent churn (gossip.faults) -----------------------------------------
+
+    def attach_faults(self, model) -> None:
+        """Attach a ``FaultModel``: fired edges touching a crashed agent are
+        filtered (vectorized, on the edge list) before the self-weight
+        build, so the conserve rule moves their mass onto self exactly as
+        the dense clocks do."""
+        self.faults = model
+        self._last_window = None
+
+    def crashed(self, r: int) -> np.ndarray:
+        if self.faults is None:
+            return np.zeros((self.n_agents,), bool)
+        return self.faults.crashed(r)
+
+    def validate(self) -> None:
+        """Assumption 1 on the activation union — the base graph's own
+        support, checked in O(E) on the CSR arrays (never a dense union
+        matrix)."""
+        if not self.graph.strongly_connected():
+            raise ValueError(
+                "sparse gossip base graph must be strongly connected "
+                "(Assumption 1 on the activation union)"
+            )
+
+
+class SparsePoissonClock(SparseClock):
+    """Independent Poisson clock per non-self directed edge over a
+    ``SparseGraph`` — ``PoissonClock`` without the dense base.  Sampling is
+    the same superposition thinning (``thinned_poisson_indices``): O(fired)
+    per window, a pure function of ``(seed, round)``.  ``e_max`` optionally
+    declares the per-window unique-edge cap, shrinking the engine's static
+    ``[E_max]`` buffers; an overflowing realization raises rather than
+    truncating."""
+
+    def __init__(
+        self,
+        graph: graphs.SparseGraph,
+        rate: float = 1.0,
+        window_len: float = 1.0,
+        seed: int = 0,
+        e_max: int | None = None,
+    ):
+        super().__init__(graph, seed)
+        if rate <= 0 or window_len <= 0:
+            raise ValueError("rate and window_len must be positive")
+        self.rate = float(rate)
+        self.window_len = float(window_len)
+        if e_max is not None:
+            if not 1 <= int(e_max) <= self.n_edges:
+                raise ValueError(
+                    f"e_max must be in [1, {self.n_edges}] (the non-self "
+                    f"directed edge count), got {e_max}"
+                )
+            self.e_max = int(e_max)
+
+    def _fired(self, r, rng):
+        return thinned_poisson_indices(
+            rng, self.n_edges, self.rate * self.window_len, e_max=self.e_max
+        )
+
+
+class SparseAllEdgesClock(SparseClock):
+    """Every non-self edge fires every window — the sparse ladder anchor:
+    each window's self-weights equal the base diagonal bitwise, so the
+    segment-sum window reproduces the synchronous segment consensus over
+    ``SparseGraph.edge_arrays()`` exactly (same edge set, same weights)."""
+
+    def __init__(self, graph: graphs.SparseGraph, seed: int = 0):
+        super().__init__(graph, seed)
+        self._all = np.arange(self.n_edges, dtype=np.int64)
+
+    def _fired(self, r, rng):
+        del rng  # deterministic
+        return self._all
+
+
+class SparseFailureInjectedClock(SparseClock):
+    """Drop each of the inner sparse clock's fired edges i.i.d. with
+    probability ``drop_rate`` — ``FailureInjectedClock`` on edge lists.
+    The drop stream is salted with the same ``0xFA11ED`` word so drops
+    stay independent of the inner clock's firing draws."""
+
+    def __init__(self, inner: SparseClock, drop_rate: float, seed: int = 0):
+        if not 0.0 <= drop_rate < 1.0:
+            raise ValueError("drop_rate must be in [0, 1)")
+        super().__init__(inner.graph, seed)
+        self.inner = inner
+        self.drop_rate = float(drop_rate)
+        self.e_max = inner.e_max
+
+    def _fired(self, r, rng):
+        del rng  # salted stream, as in FailureInjectedClock
+        fired = np.asarray(
+            self.inner._fired(r, np.random.default_rng([self.inner.seed, r])),
+            np.int64,
+        )
+        drop_rng = np.random.default_rng([self.seed, 0xFA11ED, r])
+        return fired[drop_rng.random(fired.shape[0]) >= self.drop_rate]
+
+
+def build_sparse_clock(
+    doc: dict, graph: graphs.SparseGraph, _inner: bool = False
+) -> SparseClock:
+    """Build an edge-native clock from a plain dict (the
+    ``TopologySpec.clock`` form on ``kind="sparse"`` topologies).  Same
+    conventions as ``build_clock``: keys beyond the per-kind parameters
+    (``local_policy``) are ignored here, and a top-level ``"faults"`` key
+    attaches agent churn — rejected on inner docs for the same
+    silently-ignored reason.
+
+    kinds:
+      ``poisson``           rate, window_len, seed, e_max (optional cap)
+      ``all_edges``         every non-self edge every window (ladder anchor)
+      ``failure_injected``  inner=<sparse clock doc>, drop_rate, seed
+    """
+    if not isinstance(doc, dict) or "kind" not in doc:
+        raise ValueError("clock must be a dict with a 'kind' key")
+    if "faults" in doc and _inner:
+        raise ValueError(
+            "'faults' must sit on the OUTERMOST clock doc: an inner clock's "
+            "fault model would be silently ignored"
+        )
+    kind = doc["kind"]
+    if kind == "poisson":
+        clock: SparseClock = SparsePoissonClock(
+            graph,
+            rate=doc.get("rate", 1.0),
+            window_len=doc.get("window_len", 1.0),
+            seed=doc.get("seed", 0),
+            e_max=doc.get("e_max"),
+        )
+    elif kind == "all_edges":
+        clock = SparseAllEdgesClock(graph, seed=doc.get("seed", 0))
+    elif kind == "failure_injected":
+        if "inner" not in doc:
+            raise ValueError("clock kind='failure_injected' requires 'inner'")
+        clock = SparseFailureInjectedClock(
+            build_sparse_clock(doc["inner"], graph, _inner=True),
+            drop_rate=doc.get("drop_rate", 0.1),
+            seed=doc.get("seed", 0),
+        )
+    else:
+        raise ValueError(
+            f"unknown sparse clock kind {kind!r}; known: "
+            "poisson | all_edges | failure_injected"
+        )
+    if doc.get("faults") is not None:
+        from repro.gossip import faults as _faults
+
+        clock.attach_faults(
+            _faults.build_faults(doc["faults"], clock.n_agents)
+        )
+    return clock
 
 
 # ---------------------------------------------------------------------------

@@ -8,11 +8,14 @@ active-edge consensus (``core.flat.consensus_flat_masked`` — Pallas
 ``Engine`` protocol is unchanged — the Session hands the engine the
 window's effective W-tilde exactly as it hands the synchronous engines a
 scheduled W — so specs, checkpoints, and the round loop all work
-untouched.  The activity mask is recovered from W-tilde itself: an agent
-is active iff its row is not ``e_i`` (``diag(W) < 1``), which the clock
-construction guarantees exactly.
+untouched.  The activity mask is the clock's host-exact ``window.active``
+threaded into the jitted window as an explicit argument — it is NOT
+re-derived from the float32-cast W-tilde diagonal, which would silently
+drop any fired in-edge below f32 resolution (``1.0 - w`` rounds back to
+exactly 1.0 for ``w < 2^-24``, misclassifying an active agent as idle and
+skipping its merge — and, under ``local_policy="active"``, its training).
 
-Three window EXECUTIONS, all the same eq.-(6) math (the equivalence
+Four window EXECUTIONS, all the same eq.-(6) math (the equivalence
 ladder pinned by tests/test_gossip.py — synchronous == instant gossip ==
 sharded gossip, bitwise):
 
@@ -26,6 +29,16 @@ sharded gossip, bitwise):
   per-window permutation schedule derives from ``EventWindow.edges``, so
   the local phase still traces once and each distinct window support
   compiles one cached consensus program);
+* edge-native segments (``consensus_impl="segments"``, auto-chosen for
+  ``kind="sparse"`` topologies driven by a clock) — the window is a
+  ``gossip.clocks.SparseWindow`` (fired ``[E_w]`` dst/src/weight arrays +
+  the per-agent conserve-rule self-weight vector + the explicit host-exact
+  active mask; no ``[N, N]`` anywhere) executed through
+  ``core.flat.consensus_flat_segments`` with the self terms folded into
+  the segment-sum as N extra self-loop slots.  The only execution that
+  runs above ``SPARSE_DENSE_GUARD`` — Watts-Strogatz / Barabási-Albert
+  populations at N = 10^4+ gossip with O(E) host work and O(E·P) device
+  work per window;
 * delivery latency (a ``DelayedClock`` in the spec) — events merge the SRC
   POSTERIOR AS OF FIRE TIME from a bounded ``[K, N, P]`` posterior history
   ring buffer carried in ``GossipState`` (K = max_delay + 1; slot
@@ -88,10 +101,13 @@ from repro.core.flat import (
     consensus_flat_delayed_quarantined,
     consensus_flat_masked,
     consensus_flat_masked_quarantined,
+    consensus_flat_segments,
+    consensus_flat_segments_quarantined,
     make_flat_nll,
 )
 from repro.core.numerics import canonical_wire_dtype, wire_dtype_name
 from repro.core.simulated import init_network, network_local_steps
+from repro.gossip.clocks import SparseClock, SparseWindow
 
 PyTree = Any
 
@@ -163,6 +179,12 @@ class GossipEngine:
     # wake-on-event windows report NaN losses for sleeping agents;
     # Session.round aggregates NaN-safely for engines that set this
     loss_nan_is_sentinel = True
+    # the Session must hand run_round the w_schedule value VERBATIM (host
+    # float64 w_eff, or a SparseWindow object) — a jnp.asarray at the
+    # Session boundary would round to f32 and destroy both the exact
+    # active-mask lookup and the float64 schedule-identity check; the
+    # engine casts to the device itself, after the host-side work
+    wants_host_w = True
 
     def __init__(self, spec, model, n_agents: int):
         from repro.api.engines import build_optimizer, build_schedule
@@ -215,8 +237,46 @@ class GossipEngine:
                 '{"kind": "delayed", ...} or drop history_dtype)'
             )
         self.hist_dtype = canonical_wire_dtype(inf.history_dtype)
+        from repro.api.spec import SPARSE_DENSE_GUARD
+
         impl = inf.consensus_impl
-        self.consensus_impl = "masked" if impl == "auto" else impl
+        sparse_clock = isinstance(self.clock, SparseClock)
+        if impl == "auto":
+            impl = "segments" if sparse_clock else "masked"
+        self.consensus_impl = impl
+        if impl == "segments":
+            if not sparse_clock:
+                raise ValueError(
+                    "consensus_impl='segments' executes edge-native "
+                    "SparseWindows; this topology's clock emits dense "
+                    "EventWindows (use TopologySpec kind='sparse' with a "
+                    "clock doc, or consensus_impl='masked')"
+                )
+            if self.consensus_mode == "mean_only":
+                raise ValueError(
+                    "consensus_impl='segments' implements gaussian/none "
+                    "consensus; mean_only (the FedAvg baseline) runs on "
+                    "the dense masked path"
+                )
+        elif sparse_clock:
+            # dense view of a sparse clock: legal below the guard (the
+            # segments-vs-masked equivalence ladder trains on exactly this),
+            # eagerly rejected above it — SparseWindow.w_eff would raise on
+            # the first window anyway, but fail at build time with the fix
+            if self.consensus_impl == "ppermute":
+                raise ValueError(
+                    "consensus_impl='ppermute' shards dense EventWindows "
+                    "by their static edge schedule; a sparse clock emits "
+                    "edge-native SparseWindows (use 'segments', or "
+                    "'masked' below the dense guard)"
+                )
+            if n_agents > SPARSE_DENSE_GUARD:
+                raise ValueError(
+                    "consensus_impl='masked' materializes the dense "
+                    f"[N, N] window view; N={n_agents} is above "
+                    f"SPARSE_DENSE_GUARD={SPARSE_DENSE_GUARD} "
+                    "(use consensus_impl='segments')"
+                )
         self._mesh = None
         if self.consensus_impl == "ppermute":
             if self.max_delay > 0:
@@ -262,14 +322,19 @@ class GossipEngine:
         # window — spans/counters record at the dispatch boundary only
         self.obs = None
 
-        def local_phase(state: GossipState, batches, W, key, up=None):
+        def local_phase(state: GossipState, batches, active, key, up=None):
             """Shared pre-consensus window phase: per-agent local VI steps +
             the wake-on-event policy select + staleness bookkeeping inputs.
-            Identical (bitwise) across all three window executions."""
+            Identical (bitwise) across all four window executions.
+
+            ``active`` is the clock's HOST-EXACT [N] bool mask, threaded in
+            as a traced argument (``run_round._host_active``) — never
+            re-derived from the float32-cast W-tilde diagonal, where a
+            fired in-edge with weight < 2^-24 rounds the diagonal back to
+            exactly 1.0 and silently drops the agent's merge."""
             self.n_traces += 1  # trace-time side effect: retrace telemetry
             nll = make_flat_nll(nll_fn, state.posterior.layout)
-            # clock contract: inactive rows of W-tilde are EXACTLY e_i
-            active = jnp.diagonal(W) < 1.0
+            active = active > 0
             lr = lr_schedule(state.round)
             prior = state.posterior
             # the SHARED local phase (simulated.network_local_steps): the
@@ -317,9 +382,9 @@ class GossipEngine:
                 n_merges=state.n_merges + merged.astype(jnp.int32),
             )
 
-        def window_fn(state: GossipState, batches, W, key):
+        def window_fn(state: GossipState, batches, W, active, key):
             post, opt_state, step, active, losses = local_phase(
-                state, batches, W, key
+                state, batches, active, key
             )
             if consensus_mode == "gaussian" and merge_in_jit:
                 post = consensus_flat_masked(
@@ -335,10 +400,10 @@ class GossipEngine:
             return finish(state, post, opt_state, step, active), losses
 
         def window_fn_delayed(
-            state: GossipState, batches, W, key, edges, weights, lags
+            state: GossipState, batches, W, active, key, edges, weights, lags
         ):
             post, opt_state, step, active, losses = local_phase(
-                state, batches, W, key
+                state, batches, active, key
             )
             # record this window's post-local, PRE-merge posterior in its
             # ring slot FIRST: a lag-0 event then gathers the current value,
@@ -364,7 +429,7 @@ class GossipEngine:
             ), losses
 
         def window_fn_guarded(
-            state: GossipState, batches, W, key, up, corrupt,
+            state: GossipState, batches, W, active, key, up, corrupt,
             fill_mean, fill_rho,
         ):
             """Fault-aware instant window.  ``up`` gates local training
@@ -375,7 +440,7 @@ class GossipEngine:
             no-corruption inputs make every extra op a value-identity, so
             the zero-fault guarded trajectory is bitwise the strict one."""
             post, opt_state, step, active, losses = local_phase(
-                state, batches, W, key, up
+                state, batches, active, key, up
             )
             n_q = state.n_quarantined
             if consensus_mode == "gaussian" and merge_in_jit:
@@ -415,15 +480,15 @@ class GossipEngine:
             return dataclasses.replace(new_state, n_quarantined=n_q), losses
 
         def window_fn_delayed_guarded(
-            state: GossipState, batches, W, key, edges, weights, lags,
-            up, corrupt, fill_mean, fill_rho,
+            state: GossipState, batches, W, active, key, edges, weights,
+            lags, up, corrupt, fill_mean, fill_rho,
         ):
             """Fault-aware delayed window: corruption applies at DELIVERY
             time by source id (every event gathered FROM a corrupted agent
             this window reads garbage, whatever its fire time); the history
             ring always records the TRUE resident posterior."""
             post, opt_state, step, active, losses = local_phase(
-                state, batches, W, key, up
+                state, batches, active, key, up
             )
             slot = jnp.mod(state.round, hist_slots)
             hist_mean = jax.lax.dynamic_update_index_in_dim(
@@ -467,7 +532,82 @@ class GossipEngine:
                 n_quarantined=n_q,
             ), losses
 
-        if guarded:
+        def _self_loops(dst, src, w_e, w_self):
+            """Fold the conserve-rule self terms into the edge list as N
+            trailing self-loop slots — ``consensus_flat_segments``' contract
+            is that self-loops ride IN the [E] arrays."""
+            ar = jnp.arange(w_self.shape[0], dtype=dst.dtype)
+            return (jnp.concatenate([dst, ar]), jnp.concatenate([src, ar]),
+                    jnp.concatenate([w_e, w_self]))
+
+        def window_fn_segments(
+            state: GossipState, batches, dst, src, w_e, w_self, active, key
+        ):
+            """Edge-native window: [E_max] fired dst/src/weight arrays +
+            [N] self-weights + the host-exact active mask ride as traced
+            arguments (static shapes — one trace for the whole run); no
+            [N, N] is ever materialized, host or device."""
+            post, opt_state, step, active, losses = local_phase(
+                state, batches, active, key
+            )
+            if consensus_mode == "gaussian":
+                d_all, s_all, w_all = _self_loops(dst, src, w_e, w_self)
+                post = consensus_flat_segments(
+                    post, d_all, s_all, w_all,
+                    active=active, wire_dtype=wire_dtype,
+                )
+            return finish(state, post, opt_state, step, active), losses
+
+        def window_fn_segments_guarded(
+            state: GossipState, batches, dst, src, w_e, w_self, active,
+            key, up, corrupt, fill_mean, fill_rho,
+        ):
+            """Fault-aware edge-native window.  The clock already filtered
+            crashed agents' fired edges (``faults.edge_keep_mask``), so
+            ``up`` only gates local training; quarantine validates every
+            fired edge's wire payload and moves dropped in-edge mass to the
+            dst's self term.  All-up / no-corruption inputs reduce to the
+            unguarded call bitwise (the same equivalence-ladder rung the
+            dense guarded windows pin)."""
+            post, opt_state, step, active, losses = local_phase(
+                state, batches, active, key, up
+            )
+            n_q = state.n_quarantined
+            if consensus_mode == "gaussian":
+                c = corrupt[:, None]
+                mean_src = jnp.where(c, fill_mean[:, None], post.mean)
+                rho_src = jnp.where(c, fill_rho[:, None], post.rho)
+                if quarantine:
+                    post, valid_e = consensus_flat_segments_quarantined(
+                        post, dst, src, w_e, w_self, active=active,
+                        mean_src=mean_src, rho_src=rho_src,
+                        wire_dtype=wire_dtype,
+                    )
+                    # count only REAL dropped edges — [E_max] padding slots
+                    # carry zero weight and must not inflate the telemetry
+                    bad = ((~valid_e) & (w_e > 0.0)).astype(jnp.int32)
+                    n_q = n_q.at[dst].add(bad)
+                else:
+                    # strict: the wire is trusted verbatim — the corrupted
+                    # sources' garbage reaches every receiving agent
+                    d_all, s_all, w_all = _self_loops(dst, src, w_e, w_self)
+                    merged = consensus_flat_segments(
+                        dataclasses.replace(post, mean=mean_src, rho=rho_src),
+                        d_all, s_all, w_all,
+                        active=active, wire_dtype=wire_dtype,
+                    )
+                    act = active[:, None]
+                    post = dataclasses.replace(
+                        post,
+                        mean=jnp.where(act, merged.mean, post.mean),
+                        rho=jnp.where(act, merged.rho, post.rho),
+                    )
+            new_state = finish(state, post, opt_state, step, active)
+            return dataclasses.replace(new_state, n_quarantined=n_q), losses
+
+        if self.consensus_impl == "segments":
+            fn = window_fn_segments_guarded if guarded else window_fn_segments
+        elif guarded:
             fn = window_fn_delayed_guarded if self.hist_slots else window_fn_guarded
         else:
             fn = window_fn_delayed if self.hist_slots else window_fn
@@ -518,8 +658,13 @@ class GossipEngine:
         per-round ``W`` overrides cannot be used with these paths."""
         r = int(state.round)
         win = self.clock.window(r)
+        # compare in float64 — both sides' native precision.  An f32
+        # comparison would false-accept any foreign schedule that merely
+        # COLLIDES with the stream at f32 (e.g. weights differing by less
+        # than one f32 ulp) and then silently merge with the stream's
+        # event structure instead of the caller's.
         if not np.array_equal(
-            np.asarray(W, np.float32), win.w_eff.astype(np.float32)
+            np.asarray(W, np.float64), np.asarray(win.w_eff, np.float64)
         ):
             raise ValueError(
                 "delayed/sharded gossip windows come from the spec clock; "
@@ -547,22 +692,80 @@ class GossipEngine:
         return (jnp.asarray(up), jnp.asarray(corrupt),
                 jnp.asarray(fm), jnp.asarray(fr))
 
+    def _host_active(self, r: int, W, win=None):
+        """The HOST-EXACT [N] activity mask for window ``r`` (the headline
+        mask fix): when ``W`` is the spec clock's own w_eff (the Session
+        passes it verbatim — ``wants_host_w``), thread the clock's
+        ``window.active`` through; only a FOREIGN per-round W override (or
+        a direct ``run_round`` call with a device array) falls back to the
+        diagonal derivation — computed in float64, never on the f32 cast."""
+        w64 = np.asarray(W, np.float64)
+        if win is None and isinstance(W, np.ndarray) \
+                and W.dtype == np.float64:
+            # only consult the clock for host float64 W — what the Session
+            # hands over verbatim; device arrays are foreign by definition
+            win = self.clock.window(r)
+        if (win is not None and not isinstance(win, SparseWindow)
+                and np.array_equal(w64, np.asarray(win.w_eff, np.float64))):
+            return np.asarray(win.active)
+        return np.diagonal(w64) < 1.0
+
+    def _segments_round(self, state, batches, W, key, obs, r):
+        """Edge-native window execution: no [N, N] is built on the host or
+        traced on the device — the fired [E_max] arrays, [N] self-weights
+        and [N] active mask are the whole exchange structure."""
+        if not isinstance(W, SparseWindow):
+            raise ValueError(
+                "consensus_impl='segments' executes the spec clock's "
+                "SparseWindow stream; run_round received an array-like W "
+                "(per-round dense w_schedule overrides are unsupported — "
+                "the Session's w_schedule yields the windows verbatim)"
+            )
+        if int(W.index) != r:
+            raise ValueError(
+                f"SparseWindow index {int(W.index)} does not match the "
+                f"engine round {r} (windows are pure functions of "
+                "(seed, round); the stream must be consumed in order)"
+            )
+        with _span(obs, "gossip.window_build", round=r):
+            extra = self._fault_arrays(r) if self._guarded else ()
+            args = (
+                jnp.asarray(W.dst), jnp.asarray(W.src),
+                jnp.asarray(W.weights),
+                jnp.asarray(W.self_weight, dtype=jnp.float32),
+                jnp.asarray(W.active),
+            )
+        with _span(obs, "gossip.window", impl="segments", round=r):
+            out = self._window(state, batches, *args, key, *extra)
+        self._obs_after_window(obs)
+        return out
+
     def run_round(self, state, batches, W, key):
         obs = self.obs
         r = int(state.round)
-        W = jnp.asarray(W)
+        if self.consensus_impl == "segments":
+            return self._segments_round(state, batches, W, key, obs, r)
+        spec_win = None
+        if isinstance(W, SparseWindow):
+            # dense view of an edge-native window (below the guard only) —
+            # the segments-vs-masked equivalence ladder runs on this
+            spec_win, W = W, W.w_eff
         ppermute = (self.consensus_impl == "ppermute"
                     and self.consensus_mode == "gaussian")
         with _span(obs, "gossip.window_build", round=r):
             extra = self._fault_arrays(r) if self._guarded else ()
             win = (self._window_for(state, W)
                    if (self.hist_slots or ppermute) else None)
+            active = (np.asarray(spec_win.active) if spec_win is not None
+                      else self._host_active(r, W, win))
+        W = jnp.asarray(W)
+        act = jnp.asarray(active)
         if self.hist_slots:
             # ONE fused jitted call: local phase + event-gather consensus
             # (dispatch-side wall clock; Session.round owns the synced span)
             with _span(obs, "gossip.window", impl="delayed", round=r):
                 out = self._window(
-                    state, batches, W, key,
+                    state, batches, W, act, key,
                     jnp.asarray(win.edges), jnp.asarray(win.weights),
                     jnp.asarray(win.delays), *extra,
                 )
@@ -570,7 +773,9 @@ class GossipEngine:
             return out
         if ppermute:
             with _span(obs, "gossip.local_phase", impl="ppermute", round=r):
-                state, losses = self._window(state, batches, W, key, *extra)
+                state, losses = self._window(
+                    state, batches, W, act, key, *extra
+                )
             with _span(obs, "gossip.consensus", impl="ppermute", round=r):
                 state, losses = self._ppermute_consensus(
                     state, losses, W, win, extra
@@ -579,7 +784,7 @@ class GossipEngine:
             return state, losses
         # dense masked path: local phase + consensus fused in one call
         with _span(obs, "gossip.window", impl="masked", round=r):
-            out = self._window(state, batches, W, key, *extra)
+            out = self._window(state, batches, W, act, key, *extra)
         self._obs_after_window(obs)
         return out
 

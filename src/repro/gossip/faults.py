@@ -204,3 +204,29 @@ def build_faults(doc: Optional[Dict[str, Any]],
     if doc is None:
         return None
     return FaultModel(FaultSpec.from_doc(dict(doc)), n_agents)
+
+
+def edge_keep_mask(
+    model: FaultModel, r: int, dst: np.ndarray, src: np.ndarray,
+    lags: Optional[np.ndarray] = None,
+) -> np.ndarray:
+    """[E] bool: which fired edges survive the crash filter for window ``r``.
+
+    The vectorized edge-list form of ``GossipClock._filter_crashed`` (the
+    only form usable at population scale — no per-event Python loop): an
+    edge survives iff its dst is up at DELIVERY time ``r`` and its src was
+    up at FIRE time ``r - lag`` (``lags=None`` = instant delivery, fire
+    time == delivery time).  Fancy-indexing the memoized up/down chain keeps
+    the whole filter O(fired) host work.
+    """
+    dst = np.asarray(dst)
+    src = np.asarray(src)
+    up_now = model.up(r)
+    keep = up_now[dst]
+    if lags is None:
+        return keep & up_now[src]
+    lags = np.asarray(lags)
+    for lag in np.unique(lags):
+        sel = lags == lag
+        keep[sel] &= model.up(r - int(lag))[src[sel]]
+    return keep

@@ -169,6 +169,7 @@ def gossip_window_roofline(
     wire_dtype: str = "f32",
     history_dtype: str = "f32",
     n_event_edges: int | None = None,
+    n_padded_edges: int | None = None,
 ) -> dict[str, Any]:
     """Analytic HBM traffic of ONE gossip event window (repro.gossip), for
     the active-edge masked consensus (``consensus_fused_masked_sparse``).
@@ -224,6 +225,15 @@ def gossip_window_roofline(
     merging rows — ``window_segments`` is a pure function of
     (E_fired, n_merging, P), with NO N term at all: the roofline the
     N = 10^4+ sparse sweep in BENCH_gossip.json tracks.
+
+    ``n_padded_edges`` additionally reports the STATIC execution cost the
+    jitted engine actually pays: the ``SparseWindow`` rides fixed-shape
+    ``[E_max]`` buffers (one trace for the whole run) plus N self-loop
+    slots, and a zero-weight pad slot still gathers its source row even
+    though it contributes nothing — ``window_segments_padded`` is the
+    per-window ceiling ``2 x (E_max + N) x row + 2 x n_merging x row``,
+    what a capacity planner should budget (and what shrinking the clock's
+    ``e_max`` buys).
     """
     if n_merging is None:
         n_merging = n_participating
@@ -296,6 +306,28 @@ def gossip_window_roofline(
             bytes_segments / bytes_dense if bytes_dense else 0.0
         )
         out["roofline_seconds"]["window_segments"] = bytes_segments / HBM_BW
+    if n_padded_edges is not None:
+        if n_event_edges is not None and n_padded_edges < n_event_edges:
+            raise ValueError(
+                f"n_padded_edges={n_padded_edges} is below the fired count "
+                f"n_event_edges={n_event_edges} (pads can only add slots)"
+            )
+        if n_padded_edges < 0:
+            raise ValueError("n_padded_edges must be >= 0")
+        # static [E_max] buffers + N self-loop slots: pad slots gather their
+        # source row like any edge (zero weight, zero contribution)
+        bytes_padded = (
+            2.0 * (n_padded_edges + n_agents) * row_bytes
+            + 2.0 * n_merging * row_bytes
+        )
+        out["n_padded_edges"] = int(n_padded_edges)
+        out["hbm_bytes"]["window_segments_padded"] = bytes_padded
+        out["hbm_passes"]["window_segments_padded"] = (
+            bytes_padded / bytes_dense if bytes_dense else 0.0
+        )
+        out["roofline_seconds"]["window_segments_padded"] = (
+            bytes_padded / HBM_BW
+        )
     if delay_depth > 0:
         out["delay_depth"] = delay_depth
         out["history_dtype"] = history_dtype

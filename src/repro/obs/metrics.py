@@ -45,6 +45,19 @@ def sanitize_name(name: str) -> str:
     return out
 
 
+def escape_label_value(value: str) -> str:
+    """Escape a label VALUE per the Prometheus text exposition format:
+    backslash, double-quote and newline must be escaped inside the quoted
+    value (``\\`` -> ``\\\\``, ``"`` -> ``\\"``, LF -> ``\\n``) — an
+    ingested telemetry string containing any of them would otherwise emit
+    unparseable exposition text.  Names go through ``sanitize_name``;
+    values are free-form and only need this quoting."""
+    return (str(value)
+            .replace("\\", "\\\\")
+            .replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
 # Default histogram buckets: wall-clock microseconds from 1us to ~1e7us
 # (10s), decade-spaced with a 1-2-5 ladder — wide enough for both a
 # disabled-span probe (~ns) and a cold jit compile (~s).
@@ -313,7 +326,10 @@ class MetricsRegistry:
             buf.write(f"# TYPE {pname} {inst.kind}\n")
             for key in inst.labelsets():
                 s = inst.series[key]
-                lbl = ",".join(f'{sanitize_name(k)}="{v}"' for k, v in key)
+                lbl = ",".join(
+                    f'{sanitize_name(k)}="{escape_label_value(v)}"'
+                    for k, v in key
+                )
 
                 def wrap(extra: str = "") -> str:
                     parts = ",".join(x for x in (lbl, extra) if x)
@@ -335,7 +351,10 @@ class MetricsRegistry:
         for name in sorted(self._info):
             pname = sanitize_name(name)
             buf.write(f"# TYPE {pname}_info gauge\n")
-            buf.write(f'{pname}_info{{value="{self._info[name]}"}} 1\n')
+            buf.write(
+                f'{pname}_info{{value='
+                f'"{escape_label_value(self._info[name])}"}} 1\n'
+            )
         if self.sink is not None:
             self.sink.flush()
         return buf.getvalue()

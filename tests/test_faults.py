@@ -638,3 +638,28 @@ def test_gossip_engine_ppermute_quarantine_session():
     assert tel["faults"]["quarantined"]["total"] >= 0
     print("OK")
     """))
+
+
+def test_edge_keep_mask_matches_per_event_loop():
+    """The vectorized edge-list crash filter must agree event-by-event with
+    the obvious per-event loop — instant delivery AND lagged fire times."""
+    from repro.gossip.faults import edge_keep_mask
+
+    model = FaultModel(
+        FaultSpec(crash_rate=0.4, recover_rate=0.5, seed=11), 10)
+    rng = np.random.default_rng(5)
+    for r in range(3, 8):
+        e = 40
+        dst = rng.integers(0, 10, e)
+        src = rng.integers(0, 10, e)
+        lags = rng.integers(0, 3, e)
+        got_instant = edge_keep_mask(model, r, dst, src)
+        got_lagged = edge_keep_mask(model, r, dst, src, lags=lags)
+        up = {k: model.up(k) for k in range(r - 2, r + 1)}
+        for i in range(e):
+            assert got_instant[i] == (up[r][dst[i]] and up[r][src[i]])
+            assert got_lagged[i] == (
+                up[r][dst[i]] and up[r - int(lags[i])][src[i]]
+            )
+        # with crash_rate 0.4 over 40 edges some must drop, some survive
+        assert got_lagged.any() and not got_lagged.all()

@@ -1182,3 +1182,97 @@ def test_ppermute_flat_routes_through_single_shard_map(monkeypatch):
     step(state, batch, jax.random.key(2))
     assert calls["flat"] and calls["axis"] == "pod"
     assert calls["W"] is W
+
+
+# ---------------------------------------------------------------------------
+# activity-mask exactness, f64 schedule identity, window contracts
+# ---------------------------------------------------------------------------
+
+
+def test_active_mask_survives_subresolution_weight():
+    """Headline mask regression: a fired in-edge with weight 1e-8 is below
+    f32 resolution at the diagonal (1 - 1e-8 rounds back to exactly 1.0 in
+    float32), so deriving activity as diag(W_f32) < 1 silently drops the
+    merge — and under local_policy="active" the agent does not even train.
+    The engine must thread the clock's host-exact mask instead."""
+    eps = 1e-8
+    W = np.array([[1.0 - eps, eps], [0.4, 0.6]])
+    # the bug's exact mechanism, pinned: the f32 diagonal is indistinguishable
+    # from an idle row, only the host-side f64 mask can see the fired edge
+    assert np.float32(W[0, 0]) == np.float32(1.0)
+    spec = _gossip_spec(
+        TopologySpec.gossip(
+            "explicit", w=W,
+            clock={"kind": "trace", "trace": [[[0, 1]], [[1, 0]]],
+                   "local_policy": "active"},
+        ),
+        n_agents=2, n_rounds=1,
+    )
+    s = build_session(spec)
+    rec = s.round()
+    # agent 0 (the sub-resolution merge target) trained AND merged; agent 1
+    # (no incoming event) slept
+    assert rec["n_trained"] == 1
+    np.testing.assert_array_equal(np.asarray(s.state.n_merges), [1, 0])
+    np.testing.assert_array_equal(np.asarray(s.state.last_merge), [0, -1])
+    u = spec.data.local_updates
+    np.testing.assert_array_equal(np.asarray(s.state.step), [u, 0])
+
+
+def test_window_for_rejects_f32_colliding_schedule():
+    """_window_for must compare the Session's W against the clock stream in
+    float64: a foreign schedule differing by less than one f32 ulp collides
+    with the stream at float32 and was previously false-accepted — then
+    silently merged with the STREAM's event structure instead of the
+    caller's matrix."""
+    s = build_session(_delayed_spec(_delayed_clock_doc(1)))
+    w0 = np.asarray(s.spec.topology.w_schedule()(0), np.float64)
+    w2 = w0.copy()
+    w2[0, 0] -= 1e-9  # ~2^-30: far below the f32 ulp at 1.0 (2^-24)
+    assert not np.array_equal(w2, w0)
+    # the collision this test exists for: bitwise equal after the f32 cast
+    assert np.array_equal(w2.astype(np.float32), w0.astype(np.float32))
+    batches = s.data.sampler(jax.random.key(1), 0)
+    with pytest.raises(ValueError, match="spec clock"):
+        s.engine.run_round(s.state, batches, w2, jax.random.key(2))
+
+
+def test_window_from_events_duplicate_collapse_first_wins():
+    """Duplicate (dst, src) events within a window collapse to ONE merge,
+    and the FIRST occurrence wins — including its delivery delay."""
+    W = bidirectional_ring_w(4)
+    win = window_from_events(
+        W, [(0, 1), (0, 3), (0, 1)], e_max=4, delays=[2, 0, 5]
+    )
+    assert win.n_events == 2
+    assert win.edges[:2].tolist() == [[0, 1], [0, 3]]
+    # the duplicate's lag-5 redelivery is dropped with it
+    assert win.delays[:2].tolist() == [2, 0]
+    # the collapsed edge carries the base weight ONCE
+    assert win.w_eff[0, 1] == W[0, 1]
+    np.testing.assert_allclose(win.w_eff.sum(axis=1), 1.0, atol=1e-12)
+    # pad slots beyond the collapsed count stay zero
+    assert (win.weights[2:] == 0.0).all()
+
+
+def test_thinned_poisson_e_max_boundary():
+    """fired == e_max fits the static window shape; e_max + 1 must raise
+    (never silently truncate the realization)."""
+    from repro.gossip.clocks import thinned_poisson_indices
+
+    class _StubRng:
+        """Deterministic stand-in: k distinct uniform picks."""
+
+        def __init__(self, k):
+            self._k = k
+
+        def poisson(self, mu):
+            return self._k
+
+        def integers(self, lo, hi, size):
+            return np.arange(size, dtype=np.int64) % (hi - lo)
+
+    fired = thinned_poisson_indices(_StubRng(5), 100, 0.05, e_max=5)
+    assert fired.size == 5  # exactly at the cap: passes
+    with pytest.raises(ValueError, match="e_max=5"):
+        thinned_poisson_indices(_StubRng(6), 100, 0.05, e_max=5)

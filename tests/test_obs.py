@@ -22,7 +22,12 @@ import pytest
 
 from repro.core.numerics import softplus_inv
 from repro.obs.convergence import ConvergenceTracker, network_stats
-from repro.obs.metrics import JsonlSink, MetricsRegistry, sanitize_name
+from repro.obs.metrics import (
+    JsonlSink,
+    MetricsRegistry,
+    escape_label_value,
+    sanitize_name,
+)
 from repro.obs.roofline import (
     attainment,
     consensus_attainment,
@@ -108,6 +113,29 @@ def test_prometheus_export_deterministic_and_sane():
 def test_sanitize_name():
     assert sanitize_name("gossip.window-time") == "gossip_window_time"
     assert sanitize_name("0bad") == "_0bad"
+
+
+def test_escape_label_value():
+    assert escape_label_value('plain') == 'plain'
+    assert escape_label_value('a"b') == 'a\\"b'
+    assert escape_label_value('a\\b') == 'a\\\\b'
+    assert escape_label_value('a\nb') == 'a\\nb'
+    # backslash first, so the escapes it INTRODUCES are not re-escaped
+    assert escape_label_value('\\"') == '\\\\\\"'
+
+
+def test_prometheus_label_values_escaped():
+    reg = MetricsRegistry()
+    reg.counter("req").inc(3, path='say "hi"\n@C:\\tmp')
+    reg.ingest("build", {"flags": 'x="1"\\y'})
+    text = reg.to_prometheus()
+    # every emitted line stays one line: raw newlines never leak into the
+    # exposition body
+    assert all(line.count('"') % 2 == 0 or "\\" in line
+               for line in text.splitlines())
+    assert 'req_total{path="say \\"hi\\"\\n@C:\\\\tmp"} 3\n' in text
+    assert 'build_flags_info{value="x=\\"1\\"\\\\y"} 1\n' in text
+    assert "\nsay" not in text  # the label newline was escaped, not emitted
 
 
 def test_jsonl_sink_records_events(tmp_path):

@@ -15,6 +15,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api import (
+    DataSpec,
+    ExperimentSpec,
+    InferenceSpec,
+    RunSpec,
+    build_session,
+)
 from repro.api.spec import SPARSE_DENSE_GUARD, TopologySpec
 from repro.core.flat import (
     FlatLayout,
@@ -45,7 +52,15 @@ from repro.core.graphs import (
     torus_w,
     watts_strogatz_sparse,
 )
-from repro.gossip.clocks import PoissonClock, thinned_poisson_indices
+from repro.gossip.clocks import (
+    PoissonClock,
+    SparseAllEdgesClock,
+    SparseFailureInjectedClock,
+    SparsePoissonClock,
+    SparseWindow,
+    build_sparse_clock,
+    thinned_poisson_indices,
+)
 
 
 def _posts(n: int, p: int, seed: int = 0) -> FlatPosterior:
@@ -354,3 +369,211 @@ def test_sparse_spec_checkpoint_embeddable():
 def test_sparse_spec_unknown_generator():
     with pytest.raises(ValueError, match="generator"):
         TopologySpec.sparse("kleinberg", n=10).sparse_graph()
+
+
+# -- edge-native sparse clocks (SparseWindow, no [N, N] anywhere) ------------
+
+
+def _win_equal(a: SparseWindow, b: SparseWindow) -> bool:
+    return (a.index == b.index and a.n_events == b.n_events
+            and np.array_equal(a.dst, b.dst)
+            and np.array_equal(a.src, b.src)
+            and np.array_equal(a.weights, b.weights)
+            and np.array_equal(a.self_weight, b.self_weight)
+            and np.array_equal(a.active, b.active))
+
+
+def test_sparse_clock_window_pure_function_of_seed_round():
+    g = watts_strogatz_sparse(30, k=4, beta=0.3, seed=2)
+    a = SparsePoissonClock(g, rate=0.7, seed=5)
+    b = SparsePoissonClock(g, rate=0.7, seed=5)
+    # out-of-order access defeats the one-slot memo: windows must still be
+    # bitwise functions of (seed, round), never of call history
+    for r in (0, 3, 1, 3, 0):
+        assert _win_equal(a.window(r), b.window(r))
+    assert not _win_equal(a.window(0), a.window(1))
+    assert not _win_equal(
+        a.window(2), SparsePoissonClock(g, rate=0.7, seed=6).window(2)
+    )
+
+
+def test_sparse_all_edges_window_self_weight_is_base_diagonal_bitwise():
+    g = watts_strogatz_sparse(20, k=4, beta=0.2, seed=1)
+    c = SparseAllEdgesClock(g)
+    c.validate()
+    win = c.window(0)
+    W = g.to_dense()
+    # the sparse ladder anchor: every non-self edge fires, so the conserve
+    # self-weights equal the base diagonal EXACTLY and everyone is active
+    assert win.n_events == c.n_edges
+    assert np.array_equal(win.self_weight, np.diagonal(W))
+    assert win.active.all() and win.max_lag == 0
+    assert np.array_equal(win.w_eff != 0.0, W != 0.0)
+    np.testing.assert_allclose(win.w_eff, W, rtol=0, atol=1e-7)
+    # rows conserve: w_eff stays row-stochastic up to the f32 cast of the
+    # off-diagonal wire weights (the f64 self-weights are exact)
+    np.testing.assert_allclose(win.w_eff.sum(1), 1.0, rtol=0, atol=1e-6)
+
+
+def test_sparse_failure_injected_drops_fired_edges():
+    g = watts_strogatz_sparse(30, k=4, beta=0.2, seed=3)
+    mk_inner = lambda: SparsePoissonClock(g, rate=2.0, seed=4)
+    dropped = SparseFailureInjectedClock(mk_inner(), drop_rate=0.5, seed=9)
+    again = SparseFailureInjectedClock(mk_inner(), drop_rate=0.5, seed=9)
+    inner = mk_inner()
+    strictly_fewer = False
+    for r in range(6):
+        wi, wd = inner.window(r), dropped.window(r)
+        surv = set(zip(wd.dst[:wd.n_events], wd.src[:wd.n_events]))
+        full = set(zip(wi.dst[:wi.n_events], wi.src[:wi.n_events]))
+        assert surv <= full  # drops only remove events, never invent them
+        strictly_fewer |= wd.n_events < wi.n_events
+        assert _win_equal(wd, again.window(r))  # salted stream: bitwise
+    assert strictly_fewer
+    with pytest.raises(ValueError, match="drop_rate"):
+        SparseFailureInjectedClock(mk_inner(), drop_rate=1.0)
+
+
+def test_sparse_poisson_e_max_cap_and_overflow():
+    g = bidirectional_ring_sparse(8)
+    base = SparsePoissonClock(g, rate=1.0)
+    assert base.e_max == base.n_edges  # default cap: every non-self edge
+    small = SparsePoissonClock(g, rate=0.2, seed=3, e_max=4)
+    for r in range(5):
+        win = small.window(r)
+        assert win.e_max == 4 and win.n_events <= 4
+    hot = SparsePoissonClock(g, rate=60.0, seed=3, e_max=2)
+    with pytest.raises(ValueError, match="e_max"):
+        for r in range(20):
+            hot.window(r)
+    with pytest.raises(ValueError, match="e_max"):
+        SparsePoissonClock(g, rate=1.0, e_max=0)
+    with pytest.raises(ValueError, match="e_max"):
+        SparsePoissonClock(g, rate=1.0, e_max=base.n_edges + 1)
+
+
+def test_sparse_clock_faults_filter_crashed_agents():
+    g = watts_strogatz_sparse(24, k=4, beta=0.2, seed=5)
+    doc = {"kind": "poisson", "rate": 3.0, "seed": 2,
+           "faults": {"crash_rate": 0.3, "recover_rate": 0.5, "seed": 7}}
+    c = build_sparse_clock(doc, g)
+    saw_crash = False
+    for r in range(8):
+        win = c.window(r)
+        down = c.crashed(r)
+        saw_crash |= bool(down.any())
+        # a fired edge never touches a crashed endpoint, and the conserve
+        # rule keeps crashed rows idle (active False, self-weight 1.0)
+        assert not down[win.dst[:win.n_events]].any()
+        assert not down[win.src[:win.n_events]].any()
+        assert not win.active[down].any()
+        np.testing.assert_array_equal(win.self_weight[down], 1.0)
+    assert saw_crash
+    with pytest.raises(ValueError, match="OUTERMOST"):
+        build_sparse_clock(
+            {"kind": "failure_injected", "drop_rate": 0.2,
+             "inner": {"kind": "poisson", "faults": {"crash_rate": 0.1}}}, g)
+    with pytest.raises(ValueError, match="unknown sparse clock"):
+        build_sparse_clock({"kind": "metronome"}, g)
+
+
+def test_sparse_window_w_eff_refuses_above_guard():
+    n = SPARSE_DENSE_GUARD + 1
+    win = SparseWindow(
+        index=0, dst=np.zeros(1, np.int32), src=np.zeros(1, np.int32),
+        weights=np.zeros(1, np.float32), self_weight=np.ones(n),
+        active=np.zeros(n, bool), n_agents=n, n_events=0,
+    )
+    with pytest.raises(ValueError, match="segments"):
+        win.w_eff
+
+
+# -- segments engine vs the dense masked engine (below the guard) ------------
+
+
+def _clocked_spec(n, impl, wire="f32", n_rounds=2, **clock_extra):
+    topo = TopologySpec.sparse(
+        "watts_strogatz", n=n, k=4, beta=0.2, seed=1,
+        clock={"kind": "poisson", "rate": 1.0, "seed": 3, **clock_extra},
+    )
+    return ExperimentSpec(
+        topology=topo,
+        data=DataSpec(
+            dataset_params=dict(n_classes=3, dim=8, n_train_per_class=30),
+            partition="iid", partition_params=dict(n_agents=n),
+            batch_size=4, local_updates=2,
+        ),
+        inference=InferenceSpec(
+            hidden=8, depth=1, lr=1e-2,
+            consensus_impl=impl, wire_dtype=wire,
+        ),
+        run=RunSpec(n_rounds=n_rounds, seed=0),
+    )
+
+
+@pytest.mark.parametrize("wire", ["f32", "bf16", "f16"])
+def test_segments_engine_matches_masked_engine_per_wire(wire):
+    """Below SPARSE_DENSE_GUARD the same SparseWindow executes two ways:
+    edge-native segments, or densified (w_eff) through the masked engine.
+    Both cast payloads to the wire dtype BEFORE reduction, so they sum the
+    same quantized values — only edge-order vs column-order differs, which
+    is fp32 reduction tolerance, not wire tolerance."""
+    s_seg = build_session(_clocked_spec(16, "segments", wire=wire))
+    s_msk = build_session(_clocked_spec(16, "masked", wire=wire))
+    s_seg.run()
+    s_msk.run()
+    d_mean = np.max(np.abs(np.asarray(s_seg.posterior().mean)
+                           - np.asarray(s_msk.posterior().mean)))
+    d_rho = np.max(np.abs(np.asarray(s_seg.posterior().rho)
+                          - np.asarray(s_msk.posterior().rho)))
+    assert d_mean <= 1e-4 and d_rho <= 1e-4
+    assert np.array_equal(np.asarray(s_seg.state.n_merges),
+                          np.asarray(s_msk.state.n_merges))
+
+
+def test_sparse_clock_spec_auto_selects_segments():
+    spec = _clocked_spec(12, "auto", n_rounds=1)
+    spec.validate()
+    s = build_session(spec)
+    assert s.engine.consensus_impl == "segments"
+    s.run()
+    assert int(s.state.round) == 1
+
+
+def test_sparse_spec_clock_validation_and_errors():
+    spec = _clocked_spec(12, "segments")
+    dataclasses.replace(spec, run=RunSpec(n_rounds=2, seed=0,
+                                          engine="gossip")).validate()
+    # segments needs edge-native windows: dense gossip clocks emit [N, N]
+    dense = TopologySpec.gossip(
+        "bidirectional_ring", base_params={"n": 8},
+        clock={"kind": "poisson", "rate": 1.0})
+    with pytest.raises(ValueError, match="edge-native"):
+        dataclasses.replace(spec, topology=dense).validate()
+    with pytest.raises(ValueError, match="mean_only"):
+        dataclasses.replace(
+            spec, inference=dataclasses.replace(
+                spec.inference, consensus="mean_only", wire_dtype="f32"),
+        ).validate()
+    # a clockless sparse topology is synchronous: no window execution to pick
+    clockless = TopologySpec.sparse("watts_strogatz", n=12, k=4, beta=0.2,
+                                    seed=1)
+    with pytest.raises(ValueError, match="consensus_impl"):
+        dataclasses.replace(spec, topology=clockless).validate()
+    with pytest.raises(ValueError, match="no clock"):
+        clockless.gossip_clock()
+    # ppermute shards dense EventWindows; sparse clocks have none
+    with pytest.raises(ValueError, match="EventWindows"):
+        build_session(_clocked_spec(12, "ppermute"))
+
+
+def test_sparse_clock_w_schedule_emits_sparse_windows():
+    spec = _clocked_spec(10, "segments")
+    sched = spec.topology.w_schedule()
+    for r in (0, 2):
+        win = sched(r)
+        assert isinstance(win, SparseWindow) and win.index == r
+        assert win.n_agents == 10
+    clock = spec.topology.gossip_clock()
+    assert clock is spec.topology.gossip_clock()  # memoized: one build
+    assert _win_equal(sched(1), clock.window(1))
